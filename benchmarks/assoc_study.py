@@ -1,0 +1,33 @@
+"""Beyond-paper case study: cache geometry exploration (associativity and
+capacity) for embedding working sets — the "architecture exploration"
+use-case the paper positions EONSim for (next-gen NPUs with cache-mode
+on-chip memory, MTIA-style).
+"""
+from __future__ import annotations
+
+from typing import Dict, List
+
+import numpy as np
+
+from repro.core.memory.cache import CacheGeometry, simulate_cache
+from repro.core.trace import REUSE_LEVELS, generate_zipf_trace
+
+
+def run() -> List[Dict]:
+    rows = []
+    # vector-granular stream: 400k accesses over 250k vectors, paper-mid reuse
+    tr = generate_zipf_trace(400_000, 250_000, REUSE_LEVELS["reuse_mid"], seed=2)
+
+    cap = 8 * 1024 * 1024
+    for ways in (1, 2, 4, 8, 16, 32):
+        g = CacheGeometry.from_capacity(cap, 512, ways)
+        r = simulate_cache(tr, g, "lru")
+        rows.append({"sweep": "ways", "ways": ways, "capacity_mb": cap >> 20,
+                     "hit_rate": r.hit_rate})
+
+    for cap_mb in (1, 2, 4, 8, 16, 32):
+        g = CacheGeometry.from_capacity(cap_mb << 20, 512, 16)
+        r = simulate_cache(tr, g, "lru")
+        rows.append({"sweep": "capacity", "ways": 16, "capacity_mb": cap_mb,
+                     "hit_rate": r.hit_rate})
+    return rows

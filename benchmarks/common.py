@@ -1,0 +1,26 @@
+"""Shared benchmark plumbing."""
+from __future__ import annotations
+
+import json
+import os
+import time
+from typing import Callable, Dict, List
+
+RESULTS_DIR = os.path.join(os.path.dirname(__file__), "..", "results", "bench")
+
+
+def save_rows(name: str, rows: List[Dict]) -> str:
+    os.makedirs(RESULTS_DIR, exist_ok=True)
+    path = os.path.join(RESULTS_DIR, f"{name}.json")
+    with open(path, "w") as f:
+        json.dump(rows, f, indent=2)
+    return path
+
+
+def timed(fn: Callable, *args, repeat: int = 1, **kw):
+    t0 = time.time()
+    out = None
+    for _ in range(repeat):
+        out = fn(*args, **kw)
+    dt = (time.time() - t0) / repeat
+    return out, dt * 1e6  # us

@@ -1,0 +1,201 @@
+"""Roofline analysis from the dry-run artifacts (brief deliverable (g)).
+
+Reads results/dryrun/<arch>__<shape>__<mesh>.json (produced by
+``python -m repro.launch.dryrun --all``) and derives per cell:
+
+    compute term    = HLO_FLOPs_per_device / peak_FLOP/s_per_chip
+    memory term     = HLO_bytes_per_device / HBM_bw_per_chip
+    collective term = collective_bytes_per_device / ICI_link_bw
+
+(per-device numerators == the brief's global/chips formulation). HLO terms
+come from the trip-count-aware static analyzer (launch/hlo_analysis.py);
+XLA's own cost_analysis undercounts lax.scan bodies and is reported alongside
+for reference.
+
+MODEL_FLOPS = 6·N_active·tokens (train) or 2·N_active·tokens (inference);
+the useful-compute ratio MODEL_FLOPS / HLO_FLOPs flags remat/dispatch waste.
+"""
+from __future__ import annotations
+
+import glob
+import json
+import os
+from typing import Dict, List, Optional
+
+from repro.core.hardware import V5E_HBM_BW, V5E_ICI_BW, V5E_PEAK_BF16_FLOPS
+from repro.models import SHAPES_BY_NAME
+
+DRYRUN_DIR = os.path.join(os.path.dirname(__file__), "..", "results", "dryrun")
+
+
+def analytic_hbm_bytes(rec: Dict) -> float:
+    """Per-device HBM traffic model for one step of this cell.
+
+    Derived from the compiled cell's structure (sharding layout, microbatch
+    count, remat policy) with an explicit traffic model — op-granular byte
+    counts from the weakly-fused CPU module systematically overcount what a
+    fused TPU module moves through HBM (EXPERIMENTS.md §Roofline method):
+
+      * weights: per microbatch, the FSDP all-gather materializes the TP
+        shard (2N/model_deg bytes): 1 write + reads for fwd, dgrad, wgrad,
+        and the remat re-forward (train) => 5x; inference: 1 write + 1 read;
+      * activations (train): ~6x L x tokens_dev x d_model x 2B — layer-
+        boundary saves (fwd write, bwd read) + remat recompute traffic;
+      * optimizer: params + moments read/write once per step (int8 moments
+        for the quantized archs);
+      * KV cache: decode reads the whole per-device cache per step, prefill
+        writes it once;
+      * logits/CE: chunked, vocab-sharded (3 passes with recompute).
+    """
+    from repro.models import get_config, param_count as _pc
+    from repro.models.registry import normalize
+
+    cfg = get_config(rec["arch"])
+    shape = SHAPES_BY_NAME[rec["shape"]]
+    chips = rec["chips"]
+    mesh_shape = rec["mesh_shape"]
+    model_deg = mesh_shape[-1]
+    dp = chips // model_deg
+    N = rec["params"]
+    B, S = shape.global_batch, shape.seq_len
+    d = cfg.d_model
+    L = cfg.n_layers
+    vocab_dev = cfg.vocab / model_deg if cfg.vocab % model_deg == 0 else cfg.vocab
+
+    w_dev = 2.0 * N / model_deg
+    quant = N > 2e11
+
+    def kv_bytes_total() -> float:
+        if cfg.family == "ssm":
+            ssm = cfg.ssm
+            H = ssm.num_heads(d)
+            return B * (H * ssm.head_dim * ssm.state_dim * 4 + 3 * (2 * d + 2 * ssm.state_dim) * 2) * L
+        if cfg.family == "hybrid":
+            n_apps = L // cfg.hybrid.attn_every
+            ssm = cfg.ssm
+            H = ssm.num_heads(d)
+            ssm_b = B * L * H * ssm.head_dim * ssm.state_dim * 4
+            kv_b = 2 * n_apps * B * cfg.n_kv_heads * S * cfg.attn_head_dim * 2
+            return ssm_b + kv_b
+        if cfg.mla is not None:
+            return B * S * (cfg.mla.kv_lora_rank + cfg.mla.qk_rope_head_dim) * 2 * L
+        return 2 * L * B * cfg.n_kv_heads * S * cfg.attn_head_dim * 2
+
+    if shape.kind == "train":
+        from repro.launch.dryrun import pick_microbatches
+
+        mb = pick_microbatches(B, S, dp)
+        tokens_dev = B * S / dp
+        weights = 5.0 * w_dev * mb
+        acts = 6.0 * L * tokens_dev * d * 2.0
+        mom = 2 if quant else 8
+        optim = (N / chips) * (2 * 2 + mom)      # param r/w (bf16) + moments
+        logits = 3.0 * tokens_dev * vocab_dev * 2.0
+        return weights + acts + optim + logits
+    if shape.kind == "prefill":
+        tokens_dev = B * S / dp
+        return 3.0 * w_dev + 2.0 * L * tokens_dev * d * 2.0 + kv_bytes_total() / chips
+    # decode
+    return 2.0 * w_dev + kv_bytes_total() / chips + (B / dp) * vocab_dev * 2.0
+
+_MITIGATION = {
+    "compute": "raise MXU efficiency: bigger microbatches, fewer remat "
+               "recomputes, fuse small projections",
+    "memory": "cut HBM traffic: better fusion/layout, keep KV/activations "
+              "bf16, shard the dominant resident tensor further",
+    "collective": "reshard to shrink the dominant collective or overlap it "
+                  "(ring collective-matmul, all-gather->reduce-scatter swap)",
+}
+
+
+def model_flops_per_device(rec: Dict) -> float:
+    shape = SHAPES_BY_NAME[rec["shape"]]
+    n_active = rec["active_params"]
+    chips = rec["chips"]
+    if shape.kind == "train":
+        tokens = shape.global_batch * shape.seq_len
+        return 6.0 * n_active * tokens / chips
+    if shape.kind == "prefill":
+        tokens = shape.global_batch * shape.seq_len
+        return 2.0 * n_active * tokens / chips
+    return 2.0 * n_active * shape.global_batch / chips  # decode: 1 new token
+
+
+def analyze_record(rec: Dict) -> Optional[Dict]:
+    if rec.get("status") != "ok" or "hlo" not in rec:
+        return None
+    h = rec["hlo"]
+    f = h["flops_per_device"]
+    coll = sum(h["collective_bytes_per_device"].values())
+    # Memory term: XLA's bytes-accessed (post-fusion, so on-chip elementwise
+    # chains don't count as HBM traffic) corrected for the scan-body
+    # undercount by the flops ratio (hlo_flops counts trips, xla_flops does
+    # not; loop bodies dominate both). The analyzer's op-level byte sum is
+    # kept as an upper bound in `bytes_upper_bound`.
+    xla = rec.get("xla_cost", {})
+    xla_b = xla.get("bytes_accessed") or 0
+    xla_f = xla.get("flops") or 0
+    b_upper = xla_b * max(1.0, f / xla_f) if (xla_b > 0 and xla_f > 0) else h["bytes_per_device"]
+    b = analytic_hbm_bytes(rec)
+    t_comp = f / V5E_PEAK_BF16_FLOPS
+    t_mem = b / V5E_HBM_BW
+    t_coll = coll / V5E_ICI_BW
+    terms = {"compute": t_comp, "memory": t_mem, "collective": t_coll}
+    bottleneck = max(terms, key=terms.get)
+    mf = model_flops_per_device(rec)
+    step = max(terms.values())
+    return {
+        "arch": rec["arch"], "shape": rec["shape"], "mesh": rec["mesh"],
+        "chips": rec["chips"],
+        "t_compute_s": t_comp, "t_memory_s": t_mem, "t_collective_s": t_coll,
+        "bottleneck": bottleneck,
+        "model_flops_per_dev": mf,
+        "hlo_flops_per_dev": f,
+        "hbm_bytes_per_dev": b,
+        "t_memory_xla_corrected_s": b_upper / V5E_HBM_BW,
+        "bytes_upper_bound": h["bytes_per_device"],
+        "useful_ratio": mf / f if f else 0.0,
+        "mfu_projected": (mf / V5E_PEAK_BF16_FLOPS) / step if step else 0.0,
+        "collectives": h["collective_bytes_per_device"],
+        "mitigation": _MITIGATION[bottleneck],
+        "memory_analysis": rec.get("memory"),
+        "xla_flops_per_dev": rec.get("xla_cost", {}).get("flops"),
+    }
+
+
+def load_all(mesh: str = "pod") -> List[Dict]:
+    rows = []
+    for path in sorted(glob.glob(os.path.join(DRYRUN_DIR, f"*__{mesh}.json"))):
+        with open(path) as f:
+            rec = json.load(f)
+        r = analyze_record(rec)
+        if r:
+            rows.append(r)
+    return rows
+
+
+def run() -> List[Dict]:
+    rows = load_all("pod")
+    if not rows:
+        return [{"note": "no dryrun artifacts found — run "
+                         "`python -m repro.launch.dryrun --all` first"}]
+    return rows
+
+
+def markdown_table(rows: List[Dict]) -> str:
+    hdr = ("| arch | shape | t_comp (ms) | t_mem (ms) | t_coll (ms) | "
+           "bottleneck | useful | MFU proj |\n|---|---|---|---|---|---|---|---|")
+    lines = [hdr]
+    for r in rows:
+        lines.append(
+            f"| {r['arch']} | {r['shape']} | {r['t_compute_s']*1e3:.2f} | "
+            f"{r['t_memory_s']*1e3:.2f} | {r['t_collective_s']*1e3:.2f} | "
+            f"{r['bottleneck']} | {r['useful_ratio']:.2f} | "
+            f"{r['mfu_projected']*100:.1f}% |"
+        )
+    return "\n".join(lines)
+
+
+if __name__ == "__main__":
+    rows = run()
+    print(markdown_table(rows))

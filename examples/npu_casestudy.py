@@ -1,0 +1,26 @@
+"""The paper's Fig. 4 case study as a script: on-chip memory management
+policies across reuse levels, plus the beyond-paper LM token-embedding study.
+
+    PYTHONPATH=src python examples/npu_casestudy.py
+"""
+import sys
+
+sys.path.insert(0, ".")
+
+from benchmarks import fig4_onchip_policies, lm_npu_study
+
+print("== Fig 4a: EONSim cache vs ChampSim-semantics golden ==")
+for r in fig4_onchip_policies.run_fig4a():
+    print(f"  {r['dataset']:12s} {r['policy']:6s} identical={r['identical']} "
+          f"(hits {r['sim_hits']} vs {r['champ_hits']})")
+
+print("\n== Fig 4b/4c: policy speedups over SPM ==")
+for r in fig4_onchip_policies.run_fig4bc():
+    print(f"  {r['dataset']:12s} {r['policy']:8s} speedup={r['speedup_vs_spm']:.2f}x "
+          f"on-chip={r['onchip_ratio']:.3f}")
+
+print("\n== Beyond-paper: LM token-embedding traffic (decode_32k) ==")
+for r in lm_npu_study.run():
+    print(f"  {r['arch']:24s} {r['policy']:8s} "
+          f"embed_speedup={r['embed_speedup_vs_spm']:.2f}x "
+          f"on-chip={r['onchip_ratio']:.3f}")

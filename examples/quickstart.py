@@ -1,0 +1,25 @@
+"""Quickstart: simulate DLRM inference on a TPUv6e-class NPU with EONSim and
+compare on-chip memory management policies (the paper's core workflow).
+
+    PYTHONPATH=src python examples/quickstart.py
+"""
+from repro.core import OnChipPolicy, dlrm_rmc2_small, simulate, tpuv6e
+from repro.core.trace import REUSE_LEVELS
+
+# A reduced DLRM-RMC2-small (Table I geometry, container-sized scale).
+workload = dlrm_rmc2_small(num_tables=8, rows_per_table=250_000, batch_size=64)
+
+print(f"workload: {workload.name}")
+print(f"{'policy':10s} {'cycles':>12s} {'ms':>8s} {'on-chip%':>9s} {'hit%':>6s}")
+base = None
+for policy in OnChipPolicy:
+    hw = tpuv6e().with_policy(policy, capacity_bytes=4 * 1024 * 1024)
+    res = simulate(workload, hw, seed=0, zipf_s=REUSE_LEVELS["reuse_high"])
+    hit = res.cache_hits / max(res.cache_hits + res.cache_misses, 1)
+    if policy == OnChipPolicy.SPM:
+        base = res.total_cycles
+    speed = f"  ({base / res.total_cycles:.2f}x vs SPM)" if base else ""
+    print(
+        f"{policy.value:10s} {res.total_cycles:12.0f} {res.total_seconds*1e3:8.3f} "
+        f"{res.onchip_ratio*100:8.1f}% {hit*100:5.1f}%{speed}"
+    )

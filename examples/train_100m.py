@@ -1,0 +1,67 @@
+"""End-to-end driver: train a ~100M-parameter LM for a few hundred steps on
+the synthetic pipeline, with checkpointing and restart.
+
+    PYTHONPATH=src python examples/train_100m.py --steps 300
+    PYTHONPATH=src python examples/train_100m.py --steps 30      # quick look
+
+Loss should fall from ~10.4 (ln 32768 ~ uniform) toward the phrase-structure
+entropy of the synthetic stream (< 3) within a few hundred steps.
+"""
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.checkpoint import CheckpointConfig, CheckpointManager
+from repro.data import LMDataConfig, lm_batch
+from repro.models import family_module, get_smoke_config, param_count
+from repro.training import AdamWConfig, TrainConfig, build_train_step, init_state
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=300)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--checkpoint-dir", default="/tmp/repro_100m_ckpt")
+    args = ap.parse_args()
+
+    # ~100M params: stablelm family at d=640, 10 layers, 32k vocab
+    cfg = get_smoke_config("stablelm_3b").replace(
+        d_model=640, n_heads=10, n_kv_heads=10, head_dim=64,
+        d_ff=1728, n_layers=10, vocab=32768,
+    )
+    n = param_count(cfg)
+    print(f"training {cfg.name}-derived LM: {n/1e6:.0f}M params")
+
+    tcfg = TrainConfig(
+        adamw=AdamWConfig(lr=6e-4, warmup_steps=30, total_steps=args.steps),
+        loss_chunk=64,
+    )
+    state = init_state(jax.random.PRNGKey(0), cfg, tcfg)
+    step_fn = jax.jit(build_train_step(cfg, tcfg))
+    dcfg = LMDataConfig(vocab=cfg.vocab, seq_len=args.seq, global_batch=args.batch)
+    mgr = CheckpointManager(CheckpointConfig(directory=args.checkpoint_dir))
+
+    start = 0
+    if mgr.latest_step() is not None:
+        start, _, state = mgr.restore(target_tree=state)
+        print(f"resumed from step {start}")
+
+    t0 = time.time()
+    for i in range(start, args.steps):
+        batch = {k: jnp.asarray(v) for k, v in lm_batch(dcfg, i).items()}
+        state, m = step_fn(state, batch)
+        if i % 10 == 0 or i == args.steps - 1:
+            print(f"step {i:4d} loss={float(m['loss']):.3f} "
+                  f"({(time.time()-t0)/(i-start+1):.1f}s/step)")
+        if (i + 1) % 50 == 0:
+            mgr.save(i + 1, state)
+    mgr.save(args.steps, state)
+    mgr.wait()
+    print("done; checkpoints in", args.checkpoint_dir)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,150 @@
+"""Assemble EXPERIMENTS.md from the dry-run / benchmark artifacts.
+
+    PYTHONPATH=src:. python scripts/write_experiments.py
+"""
+import glob
+import json
+import os
+import sys
+
+sys.path.insert(0, ".")
+from benchmarks import roofline as RL
+
+ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+DRY = os.path.join(ROOT, "results", "dryrun")
+BENCH = os.path.join(ROOT, "results", "bench")
+
+
+def load(path):
+    with open(path) as f:
+        return json.load(f)
+
+
+def dryrun_table(mesh):
+    rows = []
+    for p in sorted(glob.glob(os.path.join(DRY, f"*__{mesh}.json"))):
+        rows.append(load(p))
+    lines = [
+        "| arch | shape | status | compile (s) | args/dev (GB) | temp/dev (GB) "
+        "| HLO GF/dev | coll GB/dev |",
+        "|---|---|---|---|---|---|---|---|",
+    ]
+    for r in rows:
+        mem = r.get("memory", {}) or {}
+        h = r.get("hlo", {}) or {}
+        coll = sum((h.get("collective_bytes_per_device") or {}).values())
+        lines.append(
+            f"| {r['arch']} | {r['shape']} | {r['status']} | "
+            f"{r.get('compile_s', 0):.1f} | "
+            f"{(mem.get('argument_bytes') or 0)/1e9:.2f} | "
+            f"{(mem.get('temp_bytes') or 0)/1e9:.2f} | "
+            f"{h.get('flops_per_device', 0)/1e9:,.0f} | {coll/1e9:.1f} |"
+        )
+    ok = sum(1 for r in rows if r["status"] == "ok")
+    return "\n".join(lines), ok, len(rows)
+
+
+def bench_section():
+    out = []
+    p3 = os.path.join(BENCH, "fig3_dlrm_validation.json")
+    if os.path.exists(p3):
+        rows = load(p3)
+        a = [r for r in rows if r["figure"] == "3a"]
+        b = [r for r in rows if r["figure"] == "3b"]
+        c = [r for r in rows if r["figure"] == "3c"]
+        gap = [r["oracle_gap_pct"] for r in rows if "oracle_gap_pct" in r]
+        out.append("### Fig. 3 — DLRM validation (EONSim vs event-granular reference)\n")
+        out.append("| sweep | points | avg time err | max time err |")
+        out.append("|---|---|---|---|")
+        for name, rs in (("3a tables 30-60", a), ("3b batch 32-512", b)):
+            errs = [r["time_err_pct"] for r in rs]
+            out.append(f"| {name} | {len(rs)} | {sum(errs)/len(errs):.2f}% | {max(errs):.2f}% |")
+        on = [r["onchip_err_pct"] for r in c]
+        off = [r["offchip_err_pct"] for r in c]
+        out.append(f"\nAccess counts (Fig. 3c): on-chip err {sum(on)/len(on):.2f}%, "
+                   f"off-chip err {sum(off)/len(off):.2f}% (paper: 2.2% / 2.8%).")
+        out.append(f"\nClosed-form analytical oracle gap: {sum(gap)/len(gap):.1f}% — "
+                   "the paper's thesis quantified: analytical models miss "
+                   "data-dependent memory behavior; detailed simulation is required.\n")
+    p4 = os.path.join(BENCH, "fig4_onchip_policies.json")
+    if os.path.exists(p4):
+        rows = load(p4)
+        ident = all(r["identical"] for r in rows if r["figure"] == "4a")
+        out.append(f"### Fig. 4a — cache model vs ChampSim-semantics golden: "
+                   f"**identical = {ident}** (paper: identical)\n")
+        out.append("### Fig. 4b/4c — on-chip policy case study\n")
+        out.append("| dataset | policy | speedup vs SPM | on-chip ratio | hit rate |")
+        out.append("|---|---|---|---|---|")
+        for r in rows:
+            if r["figure"] == "4b/4c":
+                out.append(f"| {r['dataset']} | {r['policy']} | "
+                           f"{r['speedup_vs_spm']:.2f}x | {r['onchip_ratio']:.3f} | "
+                           f"{r['cache_hit_rate']:.3f} |")
+        out.append("\nPaper claims reproduced: LRU/SRRIP >1.5x on Reuse-High/Mid, "
+                   "limited gain on Reuse-Low; Profiling-pinning best everywhere; "
+                   "SRRIP edges LRU's on-chip ratio.\n")
+    pa = os.path.join(BENCH, "assoc_study.json")
+    if os.path.exists(pa):
+        rows = load(pa)
+        out.append("### Beyond-paper — cache geometry exploration (LRU, "
+                   "reuse-mid trace)\n")
+        out.append("| sweep | ways | capacity | hit rate |")
+        out.append("|---|---|---|---|")
+        for r in rows:
+            out.append(f"| {r['sweep']} | {r['ways']} | {r['capacity_mb']} MB | "
+                       f"{r['hit_rate']:.3f} |")
+        out.append("")
+    pi = os.path.join(BENCH, "interleave_study.json")
+    if os.path.exists(pi):
+        rows = load(pi)
+        out.append("### Beyond-paper — DRAM interleave granularity vs 512 B "
+                   "vector gathers\n")
+        out.append("| interleave | row-hit rate | achieved GB/s | speedup vs 64 B |")
+        out.append("|---|---|---|---|")
+        for r in rows:
+            out.append(f"| {r['interleave_bytes']} B | {r['row_hit_rate']:.3f} | "
+                       f"{r['achieved_gbps']:.0f} | {r['speedup_vs_64B']:.2f}x |")
+        out.append("\nCoarse interleave keeps one embedding vector in one row "
+                   "(1 activate vs 8) — an address-mapping design point the "
+                   "detailed DRAM model exposes.\n")
+    pl = os.path.join(BENCH, "lm_npu_study.json")
+    if os.path.exists(pl):
+        rows = load(pl)
+        out.append("### Beyond-paper — LM token-embedding study (decode_32k, 8 steps)\n")
+        out.append("| arch | policy | embed speedup vs SPM | on-chip ratio |")
+        out.append("|---|---|---|---|")
+        for r in rows:
+            out.append(f"| {r['arch']} | {r['policy']} | "
+                       f"{r['embed_speedup_vs_spm']:.2f}x | {r['onchip_ratio']:.3f} |")
+        out.append("")
+    return "\n".join(out)
+
+
+def roofline_section():
+    rows = RL.load_all("pod")
+    txt = [RL.markdown_table(rows), ""]
+    txt.append("Per-cell mitigation notes (dominant-term):\n")
+    for r in rows:
+        txt.append(f"* **{r['arch']}/{r['shape']}** — {r['bottleneck']}-bound; "
+                   f"{r['mitigation']}.")
+    return "\n".join(txt)
+
+
+def main():
+    tpl_path = os.path.join(ROOT, "scripts", "experiments_template.md")
+    with open(tpl_path) as f:
+        tpl = f.read()
+    pod_tbl, pod_ok, pod_n = dryrun_table("pod")
+    mp_tbl, mp_ok, mp_n = dryrun_table("multipod")
+    out = tpl.format(
+        pod_ok=pod_ok, pod_n=pod_n, mp_ok=mp_ok, mp_n=mp_n,
+        pod_table=pod_tbl, mp_table=mp_tbl,
+        bench=bench_section(), roofline=roofline_section(),
+    )
+    with open(os.path.join(ROOT, "EXPERIMENTS.md"), "w") as f:
+        f.write(out)
+    print("wrote EXPERIMENTS.md")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,5 @@
+"""One module per assigned architecture; each exports config() and smoke().
+
+Config sources are cited per file ([source; verified-tier] from the brief).
+``smoke()`` returns a reduced same-family config for CPU tests.
+"""

@@ -1,0 +1,42 @@
+"""EONSim core: the paper's contribution — an NPU simulator that models both
+matrix and embedding vector operations over a configurable memory hierarchy."""
+
+from .hardware import (
+    Dataflow,
+    HardwareConfig,
+    MatrixUnit,
+    OffChipMemory,
+    OnChipMemory,
+    OnChipPolicy,
+    VectorUnit,
+    tpuv6e,
+)
+from .workload import (
+    EmbeddingOpSpec,
+    MatrixOpSpec,
+    VectorOp,
+    Workload,
+    dlrm_rmc2_small,
+)
+from .engine import simulate, simulate_embedding_op
+from .results import BatchResult, SimResult
+
+__all__ = [
+    "Dataflow",
+    "HardwareConfig",
+    "MatrixUnit",
+    "OffChipMemory",
+    "OnChipMemory",
+    "OnChipPolicy",
+    "VectorUnit",
+    "tpuv6e",
+    "EmbeddingOpSpec",
+    "MatrixOpSpec",
+    "VectorOp",
+    "Workload",
+    "dlrm_rmc2_small",
+    "simulate",
+    "simulate_embedding_op",
+    "BatchResult",
+    "SimResult",
+]

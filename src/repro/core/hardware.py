@@ -1,0 +1,176 @@
+"""Hardware configuration for EONSim.
+
+Mirrors the paper's three input categories (Sec. III, "Simulation input"):
+  * accelerator-level parameters  (clock, #cores, memory hierarchy)
+  * core settings                 (vector / matrix units)
+  * memory system parameters      (capacity, latency, bandwidth, granularity)
+
+All timing inside the simulator is in *core cycles*; helpers convert to
+seconds through ``clock_ghz``.
+"""
+from __future__ import annotations
+
+import dataclasses
+import enum
+import math
+from dataclasses import dataclass, field
+
+
+class OnChipPolicy(str, enum.Enum):
+    """On-chip memory management policy (paper Sec. III / IV)."""
+
+    SPM = "spm"            # scratchpad staging, double-buffered (TPU baseline)
+    LRU = "lru"            # cache mode, LRU replacement
+    SRRIP = "srrip"        # cache mode, SRRIP replacement (MTIA LLC-like)
+    FIFO = "fifo"          # cache mode, FIFO replacement
+    PINNING = "pinning"    # "Profiling": pin hottest vectors up to capacity
+
+
+class Dataflow(str, enum.Enum):
+    WS = "ws"              # weight stationary
+    OS = "os"              # output stationary
+
+
+@dataclass(frozen=True)
+class MatrixUnit:
+    """Systolic array description (SCALE-Sim-compatible)."""
+
+    rows: int = 256
+    cols: int = 256
+    dataflow: Dataflow = Dataflow.WS
+
+    @property
+    def macs(self) -> int:
+        return self.rows * self.cols
+
+
+@dataclass(frozen=True)
+class VectorUnit:
+    """TPU-style VPU: ``lanes`` ALUs x ``sublanes`` (8x128 on TPU)."""
+
+    lanes: int = 128
+    sublanes: int = 8
+    ops_per_cycle_per_lane: int = 1
+
+    @property
+    def throughput(self) -> int:
+        """Elementwise ops per cycle."""
+        return self.lanes * self.sublanes * self.ops_per_cycle_per_lane
+
+
+@dataclass(frozen=True)
+class OnChipMemory:
+    """Local (per-core) on-chip memory."""
+
+    capacity_bytes: int = 128 * 1024 * 1024   # 128 MB (TPUv6e local buffer)
+    line_bytes: int = 64                      # access granularity
+    ways: int = 16                            # associativity in cache mode
+    latency_cycles: int = 8
+    # on-chip SRAM streams far faster than HBM (~7.7 TB/s at 0.94 GHz)
+    read_bw_bytes_per_cycle: int = 8192
+    write_bw_bytes_per_cycle: int = 8192
+    policy: OnChipPolicy = OnChipPolicy.SPM
+
+    @property
+    def num_lines(self) -> int:
+        return self.capacity_bytes // self.line_bytes
+
+    @property
+    def num_sets(self) -> int:
+        return max(1, self.num_lines // self.ways)
+
+
+@dataclass(frozen=True)
+class OffChipMemory:
+    """Off-chip (HBM/DRAM) parameters — DRAMSim-lite inputs."""
+
+    capacity_bytes: int = 32 * (1 << 30)      # 32 GB (TPUv6e)
+    bandwidth_gbps: float = 1600.0            # GB/s aggregate
+    channels: int = 16
+    banks_per_channel: int = 8
+    row_bytes: int = 2048                     # row-buffer size
+    interleave_bytes: int = 512               # channel-interleave granularity
+    t_cas_cycles: int = 22                    # row-hit latency (core cycles)
+    t_rcd_cycles: int = 22
+    t_rp_cycles: int = 22
+    base_latency_cycles: int = 120            # controller + interconnect overhead
+
+    def bytes_per_cycle(self, clock_ghz: float) -> float:
+        return self.bandwidth_gbps / clock_ghz  # GB/s / Gcycle/s = B/cycle
+
+    def channel_bytes_per_cycle(self, clock_ghz: float) -> float:
+        return self.bytes_per_cycle(clock_ghz) / self.channels
+
+
+@dataclass(frozen=True)
+class HardwareConfig:
+    """Full accelerator description."""
+
+    name: str = "tpuv6e"
+    clock_ghz: float = 0.94                   # TPUv6e core clock ~940 MHz
+    num_cores: int = 1
+    matrix_unit: MatrixUnit = field(default_factory=MatrixUnit)
+    vector_unit: VectorUnit = field(default_factory=VectorUnit)
+    onchip: OnChipMemory = field(default_factory=OnChipMemory)
+    offchip: OffChipMemory = field(default_factory=OffChipMemory)
+
+    def cycles_to_seconds(self, cycles: float) -> float:
+        return cycles / (self.clock_ghz * 1e9)
+
+    def seconds_to_cycles(self, seconds: float) -> float:
+        return seconds * self.clock_ghz * 1e9
+
+    def replace(self, **kw) -> "HardwareConfig":
+        return dataclasses.replace(self, **kw)
+
+    def with_policy(self, policy: OnChipPolicy, **onchip_kw) -> "HardwareConfig":
+        onchip = dataclasses.replace(self.onchip, policy=policy, **onchip_kw)
+        return dataclasses.replace(self, onchip=onchip)
+
+
+def tpuv6e() -> HardwareConfig:
+    """Paper Table I: TPUv6e configuration used for validation."""
+    return HardwareConfig(
+        name="tpuv6e",
+        clock_ghz=0.94,
+        num_cores=1,
+        matrix_unit=MatrixUnit(rows=256, cols=256, dataflow=Dataflow.WS),
+        vector_unit=VectorUnit(lanes=128, sublanes=8),
+        onchip=OnChipMemory(
+            capacity_bytes=128 * 1024 * 1024,
+            line_bytes=64,
+            ways=16,
+            latency_cycles=8,
+            read_bw_bytes_per_cycle=8192,
+            write_bw_bytes_per_cycle=8192,
+            policy=OnChipPolicy.SPM,
+        ),
+        offchip=OffChipMemory(
+            capacity_bytes=32 * (1 << 30),
+            bandwidth_gbps=1600.0,
+        ),
+    )
+
+
+def tpu_v5e_chip() -> HardwareConfig:
+    """TPU v5e single chip — the roofline target of the training framework.
+
+    197 TFLOP/s bf16, 819 GB/s HBM, 16 GB HBM (used by benchmarks/roofline.py,
+    kept here so all hardware constants live in one module).
+    """
+    return HardwareConfig(
+        name="tpuv5e",
+        clock_ghz=0.94,
+        num_cores=1,
+        matrix_unit=MatrixUnit(rows=128, cols=128, dataflow=Dataflow.WS),
+        vector_unit=VectorUnit(lanes=128, sublanes=8),
+        onchip=OnChipMemory(capacity_bytes=128 * 1024 * 1024),
+        offchip=OffChipMemory(capacity_bytes=16 * (1 << 30), bandwidth_gbps=819.0),
+    )
+
+
+# Roofline constants for the v5e target (single source of truth).
+V5E_PEAK_BF16_FLOPS = 197e12          # per chip
+V5E_HBM_BW = 819e9                    # bytes/s per chip
+V5E_ICI_BW = 50e9                     # bytes/s per link
+V5E_HBM_BYTES = 16 * (1 << 30)

@@ -1,0 +1,15 @@
+from .cache import CacheGeometry, simulate_cache, CacheResult
+from .golden import GoldenCache
+from .dram import DramModel, simulate_dram, estimate_dram_fast, dram_timing
+from .policies import run_policy, PolicyOutcome
+
+__all__ = [
+    "CacheGeometry",
+    "simulate_cache",
+    "CacheResult",
+    "GoldenCache",
+    "DramModel",
+    "simulate_dram",
+    "run_policy",
+    "PolicyOutcome",
+]

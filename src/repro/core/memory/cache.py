@@ -1,0 +1,217 @@
+"""JAX set-associative cache engine (the paper's cycle-level memory sim core).
+
+The paper validates EONSim's on-chip cache model against ChampSim and reports
+*identical* hit/miss counts under LRU and SRRIP (Fig. 4a). We reproduce that
+bar: this engine is bit-exact against ``golden.GoldenCache`` (a sequential
+Python model written to ChampSim's replacement semantics), enforced by tests.
+
+TPU-native design: the sequential C++ cache loop becomes a ``jax.lax.scan``
+over the address trace with carry ``(tags, meta)``. Two structural
+optimizations keep it fast while remaining bit-exact (both tested):
+
+  1. **Set-group partitioning.** Accesses interact only within a cache set,
+     so the set space is split into groups of ``_GROUP_SETS`` sets; each
+     group's sub-trace runs through its own scan with a tiny carry
+     (group_sets x ways). A monolithic carry (e.g. 16384x16) forces XLA to
+     copy megabytes per scan step (~11 K acc/s measured); the grouped carry
+     runs at ~1.2 M acc/s.
+  2. **Length-bucketed padding.** Group sub-traces are padded to power-of-two
+     lengths with masked no-op accesses so only O(log N) distinct shapes are
+     ever compiled.
+
+Replacement semantics (matching ChampSim):
+  * LRU   — victim = first invalid way, else least-recently-used way.
+  * SRRIP — 2-bit RRPV, init 3 (= maxRRPV, so invalid lines are immediate
+            victims); hit -> RRPV=0; fill -> RRPV=maxRRPV-1; victim = first
+            way with RRPV==maxRRPV, aging all ways up when none qualifies
+            (the aging persists).
+  * FIFO  — victim = first invalid way, else oldest fill.
+"""
+from __future__ import annotations
+
+import functools
+from dataclasses import dataclass
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+MAX_RRPV = 3  # 2-bit SRRIP
+
+_POLICY_IDS = {"lru": 0, "srrip": 1, "fifo": 2}
+
+# Line numbers fit int32 for any device-attached memory (2^31 lines x 64 B =
+# 128 GB); guarded in simulate_cache. Avoids requiring jax_enable_x64.
+ITYPE = jnp.int32
+
+_GROUP_SETS = 32        # sets per scan group (carry = 32 x ways ints x 2)
+_MIN_BUCKET = 1024      # smallest padded sub-trace length
+
+
+@dataclass(frozen=True)
+class CacheGeometry:
+    num_sets: int
+    ways: int
+    line_bytes: int
+
+    @property
+    def capacity_bytes(self) -> int:
+        return self.num_sets * self.ways * self.line_bytes
+
+    @staticmethod
+    def from_capacity(capacity_bytes: int, line_bytes: int, ways: int) -> "CacheGeometry":
+        num_lines = capacity_bytes // line_bytes
+        num_sets = max(1, num_lines // ways)
+        return CacheGeometry(num_sets=num_sets, ways=ways, line_bytes=line_bytes)
+
+
+@dataclass
+class CacheResult:
+    hits: np.ndarray          # bool (N,) per-access hit flag
+    num_hits: int
+    num_misses: int
+    num_evictions: int
+
+    @property
+    def accesses(self) -> int:
+        return self.num_hits + self.num_misses
+
+    @property
+    def hit_rate(self) -> float:
+        return self.num_hits / max(self.accesses, 1)
+
+
+def _step(policy_id: int, ways: int, carry, x):
+    """One cache access. carry = (tags, meta, t).
+
+    x = (set_idx, tag, valid). Padded (invalid) accesses leave the state
+    untouched and report miss (filtered by the caller).
+
+    tags: (S, W) ITYPE, -1 = invalid line.
+    meta: (S, W) int32 — LRU/FIFO: last-use / fill timestamp (-1 invalid);
+                          SRRIP: RRPV.
+    """
+    tags, meta, t = carry
+    s, tag, valid = x
+    row_tags = tags[s]
+    row_meta = meta[s]
+
+    hit_vec = row_tags == tag
+    hit = jnp.any(hit_vec)
+    hit_way = jnp.argmax(hit_vec)
+
+    invalid_vec = row_tags < 0
+
+    if policy_id == _POLICY_IDS["srrip"]:
+        # Age the set until some way reaches MAX_RRPV (persists, ChampSim-style).
+        inc = jnp.maximum(0, MAX_RRPV - jnp.max(row_meta))
+        aged = row_meta + inc
+        victim = jnp.argmax(aged == MAX_RRPV)  # first way at maxRRPV
+        new_meta_hit = row_meta.at[hit_way].set(0)
+        new_meta_miss = aged.at[victim].set(MAX_RRPV - 1)
+    else:
+        # Timestamp metadata. Invalid ways get -1 < any timestamp, so argmin
+        # picks the first invalid way first (ChampSim behaviour), then ties
+        # break to the lowest way index.
+        victim = jnp.argmin(jnp.where(invalid_vec, -1, row_meta))
+        if policy_id == _POLICY_IDS["lru"]:
+            new_meta_hit = row_meta.at[hit_way].set(t)
+        else:  # fifo: hits do not touch metadata
+            new_meta_hit = row_meta
+        new_meta_miss = row_meta.at[victim].set(t)
+
+    evict = jnp.logical_and(valid, jnp.logical_and(~hit, row_tags[victim] >= 0))
+    new_row_meta = jnp.where(hit, new_meta_hit, new_meta_miss)
+    new_row_tags = jnp.where(hit, row_tags, row_tags.at[victim].set(tag))
+
+    # Masked (padding) accesses leave state untouched.
+    new_row_tags = jnp.where(valid, new_row_tags, row_tags)
+    new_row_meta = jnp.where(valid, new_row_meta, row_meta)
+
+    tags = tags.at[s].set(new_row_tags)
+    meta = meta.at[s].set(new_row_meta)
+    return (tags, meta, t + jnp.int32(1)), (jnp.logical_and(hit, valid), evict)
+
+
+@functools.partial(jax.jit, static_argnames=("num_sets", "ways", "policy"))
+def _simulate(sets: jax.Array, tags_in: jax.Array, valid: jax.Array,
+              num_sets: int, ways: int, policy: str):
+    tags0 = jnp.full((num_sets, ways), -1, dtype=ITYPE)
+    if policy == "srrip":
+        meta0 = jnp.full((num_sets, ways), MAX_RRPV, dtype=jnp.int32)
+    else:
+        meta0 = jnp.full((num_sets, ways), -1, dtype=jnp.int32)
+    step = functools.partial(_step, _POLICY_IDS[policy], ways)
+    (_, _, _), (hits, evicts) = jax.lax.scan(
+        step, (tags0, meta0, jnp.int32(0)), (sets, tags_in, valid)
+    )
+    return hits, evicts
+
+
+def _bucket_len(n: int) -> int:
+    b = _MIN_BUCKET
+    while b < n:
+        b *= 2
+    return b
+
+
+def simulate_cache(
+    lines: np.ndarray | jax.Array,
+    geometry: CacheGeometry,
+    policy: str = "lru",
+) -> CacheResult:
+    """Run the trace through the cache; returns per-access hits + counts."""
+    if policy not in _POLICY_IDS:
+        raise ValueError(f"unknown policy {policy!r}; options: {sorted(_POLICY_IDS)}")
+    lines_np = np.asarray(lines, dtype=np.int64).reshape(-1)
+    n = lines_np.size
+    if n == 0:
+        return CacheResult(np.zeros(0, dtype=bool), 0, 0, 0)
+    if int(lines_np.max()) >= np.iinfo(np.int32).max:
+        raise ValueError("line numbers exceed int32 range; rebase the trace")
+
+    S, W = geometry.num_sets, geometry.ways
+    set_idx = (lines_np % S).astype(np.int32)
+    tag = lines_np.astype(np.int32)
+
+    hits = np.zeros(n, dtype=bool)
+    evict_total = 0
+
+    if S <= _GROUP_SETS:
+        pad = _bucket_len(n) - n
+        s_p = np.pad(set_idx, (0, pad))
+        t_p = np.pad(tag, (0, pad), constant_values=-2)
+        v_p = np.pad(np.ones(n, dtype=bool), (0, pad))
+        h, e = _simulate(jnp.asarray(s_p), jnp.asarray(t_p), jnp.asarray(v_p), S, W, policy)
+        hits = np.asarray(h)[:n]
+        evict_total = int(np.asarray(e).sum())
+    else:
+        group = set_idx // _GROUP_SETS
+        order = np.argsort(group, kind="stable")  # time order kept within group
+        g_sorted = group[order]
+        bounds = np.searchsorted(g_sorted, np.arange(group.max() + 2))
+        for g in range(int(group.max()) + 1):
+            lo, hi = bounds[g], bounds[g + 1]
+            if lo == hi:
+                continue
+            idx = order[lo:hi]
+            m = hi - lo
+            pad = _bucket_len(m) - m
+            s_p = np.pad(set_idx[idx] - g * _GROUP_SETS, (0, pad))
+            t_p = np.pad(tag[idx], (0, pad), constant_values=-2)
+            v_p = np.pad(np.ones(m, dtype=bool), (0, pad))
+            n_sets_g = min(_GROUP_SETS, S - g * _GROUP_SETS)
+            h, e = _simulate(
+                jnp.asarray(s_p), jnp.asarray(t_p), jnp.asarray(v_p),
+                n_sets_g, W, policy,
+            )
+            hits[idx] = np.asarray(h)[:m]
+            evict_total += int(np.asarray(e).sum())
+
+    n_hit = int(hits.sum())
+    return CacheResult(
+        hits=hits,
+        num_hits=n_hit,
+        num_misses=n - n_hit,
+        num_evictions=evict_total,
+    )

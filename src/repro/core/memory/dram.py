@@ -1,0 +1,306 @@
+"""DRAMSim-lite: off-chip memory timing model.
+
+The paper adopts mNPUsim's off-chip path (NPU memory controller +
+DRAMSim3-based DRAM). Offline we implement the same *interface* — a per-access
+event model over (channel, bank, row) with row-buffer hits/misses and
+bandwidth occupancy — with a simplified timing core (DESIGN.md §8):
+
+  * address interleave: line -> channel (line-granular striping) -> bank -> row;
+  * per access: row hit costs tCAS, row miss tRP+tRCD+tCAS (precharge+activate);
+  * each channel's data bus is occupied line_bytes/channel_bw per transfer;
+  * banks within a channel overlap row operations, the channel bus serializes
+    data transfers.
+
+Channels are fully independent, so the event scan is ``vmap``-ed across
+channels (carry per channel: open-row + free-cycle per bank + bus-free
+scalar), giving a channels-wide speedup over a monolithic scan.
+
+``estimate_dram_fast`` is a closed-form vectorized estimate (per-channel bus
+occupancy vs per-bank row-op serialization) used by the engine for very long
+traces; tests pin it within tolerance of the event scan.
+"""
+from __future__ import annotations
+
+import functools
+from dataclasses import dataclass
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..hardware import HardwareConfig
+
+
+@dataclass
+class DramResult:
+    finish_cycle: float          # cycle when the last access completes
+    total_latency_cycles: float  # sum of per-access latencies
+    row_hits: int
+    row_misses: int
+    accesses: int
+    detailed: bool = True
+
+    @property
+    def row_hit_rate(self) -> float:
+        return self.row_hits / max(self.accesses, 1)
+
+
+@dataclass(frozen=True)
+class DramModel:
+    channels: int
+    banks_per_channel: int
+    lines_per_row: int
+    t_cas: int
+    t_rcd: int
+    t_rp: int
+    base_latency: int
+    chan_bytes_per_cycle: float
+    line_bytes: int
+    lines_per_block: int = 8     # channel-interleave granularity in lines
+    queue_depth: int = 32
+
+    @staticmethod
+    def from_hardware(hw: HardwareConfig) -> "DramModel":
+        off = hw.offchip
+        line = hw.onchip.line_bytes
+        return DramModel(
+            channels=off.channels,
+            banks_per_channel=off.banks_per_channel,
+            lines_per_row=max(1, off.row_bytes // line),
+            t_cas=off.t_cas_cycles,
+            t_rcd=off.t_rcd_cycles,
+            t_rp=off.t_rp_cycles,
+            base_latency=off.base_latency_cycles,
+            chan_bytes_per_cycle=off.channel_bytes_per_cycle(hw.clock_ghz),
+            line_bytes=line,
+            lines_per_block=max(1, off.interleave_bytes // line),
+        )
+
+    def decompose(self, lines: np.ndarray):
+        """line -> (channel, bank, row) under block-granular interleaving.
+
+        Consecutive ``lines_per_block`` lines form one interleave block living
+        in a single (channel, bank, row); blocks stripe across channels, then
+        banks. Coarse interleave keeps an embedding vector inside one row
+        (one activate per vector), fine interleave spreads it across channels
+        (activate per line) — a first-class EONSim config knob.
+        """
+        blk = lines // self.lines_per_block
+        ch = (blk % self.channels).astype(np.int32)
+        in_ch = blk // self.channels
+        bk = (in_ch % self.banks_per_channel).astype(np.int32)
+        blocks_per_row = max(1, self.lines_per_row // self.lines_per_block)
+        row = (in_ch // self.banks_per_channel // blocks_per_row).astype(np.int32)
+        return ch, bk, row
+
+
+def _per_key_rank(keys: np.ndarray) -> np.ndarray:
+    """Rank of each element within its key group, preserving original order."""
+    n = keys.size
+    order = np.argsort(keys, kind="stable")
+    sk = keys[order]
+    starts = np.ones(n, dtype=bool)
+    starts[1:] = sk[1:] != sk[:-1]
+    grp_start = np.maximum.accumulate(np.where(starts, np.arange(n), 0))
+    rank_sorted = np.arange(n) - grp_start
+    rank = np.empty(n, dtype=np.int64)
+    rank[order] = rank_sorted
+    return rank
+
+
+def _frfcfs_order(ch: np.ndarray, bk: np.ndarray, blk: np.ndarray, banks: int) -> np.ndarray:
+    """FR-FCFS-style service order within each channel.
+
+    Real controllers pick ready requests: banks are served round-robin at
+    interleave-*block* granularity (one activate per block), while a block's
+    lines stay consecutive so an open row streams at burst rate. Per-bank
+    request order is preserved, keeping row-buffer locality exact.
+    """
+    n = ch.size
+    gb = ch.astype(np.int64) * banks + bk
+    r = _per_key_rank(gb)                     # per-bank arrival rank
+    order0 = np.lexsort((r, gb))              # per-bank streams, in order
+    gb_s, blk_s = gb[order0], blk[order0]
+    first = np.ones(n, dtype=bool)
+    first[1:] = gb_s[1:] != gb_s[:-1]
+    new_inst = first.copy()
+    new_inst[1:] |= blk_s[1:] != blk_s[:-1]
+    cs = np.cumsum(new_inst)
+    base = np.maximum.accumulate(np.where(first, cs - 1, 0))
+    inst_s = cs - 1 - base                    # block-instance index within bank
+    inst = np.empty(n, dtype=np.int64)
+    inst[order0] = inst_s
+    return np.lexsort((r, bk, inst, ch))
+
+
+@functools.partial(jax.jit, static_argnames=("banks",))
+def _scan_channel(
+    bk: jax.Array,       # (C, L) bank index per slot
+    row: jax.Array,      # (C, L) row per slot
+    arrive: jax.Array,   # (C, L) arrival cycle
+    valid: jax.Array,    # (C, L) real access?
+    banks: int,
+    t_cas: float,
+    t_row_act: float,
+    bus_cycles_per_line: float,
+):
+    """Per-channel event scan, vmapped over the channel axis."""
+
+    def one_channel(bk_c, row_c, arr_c, val_c):
+        def step(carry, x):
+            open_row, bank_free, bus_free = carry
+            b, r, a, v = x
+            row_hit = open_row[b] == r
+            # Bank occupancy: precharge+activate on a row miss; row hits
+            # stream at burst rate (CAS latency pipelines, it is not
+            # occupancy). Banks overlap; the channel bus serializes bursts.
+            occ = jnp.where(row_hit, 0.0, t_row_act)
+            bank_avail = jnp.maximum(a, bank_free[b]) + occ
+            start_xfer = jnp.maximum(bank_avail, bus_free)
+            done = start_xfer + bus_cycles_per_line
+            new_open = open_row.at[b].set(r)
+            new_bfree = bank_free.at[b].set(done)
+            open_row = jnp.where(v, new_open, open_row)
+            bank_free = jnp.where(v, new_bfree, bank_free)
+            bus_free = jnp.where(v, done, bus_free)
+            return (open_row, bank_free, bus_free), (
+                jnp.where(v, done + t_cas, 0.0),   # completion incl. CAS latency
+                jnp.where(v, done + t_cas - a, 0.0),
+                jnp.logical_and(v, row_hit),
+            )
+
+        init = (
+            jnp.full((banks,), -1, dtype=jnp.int32),
+            jnp.zeros((banks,), dtype=jnp.float32),
+            jnp.float32(0.0),
+        )
+        (_, _, _), (done, lat, hit) = jax.lax.scan(
+            step, init, (bk_c, row_c, arr_c, val_c)
+        )
+        return done.max(), lat.sum(), hit.sum()
+
+    return jax.vmap(one_channel)(bk, row, arrive, valid)
+
+
+def simulate_dram(
+    lines: np.ndarray,
+    model: DramModel,
+    issue_interval_cycles: float = 0.0,
+    start_cycle: float = 0.0,
+) -> DramResult:
+    """Event-scan the (miss) line trace through the DRAM model.
+
+    ``issue_interval_cycles`` models the upstream request rate; 0 means the
+    controller queue is always full (memory-bound phase), the usual regime for
+    embedding gathers.
+    """
+    lines = np.asarray(lines, dtype=np.int64).reshape(-1)
+    n = lines.size
+    if n == 0:
+        return DramResult(start_cycle, 0.0, 0, 0, 0)
+    ch, bk, row = model.decompose(lines)
+    arrive = start_cycle + np.arange(n, dtype=np.float32) * issue_interval_cycles
+
+    C = model.channels
+    # FR-FCFS-style controller: banks round-robin at block granularity,
+    # block lines consecutive (see _frfcfs_order). In-order service would
+    # head-of-line block on activating banks, which real controllers avoid.
+    blk = lines // model.lines_per_block
+    order = _frfcfs_order(ch, bk, blk, model.banks_per_channel)
+    ch_s = ch[order]
+    bounds = np.searchsorted(ch_s, np.arange(C + 1))
+    max_len = int(np.max(bounds[1:] - bounds[:-1])) if n else 0
+    L = max(1, max_len)
+    bk_m = np.zeros((C, L), dtype=np.int32)
+    row_m = np.zeros((C, L), dtype=np.int32)
+    ar_m = np.zeros((C, L), dtype=np.float32)
+    va_m = np.zeros((C, L), dtype=bool)
+    for c in range(C):
+        lo, hi = bounds[c], bounds[c + 1]
+        idx = order[lo:hi]
+        m = hi - lo
+        bk_m[c, :m] = bk[idx]
+        row_m[c, :m] = row[idx]
+        ar_m[c, :m] = arrive[idx]
+        va_m[c, :m] = True
+
+    done, lat, hits = _scan_channel(
+        jnp.asarray(bk_m),
+        jnp.asarray(row_m),
+        jnp.asarray(ar_m),
+        jnp.asarray(va_m),
+        model.banks_per_channel,
+        float(model.t_cas),
+        float(model.t_rp + model.t_rcd),
+        float(model.line_bytes / model.chan_bytes_per_cycle),
+    )
+    row_hits = int(np.asarray(hits).sum())
+    return DramResult(
+        finish_cycle=float(np.asarray(done).max()) + model.base_latency,  # done incl. CAS
+        total_latency_cycles=float(np.asarray(lat).sum()) + model.base_latency * n,
+        row_hits=row_hits,
+        row_misses=n - row_hits,
+        accesses=n,
+    )
+
+
+def estimate_dram_fast(
+    lines: np.ndarray,
+    model: DramModel,
+    start_cycle: float = 0.0,
+) -> DramResult:
+    """Closed-form estimate for long traces (no event scan).
+
+    finish = max over channels of max(bus occupancy, slowest bank's row-op
+    serialization); row transitions counted exactly per bank.
+    """
+    lines = np.asarray(lines, dtype=np.int64).reshape(-1)
+    n = lines.size
+    if n == 0:
+        return DramResult(start_cycle, 0.0, 0, 0, 0, detailed=False)
+    ch, bk, row = model.decompose(lines)
+    C, B = model.channels, model.banks_per_channel
+    gb = ch.astype(np.int64) * B + bk
+    # row transitions per (channel, bank) in arrival order
+    order = np.argsort(gb, kind="stable")
+    gb_s, row_s = gb[order], row[order]
+    first = np.ones(n, dtype=bool)
+    first[1:] = gb_s[1:] != gb_s[:-1]
+    trans = first | np.concatenate(([True], row_s[1:] != row_s[:-1]))
+    # per-bank counts
+    counts = np.bincount(gb_s, minlength=C * B)
+    misses = np.bincount(gb_s[trans], minlength=C * B)
+    bus_cyc = model.line_bytes / model.chan_bytes_per_cycle
+    bank_time = counts * bus_cyc + misses * (model.t_rp + model.t_rcd)
+    bank_bound = bank_time.reshape(C, B).max(axis=1)
+    bus_bound = np.bincount(ch, minlength=C) * bus_cyc
+    finish = (
+        float(np.maximum(bank_bound, bus_bound).max())
+        + model.base_latency
+        + model.t_cas
+    )
+    row_hits = int(n - trans.sum())
+    return DramResult(
+        finish_cycle=start_cycle + finish,
+        total_latency_cycles=finish * 1.0,
+        row_hits=row_hits,
+        row_misses=n - row_hits,
+        accesses=n,
+        detailed=False,
+    )
+
+
+# Engine switches to the fast path above this trace length.
+DETAILED_DRAM_MAX = 2_000_000
+
+
+def dram_timing(lines: np.ndarray, model: DramModel, **kw) -> DramResult:
+    if np.asarray(lines).size > DETAILED_DRAM_MAX:
+        return estimate_dram_fast(lines, model)
+    return simulate_dram(lines, model, **kw)
+
+
+def bulk_transfer_cycles(data_bytes: float, hw: HardwareConfig) -> float:
+    """Paper's analytical model for large tile transfers: T = D/B + L."""
+    off = hw.offchip
+    return data_bytes / off.bytes_per_cycle(hw.clock_ghz) + off.base_latency_cycles

@@ -1,0 +1,138 @@
+"""On-chip memory management policies (paper Sec. III/IV).
+
+Four configurations evaluated in the paper's case study (Fig. 4):
+  * SPM      — scratchpad staging as on TPUv6e: *every* vector lookup fetches
+               from off-chip regardless of hotness; on-chip memory is a
+               double-buffered staging area.
+  * LRU/SRRIP/FIFO — on-chip memory configured as a set-associative cache
+               (MTIA LLC-mode-like); misses go off-chip.
+  * PINNING  — "Profiling": track access frequency, pin the hottest vectors
+               up to capacity; pinned hits stay on-chip, everything else is
+               staged from off-chip like SPM.
+
+``run_policy`` classifies each line access of an address trace as on-chip hit
+or off-chip miss and returns the access counts the paper reports (Fig. 3c/4c)
+plus the miss trace for DRAM timing.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+import numpy as np
+
+from ..hardware import HardwareConfig, OnChipPolicy
+from ..trace import AddressTrace
+from .cache import CacheGeometry, simulate_cache
+
+
+@dataclass
+class PolicyOutcome:
+    hits: np.ndarray              # bool (N,) on-chip hit per line access
+    miss_lines: np.ndarray        # int64 (M,) off-chip line trace, trace order
+    onchip_reads: int             # on-chip read accesses (line granular)
+    onchip_writes: int            # on-chip write accesses (fills/stages)
+    offchip_reads: int            # off-chip line fetches
+    policy: OnChipPolicy
+
+    @property
+    def onchip_accesses(self) -> int:
+        return self.onchip_reads + self.onchip_writes
+
+    @property
+    def onchip_ratio(self) -> float:
+        """On-chip share of all memory accesses (paper Fig. 4c metric)."""
+        total = self.onchip_accesses + self.offchip_reads
+        return self.onchip_accesses / max(total, 1)
+
+    @property
+    def hit_rate(self) -> float:
+        return float(self.hits.mean()) if self.hits.size else 0.0
+
+
+def _spm(atrace: AddressTrace) -> PolicyOutcome:
+    """TPUv6e baseline: fetch every vector from off-chip regardless of hotness.
+
+    Each line access = 1 off-chip read + 1 on-chip write (stage into the
+    double buffer) + 1 on-chip read (consumed by the vector unit).
+    """
+    n = len(atrace)
+    return PolicyOutcome(
+        hits=np.zeros(n, dtype=bool),
+        miss_lines=atrace.lines.copy(),
+        onchip_reads=n,
+        onchip_writes=n,
+        offchip_reads=n,
+        policy=OnChipPolicy.SPM,
+    )
+
+
+def _cache(atrace: AddressTrace, hw: HardwareConfig, policy: str) -> PolicyOutcome:
+    geom = CacheGeometry.from_capacity(
+        hw.onchip.capacity_bytes, hw.onchip.line_bytes, hw.onchip.ways
+    )
+    res = simulate_cache(atrace.lines, geom, policy=policy)
+    miss_lines = atrace.lines[~res.hits]
+    return PolicyOutcome(
+        hits=res.hits,
+        miss_lines=miss_lines,
+        onchip_reads=len(atrace),           # every consumed line is read on-chip
+        onchip_writes=res.num_misses,       # fills on miss
+        offchip_reads=res.num_misses,
+        policy=OnChipPolicy(policy),
+    )
+
+
+def profile_hot_lines(lines: np.ndarray, capacity_lines: int) -> np.ndarray:
+    """Pick the most frequently accessed lines, up to on-chip capacity.
+
+    The paper's Profiling policy "tracks vector access frequency and pins the
+    most frequently accessed vectors in on-chip memory, up to its capacity".
+    """
+    uniq, counts = np.unique(lines, return_counts=True)
+    order = np.argsort(-counts, kind="stable")
+    return np.sort(uniq[order[:capacity_lines]])
+
+
+def _pinning(
+    atrace: AddressTrace,
+    hw: HardwareConfig,
+    pinned_lines: np.ndarray | None,
+    pin_fraction: float = 1.0,
+) -> PolicyOutcome:
+    cap_lines = int(hw.onchip.num_lines * pin_fraction)
+    if pinned_lines is None:
+        pinned_lines = profile_hot_lines(atrace.lines, cap_lines)
+    pinned_lines = np.sort(np.asarray(pinned_lines))
+    idx = np.searchsorted(pinned_lines, atrace.lines)
+    idx = np.clip(idx, 0, max(len(pinned_lines) - 1, 0))
+    hits = (
+        pinned_lines[idx] == atrace.lines
+        if len(pinned_lines)
+        else np.zeros(len(atrace), dtype=bool)
+    )
+    misses = int((~hits).sum())
+    return PolicyOutcome(
+        hits=hits,
+        miss_lines=atrace.lines[~hits],
+        onchip_reads=len(atrace),
+        # pinned fill happens once at load time: count one write per pinned
+        # line + per-miss staging writes (SPM path for cold vectors)
+        onchip_writes=misses + len(pinned_lines),
+        offchip_reads=misses,
+        policy=OnChipPolicy.PINNING,
+    )
+
+
+def run_policy(
+    atrace: AddressTrace,
+    hw: HardwareConfig,
+    pinned_lines: np.ndarray | None = None,
+) -> PolicyOutcome:
+    policy = hw.onchip.policy
+    if policy == OnChipPolicy.SPM:
+        return _spm(atrace)
+    if policy in (OnChipPolicy.LRU, OnChipPolicy.SRRIP, OnChipPolicy.FIFO):
+        return _cache(atrace, hw, policy.value)
+    if policy == OnChipPolicy.PINNING:
+        return _pinning(atrace, hw, pinned_lines)
+    raise ValueError(f"unknown policy {policy}")

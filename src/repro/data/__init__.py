@@ -1,0 +1,10 @@
+from .lm import LMDataConfig, lm_batch, lm_batch_iterator
+from .dlrm_data import DLRMDataConfig, dlrm_batch
+
+__all__ = [
+    "LMDataConfig",
+    "lm_batch",
+    "lm_batch_iterator",
+    "DLRMDataConfig",
+    "dlrm_batch",
+]

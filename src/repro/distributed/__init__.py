@@ -1,0 +1,15 @@
+from .sharding import (
+    batch_spec,
+    kv_cache_spec,
+    make_sharding,
+    param_specs,
+    tree_shardings,
+)
+
+__all__ = [
+    "batch_spec",
+    "kv_cache_spec",
+    "make_sharding",
+    "param_specs",
+    "tree_shardings",
+]

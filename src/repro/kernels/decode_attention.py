@@ -1,0 +1,104 @@
+"""Pallas TPU kernel for GQA decode attention (the serving hot loop).
+
+One new token attends over a (B, Hkv, S_max, dh) KV cache with ``valid_len``
+entries populated. Grid (B, Hkv, num_kv_blocks): kv blocks stream through
+VMEM with online-softmax state in scratch; the G = Hq/Hkv query heads of a
+kv group are processed together so grouped heads never materialize. The
+valid length arrives via scalar prefetch and masks the tail block.
+"""
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+DEFAULT_BLOCK_K = 512
+_NEG_INF = -1e30
+
+
+def _decode_kernel(len_ref, q_ref, k_ref, v_ref, o_ref,
+                   acc_ref, m_ref, l_ref, *, block_k: int, sm_scale: float):
+    ik = pl.program_id(2)
+    nk = pl.num_programs(2)
+
+    @pl.when(ik == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+        m_ref[...] = jnp.full_like(m_ref, _NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+
+    q = q_ref[0, 0].astype(jnp.float32)                  # (G, dh)
+    k = k_ref[0, 0].astype(jnp.float32)                  # (bk, dh)
+    v = v_ref[0, 0].astype(jnp.float32)                  # (bk, dh)
+    s = jax.lax.dot_general(
+        q, k, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32
+    ) * sm_scale                                         # (G, bk)
+    span = ik * block_k + jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
+    s = jnp.where(span < len_ref[0], s, _NEG_INF)
+
+    m_prev = m_ref[:, :1]
+    m_new = jnp.maximum(m_prev, jnp.max(s, axis=1, keepdims=True))
+    p = jnp.exp(s - m_new)
+    alpha = jnp.exp(m_prev - m_new)
+    l_ref[...] = jnp.broadcast_to(
+        alpha * l_ref[:, :1] + jnp.sum(p, axis=1, keepdims=True), l_ref.shape
+    )
+    acc_ref[...] = acc_ref[...] * alpha + jax.lax.dot_general(
+        p, v, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32
+    )
+    m_ref[...] = jnp.broadcast_to(m_new, m_ref.shape)
+
+    @pl.when(ik == nk - 1)
+    def _done():
+        o_ref[...] = (acc_ref[...] / jnp.maximum(l_ref[:, :1], 1e-30))[
+            None, None
+        ].astype(o_ref.dtype)
+
+
+def decode_attention_kernel(
+    q: jax.Array,          # (B, Hq, dh) one new token per sequence
+    k: jax.Array,          # (B, Hkv, S_max, dh)
+    v: jax.Array,          # (B, Hkv, S_max, dh)
+    valid_len: jax.Array,  # () int32 — populated cache length
+    *,
+    block_k: int = DEFAULT_BLOCK_K,
+    sm_scale: float | None = None,
+    interpret: bool = True,
+) -> jax.Array:            # (B, Hq, dh)
+    B, Hq, dh = q.shape
+    Hkv, S = k.shape[1], k.shape[2]
+    assert Hq % Hkv == 0
+    G = Hq // Hkv
+    if sm_scale is None:
+        sm_scale = 1.0 / math.sqrt(dh)
+    block_k = min(block_k, S)
+    nk = pl.cdiv(S, block_k)
+
+    qg = q.reshape(B, Hkv, G, dh)
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(B, Hkv, nk),
+        in_specs=[
+            pl.BlockSpec((1, 1, G, dh), lambda b, h, ik, L: (b, h, 0, 0)),
+            pl.BlockSpec((1, 1, block_k, dh), lambda b, h, ik, L: (b, h, ik, 0)),
+            pl.BlockSpec((1, 1, block_k, dh), lambda b, h, ik, L: (b, h, ik, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, G, dh), lambda b, h, ik, L: (b, h, 0, 0)),
+        scratch_shapes=[
+            pltpu.VMEM((G, dh), jnp.float32),
+            pltpu.VMEM((G, 128), jnp.float32),
+            pltpu.VMEM((G, 128), jnp.float32),
+        ],
+    )
+    kernel = functools.partial(_decode_kernel, block_k=block_k, sm_scale=sm_scale)
+    out = pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((B, Hkv, G, dh), q.dtype),
+        interpret=interpret,
+    )(valid_len.reshape(1).astype(jnp.int32), qg, k, v)
+    return out.reshape(B, Hq, dh)

@@ -1,0 +1,152 @@
+"""Pallas TPU kernels for embedding vector operations — THE paper op (Fig. 1).
+
+Three kernels:
+
+  * ``embedding_bag_kernel``   — gather + sum-pool: for each (sample, table)
+    bag, DMA ``L`` dynamically-indexed rows from the HBM-resident table into
+    VMEM (scalar-prefetched indices drive the BlockSpec index_map — the DMA
+    engine does the gather) and accumulate in an f32 VMEM scratch.
+  * ``embedding_gather_kernel`` — pure gather (VectorOp.CONCAT): one row per
+    grid step, e.g. LM token embedding.
+  * ``vmem_gather_pool_kernel`` — gather + pool from a table that is entirely
+    VMEM-resident. This is the TPU realization of the paper's "Profiling"
+    pinning policy: the hot rows live in VMEM and are served without touching
+    HBM; ``ops.embedding_bag_pinned`` splits the index stream into hot/cold
+    and routes the cold remainder through ``embedding_bag_kernel``.
+
+TPU adaptation (DESIGN.md §3): NPU simulators model the gather as cache/SPM
+traffic; on a real TPU the idiomatic equivalent is index-driven DMA from HBM
+with explicit VMEM residency for the hot set. BlockSpecs are (1, D) rows with
+D padded to a multiple of 128 (lane width) by the ops wrapper.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+# --------------------------------------------------------------------------
+# gather + sum-pool (embedding bag)
+# --------------------------------------------------------------------------
+
+def _bag_kernel(idx_ref, row_ref, out_ref, acc_ref):
+    """Grid (B, T, L). ``row_ref`` is the (1, D) table row DMA'd for this
+    (b, t, l) by the index_map; accumulate over l in f32."""
+    l = pl.program_id(2)
+
+    @pl.when(l == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    acc_ref[...] += row_ref[...].astype(jnp.float32)
+
+    @pl.when(l == pl.num_programs(2) - 1)
+    def _done():
+        out_ref[...] = acc_ref[...][None].astype(out_ref.dtype)
+
+
+def embedding_bag_kernel(
+    table: jax.Array,     # (T * R, D)  stacked tables, D % 128 == 0
+    indices: jax.Array,   # (B, T, L) int32, already offset by t * R
+    rows_per_table: int,
+    *,
+    interpret: bool = True,
+) -> jax.Array:           # (B, T, D) pooled sums
+    B, T, L = indices.shape
+    D = table.shape[1]
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(B, T, L),
+        in_specs=[
+            pl.BlockSpec((1, D), lambda b, t, l, idx_ref: (idx_ref[b, t, l], 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, D), lambda b, t, l, idx_ref: (b, t, 0)),
+        scratch_shapes=[pltpu.VMEM((1, D), jnp.float32)],
+    )
+    return pl.pallas_call(
+        _bag_kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((B, T, D), table.dtype),
+        interpret=interpret,
+    )(indices, table)
+
+
+# --------------------------------------------------------------------------
+# pure gather (token embedding)
+# --------------------------------------------------------------------------
+
+def _gather_kernel(idx_ref, row_ref, out_ref):
+    out_ref[...] = row_ref[...]
+
+
+def embedding_gather_kernel(
+    table: jax.Array,     # (R, D), D % 128 == 0
+    indices: jax.Array,   # (N,) int32
+    *,
+    interpret: bool = True,
+) -> jax.Array:           # (N, D)
+    (N,) = indices.shape
+    D = table.shape[1]
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(N,),
+        in_specs=[pl.BlockSpec((1, D), lambda i, idx_ref: (idx_ref[i], 0))],
+        out_specs=pl.BlockSpec((1, D), lambda i, idx_ref: (i, 0)),
+    )
+    return pl.pallas_call(
+        _gather_kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((N, D), table.dtype),
+        interpret=interpret,
+    )(indices, table)
+
+
+# --------------------------------------------------------------------------
+# VMEM-resident hot-table gather + pool (paper's Profiling policy on TPU)
+# --------------------------------------------------------------------------
+
+def _vmem_pool_kernel(idx_ref, mask_ref, hot_ref, out_ref, acc_ref):
+    """Grid (B, T). The whole hot table is one VMEM operand; gather rows with
+    dynamic slices, masking lookups that were not hot (mask==0)."""
+    b = pl.program_id(0)
+    t = pl.program_id(1)
+    L = idx_ref.shape[2]
+
+    def body(l, acc):
+        pos = idx_ref[b, t, l]
+        m = mask_ref[b, t, l].astype(jnp.float32)
+        row = hot_ref[pl.dslice(pos, 1), :].astype(jnp.float32)
+        return acc + m * row
+
+    acc = jnp.zeros_like(acc_ref)
+    acc = jax.lax.fori_loop(0, L, body, acc)
+    out_ref[...] = acc[None].astype(out_ref.dtype)
+
+
+def vmem_gather_pool_kernel(
+    hot_table: jax.Array,   # (H, D) VMEM-resident hot rows
+    positions: jax.Array,   # (B, T, L) int32 position in hot_table (0 if cold)
+    mask: jax.Array,        # (B, T, L) int32 1 = hot lookup, 0 = cold
+    *,
+    interpret: bool = True,
+) -> jax.Array:             # (B, T, D) pooled hot contributions
+    B, T, L = positions.shape
+    H, D = hot_table.shape
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,
+        grid=(B, T),
+        in_specs=[pl.BlockSpec((H, D), lambda b, t, *_: (0, 0))],
+        out_specs=pl.BlockSpec((1, 1, D), lambda b, t, *_: (b, t, 0)),
+        scratch_shapes=[pltpu.VMEM((1, D), jnp.float32)],
+    )
+    return pl.pallas_call(
+        _vmem_pool_kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((B, T, D), hot_table.dtype),
+        interpret=interpret,
+    )(positions, mask, hot_table)

@@ -1,0 +1,125 @@
+"""Pallas TPU flash attention (tiled online softmax).
+
+Used by the LM-family architectures for training and prefill. GQA is handled
+structurally: the kv BlockSpec index_map maps query head h to kv head
+h // group_size, so grouped kv heads are never materialized.
+
+Grid: (batch, q_heads, num_q_blocks, num_kv_blocks); the kv axis iterates
+fastest, with running (max, sum, acc) state in VMEM scratch — the standard
+TPU flash schedule. Causal masking skips fully-masked kv blocks via pl.when
+and masks the diagonal block with iota comparisons.
+"""
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+DEFAULT_BLOCK_Q = 128
+DEFAULT_BLOCK_K = 128
+_NEG_INF = -1e30
+
+
+def _flash_kernel(
+    q_ref, k_ref, v_ref, out_ref,
+    acc_ref, m_ref, l_ref,
+    *, causal: bool, sm_scale: float, block_q: int, block_k: int,
+):
+    iq = pl.program_id(2)
+    ik = pl.program_id(3)
+    nk = pl.num_programs(3)
+
+    @pl.when(ik == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+        m_ref[...] = jnp.full_like(m_ref, _NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+
+    # With causal masking, blocks strictly above the diagonal contribute
+    # nothing; skip their math entirely.
+    run = True
+    if causal:
+        run = ik * block_k <= (iq + 1) * block_q - 1
+
+    @pl.when(run)
+    def _compute():
+        q = q_ref[0, 0].astype(jnp.float32)          # (Bq, d)
+        k = k_ref[0, 0].astype(jnp.float32)          # (Bk, d)
+        v = v_ref[0, 0].astype(jnp.float32)          # (Bk, d)
+        s = jax.lax.dot_general(
+            q, k, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32
+        ) * sm_scale                                  # (Bq, Bk)
+        if causal:
+            rows = iq * block_q + jax.lax.broadcasted_iota(jnp.int32, s.shape, 0)
+            cols = ik * block_k + jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
+            s = jnp.where(rows >= cols, s, _NEG_INF)
+
+        m_prev = m_ref[:, :1]                         # (Bq, 1)
+        m_cur = jnp.max(s, axis=1, keepdims=True)
+        m_new = jnp.maximum(m_prev, m_cur)
+        p = jnp.exp(s - m_new)                        # (Bq, Bk)
+        alpha = jnp.exp(m_prev - m_new)               # (Bq, 1)
+        l_new = alpha * l_ref[:, :1] + jnp.sum(p, axis=1, keepdims=True)
+        acc_ref[...] = acc_ref[...] * alpha + jax.lax.dot_general(
+            p, v, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32
+        )
+        m_ref[...] = jnp.broadcast_to(m_new, m_ref.shape)
+        l_ref[...] = jnp.broadcast_to(l_new, l_ref.shape)
+
+    @pl.when(ik == nk - 1)
+    def _done():
+        out_ref[...] = (acc_ref[...] / jnp.maximum(l_ref[:, :1], 1e-30))[
+            None, None
+        ].astype(out_ref.dtype)
+
+
+def flash_attention_kernel(
+    q: jax.Array,          # (B, Hq, S, d)
+    k: jax.Array,          # (B, Hkv, S, d)
+    v: jax.Array,          # (B, Hkv, S, d)
+    *,
+    causal: bool = True,
+    sm_scale: float | None = None,
+    block_q: int = DEFAULT_BLOCK_Q,
+    block_k: int = DEFAULT_BLOCK_K,
+    interpret: bool = True,
+) -> jax.Array:
+    B, Hq, S, d = q.shape
+    Hkv = k.shape[1]
+    assert Hq % Hkv == 0, (Hq, Hkv)
+    group = Hq // Hkv
+    if sm_scale is None:
+        sm_scale = 1.0 / math.sqrt(d)
+    block_q = min(block_q, S)
+    block_k = min(block_k, S)
+    nq = pl.cdiv(S, block_q)
+    nk = pl.cdiv(S, block_k)
+
+    kernel = functools.partial(
+        _flash_kernel,
+        causal=causal,
+        sm_scale=sm_scale,
+        block_q=block_q,
+        block_k=block_k,
+    )
+    return pl.pallas_call(
+        kernel,
+        grid=(B, Hq, nq, nk),
+        in_specs=[
+            pl.BlockSpec((1, 1, block_q, d), lambda b, h, iq, ik: (b, h, iq, 0)),
+            pl.BlockSpec((1, 1, block_k, d), lambda b, h, iq, ik: (b, h // group, ik, 0)),
+            pl.BlockSpec((1, 1, block_k, d), lambda b, h, iq, ik: (b, h // group, ik, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, block_q, d), lambda b, h, iq, ik: (b, h, iq, 0)),
+        out_shape=jax.ShapeDtypeStruct(q.shape, q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((block_q, d), jnp.float32),
+            pltpu.VMEM((block_q, 128), jnp.float32),
+            pltpu.VMEM((block_q, 128), jnp.float32),
+        ],
+        interpret=interpret,
+    )(q, k, v)

@@ -1,0 +1,100 @@
+"""Pallas TPU kernel for the Mamba2 SSD (state-space duality) scan.
+
+Chunked SSD: the sequence is processed in chunks of ``chunk`` steps; within a
+chunk the recurrence is expanded into attention-like matmuls (MXU-friendly),
+while a (P, N) state carried in VMEM scratch propagates across chunks
+(grid iterates chunks sequentially — Pallas TPU guarantees sequential grid
+order, which the carried scratch state relies on).
+
+Semantics (per batch b, head h; ngroups = 1):
+    state_t = exp(A_h dt_t) * state_{t-1} + dt_t * x_t ⊗ B_t
+    y_t     = state_t @ C_t
+
+Inputs are pre-arranged by ops.py: x (B,H,S,P), adt = A*dt (B,H,S),
+dt (B,H,S), Bm (B,S,N), C (B,S,N).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+DEFAULT_CHUNK = 128
+
+
+def _ssd_kernel(x_ref, adt_ref, dt_ref, b_ref, c_ref, out_ref, state_ref):
+    ci = pl.program_id(2)
+
+    @pl.when(ci == 0)
+    def _init():
+        state_ref[...] = jnp.zeros_like(state_ref)
+
+    xc = x_ref[0, 0].astype(jnp.float32)        # (Q, P)
+    a = adt_ref[0, 0].astype(jnp.float32)       # (Q,)
+    dt = dt_ref[0, 0].astype(jnp.float32)       # (Q,)
+    Bc = b_ref[0].astype(jnp.float32)           # (Q, N)
+    Cc = c_ref[0].astype(jnp.float32)           # (Q, N)
+
+    cum = jnp.cumsum(a)                         # (Q,) inclusive
+    # intra-chunk: y[i] += sum_{j<=i} exp(cum i - cum j) dt[j] (C_i.B_j) x[j]
+    diff = cum[:, None] - cum[None, :]
+    mask = jax.lax.broadcasted_iota(jnp.int32, diff.shape, 0) >= \
+        jax.lax.broadcasted_iota(jnp.int32, diff.shape, 1)
+    decay = jnp.where(mask, jnp.exp(diff), 0.0)
+    scores = jax.lax.dot_general(
+        Cc, Bc, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32
+    ) * decay * dt[None, :]
+    y = jax.lax.dot_general(
+        scores, xc, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32
+    )                                           # (Q, P)
+
+    # inter-chunk: y[i] += exp(cum i) * C_i @ state^T
+    state = state_ref[...]                      # (P, N)
+    y += jnp.exp(cum)[:, None] * jax.lax.dot_general(
+        Cc, state, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32
+    )
+
+    # state update: S <- exp(cum[-1]) S + x^T (exp(cum[-1]-cum) dt ⊙ B)
+    w = jnp.exp(cum[-1] - cum) * dt             # (Q,)
+    state_ref[...] = state * jnp.exp(cum[-1]) + jax.lax.dot_general(
+        xc, w[:, None] * Bc, (((0,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32,
+    )
+
+    out_ref[...] = y[None, None].astype(out_ref.dtype)
+
+
+def mamba2_ssd_kernel(
+    x: jax.Array,      # (B, H, S, P)
+    adt: jax.Array,    # (B, H, S)  A_h * dt  (negative)
+    dt: jax.Array,     # (B, H, S)
+    Bm: jax.Array,     # (B, S, N)
+    C: jax.Array,      # (B, S, N)
+    *,
+    chunk: int = DEFAULT_CHUNK,
+    interpret: bool = True,
+) -> jax.Array:        # (B, H, S, P)
+    B, H, S, P = x.shape
+    N = Bm.shape[-1]
+    chunk = min(chunk, S)
+    assert S % chunk == 0, (S, chunk)
+    nc = S // chunk
+
+    return pl.pallas_call(
+        _ssd_kernel,
+        grid=(B, H, nc),
+        in_specs=[
+            pl.BlockSpec((1, 1, chunk, P), lambda b, h, c: (b, h, c, 0)),
+            pl.BlockSpec((1, 1, chunk), lambda b, h, c: (b, h, c)),
+            pl.BlockSpec((1, 1, chunk), lambda b, h, c: (b, h, c)),
+            pl.BlockSpec((1, chunk, N), lambda b, h, c: (b, c, 0)),
+            pl.BlockSpec((1, chunk, N), lambda b, h, c: (b, c, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, chunk, P), lambda b, h, c: (b, h, c, 0)),
+        out_shape=jax.ShapeDtypeStruct(x.shape, x.dtype),
+        scratch_shapes=[pltpu.VMEM((P, N), jnp.float32)],
+        interpret=interpret,
+    )(x, adt, dt, Bm, C)

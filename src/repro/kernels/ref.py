@@ -1,0 +1,173 @@
+"""Pure-jnp oracles for every Pallas kernel (the allclose targets)."""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+
+def embedding_bag_ref(table: jax.Array, indices: jax.Array) -> jax.Array:
+    """table (T*R, D), indices (B, T, L) pre-offset -> (B, T, D) sum-pool."""
+    gathered = table[indices]                 # (B, T, L, D)
+    return gathered.astype(jnp.float32).sum(axis=2).astype(table.dtype)
+
+
+def embedding_gather_ref(table: jax.Array, indices: jax.Array) -> jax.Array:
+    return table[indices]
+
+
+def embedding_bag_pinned_ref(
+    hot_table: jax.Array,     # (H, D)
+    positions: jax.Array,     # (B, T, L) position in hot table (0 if cold)
+    mask: jax.Array,          # (B, T, L) 1 = hot
+) -> jax.Array:
+    rows = hot_table[positions].astype(jnp.float32)          # (B, T, L, D)
+    rows = rows * mask[..., None].astype(jnp.float32)
+    return rows.sum(axis=2).astype(hot_table.dtype)
+
+
+def flash_attention_ref(
+    q: jax.Array,   # (B, Hq, S, d)
+    k: jax.Array,   # (B, Hkv, S, d)
+    v: jax.Array,
+    *,
+    causal: bool = True,
+    sm_scale: float | None = None,
+) -> jax.Array:
+    B, Hq, S, d = q.shape
+    Hkv = k.shape[1]
+    if sm_scale is None:
+        sm_scale = 1.0 / math.sqrt(d)
+    group = Hq // Hkv
+    kf = jnp.repeat(k, group, axis=1).astype(jnp.float32)
+    vf = jnp.repeat(v, group, axis=1).astype(jnp.float32)
+    s = jnp.einsum("bhqd,bhkd->bhqk", q.astype(jnp.float32), kf) * sm_scale
+    if causal:
+        mask = jnp.tril(jnp.ones((S, S), dtype=bool))
+        s = jnp.where(mask[None, None], s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("bhqk,bhkd->bhqd", p, vf).astype(q.dtype)
+
+
+def chunked_attention(
+    q: jax.Array,   # (B, Hq, S, dq)
+    k: jax.Array,   # (B, Hkv, Sk, dq)
+    v: jax.Array,   # (B, Hkv, Sk, dv)
+    *,
+    causal: bool = True,
+    sm_scale: float | None = None,
+    k_block: int = 512,
+) -> jax.Array:
+    """Online-softmax attention as a lax.scan over kv blocks — the XLA path
+    for long prefill (never materializes (S, Sk) scores). Supports GQA
+    without repeating kv, and dv != dq (MLA)."""
+    B, Hq, S, dq = q.shape
+    Hkv, Sk = k.shape[1], k.shape[2]
+    dv = v.shape[-1]
+    G = Hq // Hkv
+    if sm_scale is None:
+        sm_scale = 1.0 / math.sqrt(dq)
+    k_block = min(k_block, Sk)
+    pad = (-Sk) % k_block
+    if pad:
+        k = jnp.pad(k, ((0, 0), (0, 0), (0, pad), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, 0), (0, pad), (0, 0)))
+    nkb = (Sk + pad) // k_block
+    kb = k.reshape(B, Hkv, nkb, k_block, dq).transpose(2, 0, 1, 3, 4)
+    vb = v.reshape(B, Hkv, nkb, k_block, dv).transpose(2, 0, 1, 3, 4)
+
+    rows = jnp.arange(S)
+
+    def body(carry, inp):
+        m, l, acc = carry
+        kc, vc, ib = inp
+        # GQA: expand kv per block only (cheap; keeps the q head dim intact
+        # so head sharding propagates cleanly under GSPMD)
+        kc = jnp.repeat(kc, G, axis=1)                 # (B, Hq, kb, dq)
+        vc = jnp.repeat(vc, G, axis=1)
+        s = jnp.einsum(
+            "bhsd,bhtd->bhst", q, kc, preferred_element_type=jnp.float32
+        ) * sm_scale
+        cols = ib * k_block + jnp.arange(k_block)
+        mask = cols[None, :] < Sk
+        if causal:
+            mask = mask & (rows[:, None] >= cols[None, :])
+        s = jnp.where(mask[None, None], s, -1e30)
+        m_new = jnp.maximum(m, s.max(-1, keepdims=True))
+        p = jnp.exp(s - m_new)
+        alpha = jnp.exp(m - m_new)
+        l = l * alpha + p.sum(-1, keepdims=True)
+        acc = acc * alpha + jnp.einsum(
+            "bhst,bhtd->bhsd", p.astype(v.dtype), vc,
+            preferred_element_type=jnp.float32,
+        )
+        return (m_new, l, acc), None
+
+    m0 = jnp.full((B, Hq, S, 1), -1e30, jnp.float32)
+    l0 = jnp.zeros((B, Hq, S, 1), jnp.float32)
+    a0 = jnp.zeros((B, Hq, S, dv), jnp.float32)
+    (m, l, acc), _ = jax.lax.scan(body, (m0, l0, a0), (kb, vb, jnp.arange(nkb)))
+    out = acc / jnp.maximum(l, 1e-30)
+    return out.astype(q.dtype)
+
+
+def decode_attention_ref(
+    q: jax.Array,          # (B, Hq, dh)
+    k: jax.Array,          # (B, Hkv, S, dh)
+    v: jax.Array,
+    valid_len: jax.Array,  # () int32
+) -> jax.Array:            # (B, Hq, dh)
+    B, Hq, dh = q.shape
+    Hkv, S = k.shape[1], k.shape[2]
+    G = Hq // Hkv
+    kf = jnp.repeat(k, G, axis=1).astype(jnp.float32)
+    vf = jnp.repeat(v, G, axis=1).astype(jnp.float32)
+    s = jnp.einsum("bhd,bhkd->bhk", q.astype(jnp.float32), kf) / math.sqrt(dh)
+    s = jnp.where(jnp.arange(S)[None, None, :] < valid_len, s, -1e30)
+    w = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("bhk,bhkd->bhd", w, vf).astype(q.dtype)
+
+
+def mamba2_final_state(
+    x: jax.Array,    # (B, H, S, P)
+    adt: jax.Array,  # (B, H, S)
+    dt: jax.Array,   # (B, H, S)
+    Bm: jax.Array,   # (B, S, N)
+) -> jax.Array:      # (B, H, P, N) — state after the full sequence
+    cum = jnp.cumsum(adt.astype(jnp.float32), axis=-1)
+    w = jnp.exp(cum[..., -1:] - cum) * dt.astype(jnp.float32)     # (B,H,S)
+    return jnp.einsum("bhs,bhsp,bsn->bhpn", w, x.astype(jnp.float32),
+                      Bm.astype(jnp.float32))
+
+
+def mamba2_ssd_ref(
+    x: jax.Array,    # (B, H, S, P)
+    adt: jax.Array,  # (B, H, S)
+    dt: jax.Array,   # (B, H, S)
+    Bm: jax.Array,   # (B, S, N)
+    C: jax.Array,    # (B, S, N)
+) -> jax.Array:      # (B, H, S, P)
+    """Exact sequential recurrence (lax.scan over time)."""
+    Bsz, H, S, P = x.shape
+    N = Bm.shape[-1]
+
+    def step(state, inp):
+        x_t, adt_t, dt_t, b_t, c_t = inp
+        # state (B, H, P, N)
+        decay = jnp.exp(adt_t)[..., None, None]               # (B, H, 1, 1)
+        outer = (dt_t[..., None, None] * x_t[..., :, None]) * b_t[:, None, None, :]
+        state = decay * state + outer
+        y_t = jnp.einsum("bhpn,bn->bhp", state, c_t)
+        return state, y_t
+
+    xs = (
+        jnp.moveaxis(x, 2, 0).astype(jnp.float32),
+        jnp.moveaxis(adt, 2, 0).astype(jnp.float32),
+        jnp.moveaxis(dt, 2, 0).astype(jnp.float32),
+        jnp.moveaxis(Bm, 1, 0).astype(jnp.float32),
+        jnp.moveaxis(C, 1, 0).astype(jnp.float32),
+    )
+    state0 = jnp.zeros((Bsz, H, P, N), dtype=jnp.float32)
+    _, ys = jax.lax.scan(step, state0, xs)
+    return jnp.moveaxis(ys, 0, 2).astype(x.dtype)

@@ -1,0 +1,352 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: lower + compile every (architecture x input-shape) cell
+on the production meshes and record memory / cost / collective analysis.
+
+    PYTHONPATH=src python -m repro.launch.dryrun --all
+    PYTHONPATH=src python -m repro.launch.dryrun --arch arctic_480b --shape train_4k --mesh pod
+
+The first two lines above MUST run before any jax import (jax locks the
+device count at first init); 512 placeholder CPU devices back both the
+(16,16) single-pod and (2,16,16) multi-pod meshes.
+"""
+
+import argparse
+import dataclasses
+import functools
+import json
+import time
+import traceback
+from typing import Any, Dict, Optional
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.models import (
+    ARCH_IDS,
+    SHAPES_BY_NAME,
+    family_module,
+    get_config,
+    param_count,
+    shapes_for,
+)
+from repro.models.config import ArchConfig, ShapeConfig
+from repro.distributed import batch_spec, kv_cache_spec, param_specs, tree_shardings
+from repro.distributed.sharding import greedy_spec
+from repro.training import AdamWConfig, TrainConfig, build_train_step, init_state
+from repro.serving import ServeConfig, build_prefill, build_serve_step, init_cache
+from repro.launch.mesh import make_production_mesh
+from repro.launch import hlo_analysis
+
+RESULTS_DIR = os.path.join(os.path.dirname(__file__), "..", "..", "..", "results", "dryrun")
+
+
+# --------------------------------------------------------------------------
+# per-cell configuration
+# --------------------------------------------------------------------------
+
+def _dp_degree(mesh) -> int:
+    axes = dict(zip(mesh.axis_names, mesh.devices.shape))
+    return axes.get("data", 1) * axes.get("pod", 1)
+
+
+def pick_microbatches(B: int, S: int, dp: int, target_tokens: int = 4096) -> int:
+    """Smallest microbatch count whose per-device-per-microbatch token count
+    is <= target, with (B/mb) still divisible by the DP degree."""
+    tokens_per_dev = B * S // dp
+    cands = [m for m in range(1, B + 1) if B % m == 0 and (B // m) % dp == 0]
+    for m in sorted(cands):
+        if tokens_per_dev // m <= target_tokens:
+            return m
+    return max(cands) if cands else 1
+
+
+def train_config(cfg: ArchConfig, shape: ShapeConfig, mesh) -> TrainConfig:
+    dp = _dp_degree(mesh)
+    mb = pick_microbatches(shape.global_batch, shape.seq_len, dp)
+    quant = param_count(cfg) > 2e11      # 8-bit moments for the 480B arch
+    return TrainConfig(
+        adamw=AdamWConfig(quantize_state=quant),
+        microbatches=mb,
+        remat=True,
+        loss_chunk=512,
+    )
+
+
+def _arch_for_mesh(cfg: ArchConfig, mesh) -> ArchConfig:
+    """Align MoE dispatch groups with the DP degree of the target mesh."""
+    if cfg.moe is not None:
+        dp = _dp_degree(mesh)
+        cfg = cfg.replace(moe=dataclasses.replace(cfg.moe, dispatch_groups=dp))
+    return cfg
+
+
+# --------------------------------------------------------------------------
+# input specs (ShapeDtypeStruct stand-ins — no allocation)
+# --------------------------------------------------------------------------
+
+def sds(shape, dtype):
+    return jax.ShapeDtypeStruct(tuple(shape), dtype)
+
+
+def input_specs(cfg: ArchConfig, shape: ShapeConfig) -> Dict[str, Any]:
+    """Model-input stand-ins for one cell (tokens/labels for training, the
+    request batch + caches for serving)."""
+    B, S = shape.global_batch, shape.seq_len
+    if shape.kind == "train":
+        out = {"tokens": sds((B, S), jnp.int32), "labels": sds((B, S), jnp.int32)}
+        if cfg.family == "audio":
+            out["frames"] = sds((B, cfg.encdec.encoder_seq, cfg.d_model), jnp.bfloat16)
+        return out
+    if shape.kind == "prefill":
+        out = {"tokens": sds((B, S), jnp.int32)}
+        if cfg.family == "audio":
+            out["enc_out"] = sds((B, cfg.encdec.encoder_seq, cfg.d_model), jnp.bfloat16)
+        return out
+    # decode: one new token against a cache of S
+    out = {"tokens": sds((B, 1), jnp.int32), "cache_index": sds((), jnp.int32)}
+    if cfg.family == "audio":
+        out["enc_out"] = sds((B, cfg.encdec.encoder_seq, cfg.d_model), jnp.bfloat16)
+    return out
+
+
+def serve_cache_specs(cfg: ArchConfig, shape: ShapeConfig, mesh, cache_shapes):
+    """PartitionSpecs for the family-specific cache pytree."""
+    axes = dict(zip(mesh.axis_names, mesh.devices.shape))
+    dp = ("pod", "data") if "pod" in axes else "data"
+
+    if cfg.family == "ssm":
+        ssm_s, conv_s = cache_shapes
+        return (
+            greedy_spec(ssm_s.shape, mesh, [(1, dp), (2, "model"), (3, "model")]),
+            greedy_spec(conv_s.shape, mesh, [(1, dp), (3, "model")]),
+        )
+    if cfg.family == "hybrid":
+        ssm_s, conv_s, (k_s, v_s) = cache_shapes
+        kv = greedy_spec(
+            k_s.shape, mesh, [(1, dp), (2, "model"), (3, "data"), (4, "model")]
+        )
+        return (
+            greedy_spec(ssm_s.shape, mesh, [(2, dp), (3, "model"), (4, "model")]),
+            greedy_spec(conv_s.shape, mesh, [(2, dp), (4, "model")]),
+            (kv, kv),
+        )
+    if cfg.mla is not None:
+        lat = cache_shapes
+        return greedy_spec(lat.shape, mesh, [(1, dp), (2, "model")])
+    # GQA / MQA / audio: (L, B, Hkv, S, dh)
+    k_s, v_s = cache_shapes
+    kv = greedy_spec(
+        k_s.shape, mesh, [(1, dp), (2, "model"), (3, "data"), (4, "model")]
+    )
+    return (kv, kv)
+
+
+def logits_spec(cfg: ArchConfig, B: int, mesh):
+    axes = dict(zip(mesh.axis_names, mesh.devices.shape))
+    dp = ("pod", "data") if "pod" in axes else "data"
+    dp_size = np.prod([axes[a] for a in (dp if isinstance(dp, tuple) else (dp,))])
+    b_ax = dp if B % dp_size == 0 else None
+    v_ax = "model" if cfg.vocab % axes["model"] == 0 else None
+    return P(b_ax, None, v_ax)
+
+
+# --------------------------------------------------------------------------
+# cell builders: (fn, arg_shapes, in_shardings, out_shardings)
+# --------------------------------------------------------------------------
+
+def build_train_cell(cfg: ArchConfig, shape: ShapeConfig, mesh):
+    tcfg = train_config(cfg, shape, mesh)
+    step_fn = build_train_step(cfg, tcfg)
+
+    key = jax.random.PRNGKey(0)
+    state_shapes = jax.eval_shape(functools.partial(init_state, key, cfg, tcfg))
+    state_specs = param_specs(state_shapes, mesh)
+
+    binputs = input_specs(cfg, shape)
+    bspec = batch_spec(shape, mesh)
+    batch_specs_tree = {k: bspec if v.ndim == 2 else P(bspec[0], None, None)
+                        for k, v in binputs.items()}
+
+    metrics_shapes = jax.eval_shape(step_fn, state_shapes, binputs)[1]
+    metrics_specs = jax.tree.map(lambda _: P(), metrics_shapes)
+
+    in_sh = (tree_shardings(mesh, state_specs), tree_shardings(mesh, batch_specs_tree))
+    out_sh = (tree_shardings(mesh, state_specs), tree_shardings(mesh, metrics_specs))
+    return step_fn, (state_shapes, binputs), in_sh, out_sh
+
+
+def build_serve_cell(cfg: ArchConfig, shape: ShapeConfig, mesh):
+    B, S = shape.global_batch, shape.seq_len
+    scfg = ServeConfig(batch=B, max_seq=S, use_pallas=False)
+    mod = family_module(cfg)
+
+    params_shapes = jax.eval_shape(
+        functools.partial(
+            mod.init_model if cfg.family == "audio" else mod.init_lm,
+            jax.random.PRNGKey(0), cfg,
+        )
+    )
+    p_specs = param_specs(params_shapes, mesh)
+    cache_shapes = jax.eval_shape(functools.partial(init_cache, cfg, scfg))
+    c_specs = serve_cache_specs(cfg, shape, mesh, cache_shapes)
+    l_spec = logits_spec(cfg, B, mesh)
+
+    ins = input_specs(cfg, shape)
+    axes = dict(zip(mesh.axis_names, mesh.devices.shape))
+    dp = ("pod", "data") if "pod" in axes else "data"
+    dp_size = int(np.prod([axes[a] for a in (dp if isinstance(dp, tuple) else (dp,))]))
+    tok_spec = P(dp if B % dp_size == 0 else None, None)
+    enc_spec = P(dp if B % dp_size == 0 else None, None, None)
+
+    if shape.kind == "prefill":
+        fn = build_prefill(cfg, scfg)
+        args = [params_shapes, ins["tokens"], cache_shapes]
+        in_specs = [p_specs, tok_spec, c_specs]
+        if cfg.family == "audio":
+            args.append(ins["enc_out"])
+            in_specs.append(enc_spec)
+        out_specs = (l_spec, c_specs)
+    else:
+        fn = build_serve_step(cfg, scfg)
+        args = [params_shapes, ins["tokens"], ins["cache_index"], cache_shapes]
+        in_specs = [p_specs, tok_spec, P(), c_specs]
+        if cfg.family == "audio":
+            args.append(ins["enc_out"])
+            in_specs.append(enc_spec)
+        out_specs = (l_spec, c_specs)
+
+    in_sh = tuple(tree_shardings(mesh, s) for s in in_specs)
+    out_sh = tree_shardings(mesh, out_specs)
+    return fn, tuple(args), in_sh, out_sh
+
+
+# --------------------------------------------------------------------------
+# run one cell
+# --------------------------------------------------------------------------
+
+def run_cell(arch: str, shape_name: str, mesh_kind: str, save: bool = True,
+             force: bool = False) -> Dict[str, Any]:
+    os.makedirs(RESULTS_DIR, exist_ok=True)
+    out_path = os.path.join(RESULTS_DIR, f"{arch}__{shape_name}__{mesh_kind}.json")
+    if save and not force and os.path.exists(out_path):
+        with open(out_path) as f:
+            return json.load(f)
+
+    mesh = make_production_mesh(multi_pod=(mesh_kind == "multipod"))
+    cfg = _arch_for_mesh(get_config(arch), mesh)
+    shape = SHAPES_BY_NAME[shape_name]
+    n_chips = int(np.prod(mesh.devices.shape))
+
+    rec: Dict[str, Any] = {
+        "arch": arch, "shape": shape_name, "mesh": mesh_kind,
+        "mesh_shape": list(mesh.devices.shape), "chips": n_chips,
+        "params": param_count(cfg), "active_params": param_count(cfg, True),
+        "status": "ok",
+    }
+    t0 = time.time()
+    try:
+        # set_mesh (not the bare Mesh context) exposes the abstract mesh at
+        # trace time, which distributed.sharding.fsdp_unshard relies on.
+        with jax.sharding.set_mesh(mesh):
+            if shape.kind == "train":
+                fn, args, in_sh, out_sh = build_train_cell(cfg, shape, mesh)
+            else:
+                fn, args, in_sh, out_sh = build_serve_cell(cfg, shape, mesh)
+            jitted = jax.jit(fn, in_shardings=in_sh, out_shardings=out_sh)
+            lowered = jitted.lower(*args)
+            rec["lower_s"] = time.time() - t0
+            t1 = time.time()
+            compiled = lowered.compile()
+            rec["compile_s"] = time.time() - t1
+
+            try:
+                ma = compiled.memory_analysis()
+                rec["memory"] = {
+                    "argument_bytes": getattr(ma, "argument_size_in_bytes", None),
+                    "output_bytes": getattr(ma, "output_size_in_bytes", None),
+                    "temp_bytes": getattr(ma, "temp_size_in_bytes", None),
+                    "generated_code_bytes": getattr(ma, "generated_code_size_in_bytes", None),
+                }
+                print(f"[{arch}/{shape_name}/{mesh_kind}] memory_analysis:", rec["memory"])
+            except Exception as e:  # pragma: no cover
+                rec["memory"] = {"error": str(e)}
+
+            try:
+                ca = compiled.cost_analysis()
+                ca = ca[0] if isinstance(ca, (list, tuple)) else ca
+                rec["xla_cost"] = {
+                    "flops": float(ca.get("flops", -1)),
+                    "bytes_accessed": float(ca.get("bytes accessed", -1)),
+                }
+                print(f"[{arch}/{shape_name}/{mesh_kind}] cost_analysis:", rec["xla_cost"])
+            except Exception as e:  # pragma: no cover
+                rec["xla_cost"] = {"error": str(e)}
+
+            txt = compiled.as_text()
+            hc = hlo_analysis.analyze(txt)
+            rec["hlo"] = {
+                "flops_per_device": hc.flops,
+                "bytes_per_device": hc.bytes,
+                "collective_bytes_per_device": hc.collectives,
+                "unknown_trip_loops": hc.unknown_trip_loops,
+                "hlo_chars": len(txt),
+            }
+    except Exception as e:
+        rec["status"] = "error"
+        rec["error"] = f"{type(e).__name__}: {e}"
+        rec["traceback"] = traceback.format_exc()[-4000:]
+        print(f"[{arch}/{shape_name}/{mesh_kind}] FAILED: {rec['error']}")
+    rec["total_s"] = time.time() - t0
+
+    if save:
+        with open(out_path, "w") as f:
+            json.dump(rec, f, indent=2)
+    return rec
+
+
+def all_cells():
+    for arch in ARCH_IDS:
+        cfg = get_config(arch)
+        for shape in shapes_for(cfg):
+            yield arch, shape.name
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch")
+    ap.add_argument("--shape")
+    ap.add_argument("--mesh", default="pod", choices=["pod", "multipod", "both"])
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--force", action="store_true")
+    ap.add_argument("--list", action="store_true")
+    args = ap.parse_args()
+
+    if args.list:
+        for a, s in all_cells():
+            print(f"{a} {s}")
+        return
+
+    meshes = ["pod", "multipod"] if args.mesh == "both" else [args.mesh]
+    cells = list(all_cells()) if args.all else [(args.arch, args.shape)]
+    n_ok = n_fail = 0
+    for arch, shape in cells:
+        for mk in meshes:
+            rec = run_cell(arch, shape, mk, force=args.force)
+            ok = rec["status"] == "ok"
+            n_ok += ok
+            n_fail += not ok
+            print(
+                f"{'OK  ' if ok else 'FAIL'} {arch:24s} {shape:12s} {mk:8s} "
+                f"compile={rec.get('compile_s', 0):6.1f}s"
+            )
+    print(f"\n{n_ok} ok, {n_fail} failed")
+    raise SystemExit(1 if n_fail else 0)
+
+
+if __name__ == "__main__":
+    main()

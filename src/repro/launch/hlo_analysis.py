@@ -1,0 +1,255 @@
+"""Post-SPMD HLO static analysis for the roofline.
+
+XLA's ``compiled.cost_analysis()`` counts ``while`` (lax.scan) bodies ONCE
+(measured: a 4-step scanned matmul reports 1/4 the FLOPs of its unrolled
+equivalent), which would corrupt every scan-over-layers roofline. This module
+walks the compiled per-device HLO text instead:
+
+  * per-computation symbol tables resolve operand shapes (HLO operand lists
+    carry names, not types),
+  * the computation call graph (fusion ``calls=``, while ``body=`` /
+    ``condition=``) is evaluated with while bodies multiplied by their trip
+    count (``backend_config known_trip_count``; unknown trips counted and
+    reported),
+  * dot FLOPs computed exactly from result shape x contraction size (dnums),
+  * elementwise FLOPs counted 1/element,
+  * collective operand bytes per kind (all-gather / all-reduce /
+    reduce-scatter / all-to-all / collective-permute),
+  * byte traffic: operands+result of computation-scope ops (fusion internals
+    are on-chip by construction) — an HBM-traffic estimate, documented as
+    such.
+
+Validated against unrolled-vs-scanned equivalence in tests.
+"""
+from __future__ import annotations
+
+import re
+from collections import defaultdict
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Tuple
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s4": 1, "u4": 1,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8,
+    "c64": 8, "c128": 16, "f8e4m3fn": 1, "f8e5m2": 1,
+}
+
+COLLECTIVES = (
+    "all-gather",
+    "all-reduce",
+    "reduce-scatter",
+    "all-to-all",
+    "collective-permute",
+)
+
+_ELEMENTWISE = {
+    "add", "subtract", "multiply", "divide", "maximum", "minimum",
+    "exponential", "rsqrt", "sqrt", "tanh", "logistic", "log", "negate",
+    "power", "compare", "select",
+}
+
+_SHAPE_RE = re.compile(
+    r"(pred|s4|u4|s8|u8|s16|u16|bf16|f16|s32|u32|f32|s64|u64|f64|c64|c128|"
+    r"f8e4m3fn|f8e5m2)\[([\d,]*)\]"
+)
+_HEADER_RE = re.compile(r"^\s*(ENTRY\s+)?%?([\w\.\-]+)\s*\((.*)\)\s*->\s*.*\{\s*$")
+_LINE_RE = re.compile(
+    r"^\s*(?:ROOT\s+)?%?([\w\.\-]+)\s*=\s*((?:\([^)]*\)|[\w\[\]{},.]+))\s+([\w\-]+)\("
+)
+_CALLS_RE = re.compile(r"(?:calls|to_apply)=%?([\w\.\-]+)")
+_WHILE_RE = re.compile(r"condition=%?([\w\.\-]+),\s*body=%?([\w\.\-]+)")
+_TRIP_RE = re.compile(r'known_trip_count"?\s*[=:]\s*\{\s*\\?"?n\\?"?\s*[=:]\s*\\?"?(\d+)')
+_NAME_RE = re.compile(r"%?([\w\.\-]+)")
+
+
+def _prod(xs) -> int:
+    n = 1
+    for x in xs:
+        n *= x
+    return n
+
+
+def _dims(s: str) -> List[int]:
+    return [int(d) for d in s.split(",")] if s else []
+
+
+def _shapes_in(text: str) -> List[Tuple[str, List[int]]]:
+    return [(m.group(1), _dims(m.group(2))) for m in _SHAPE_RE.finditer(text)]
+
+
+def _shape_bytes_list(shapes) -> int:
+    return sum(_prod(d) * _DTYPE_BYTES.get(t, 4) for t, d in shapes)
+
+
+def _operand_section(line: str, op: str) -> str:
+    start = line.index(op + "(") + len(op) + 1
+    depth = 1
+    i = start
+    while i < len(line) and depth:
+        if line[i] == "(":
+            depth += 1
+        elif line[i] == ")":
+            depth -= 1
+        i += 1
+    return line[start : i - 1]
+
+
+@dataclass
+class CompCost:
+    flops: float = 0.0
+    bytes: float = 0.0
+    coll: Dict[str, float] = field(default_factory=lambda: defaultdict(float))
+    children: List[Tuple[str, float]] = field(default_factory=list)  # (name, mult)
+
+
+def parse_hlo(hlo_text: str):
+    comps: Dict[str, CompCost] = {}
+    cur: Optional[CompCost] = None
+    symbols: Dict[str, List[Tuple[str, List[int]]]] = {}
+    entry: Optional[str] = None
+
+    for raw in hlo_text.splitlines():
+        line = raw.rstrip()
+        h = _HEADER_RE.match(line)
+        if h:
+            name = h.group(2)
+            cur = comps.setdefault(name, CompCost())
+            symbols = {}
+            if h.group(1):
+                entry = name
+            # parameters: "p1: f32[4,8], p2: (f32[2], s32[])"
+            for pm in re.finditer(r"([\w\.\-]+)\s*:\s*((?:\([^)]*\)|[\w\[\],]+))", h.group(3)):
+                symbols[pm.group(1)] = _shapes_in(pm.group(2))
+            continue
+        if cur is None:
+            continue
+        m = _LINE_RE.match(line)
+        if not m:
+            continue
+        res_name, res_type, op = m.group(1), m.group(2), m.group(3)
+        res_shapes = _shapes_in(res_type)
+        symbols[res_name] = res_shapes
+
+        def operand_shapes():
+            sec = _operand_section(line, op)
+            out = []
+            for nm in _NAME_RE.finditer(sec):
+                s = symbols.get(nm.group(1))
+                if s:
+                    out.append(s)
+            return out
+
+        if op == "while":
+            w = _WHILE_RE.search(line)
+            t = _TRIP_RE.search(line)
+            trip = float(t.group(1)) if t else -1.0
+            if w:
+                cur.children.append((w.group(2), trip))
+                cur.children.append((w.group(1), trip + 1 if trip > 0 else -1.0))
+            continue
+
+        if op in ("fusion", "call", "map", "reduce", "reduce-window", "sort",
+                  "scatter", "select-and-scatter"):
+            c = _CALLS_RE.search(line)
+            if c:
+                cur.children.append((c.group(1), 1.0))
+        if op == "conditional":
+            for c in re.finditer(
+                r"(?:true_computation|false_computation)=%?([\w\.\-]+)", line
+            ):
+                cur.children.append((c.group(1), 1.0))
+            bm = re.search(r"branch_computations=\{([^}]*)\}", line)
+            if bm:
+                for nm in _NAME_RE.finditer(bm.group(1)):
+                    cur.children.append((nm.group(1), 1.0))
+
+        ops_shapes = None
+        if op == "dot":
+            ops_shapes = operand_shapes()
+            result_elems = _prod(res_shapes[0][1]) if res_shapes else 0
+            k = 1
+            cm = re.search(r"lhs_contracting_dims=\{([\d,]*)\}", line)
+            if ops_shapes and cm and ops_shapes[0]:
+                lhs_dims = ops_shapes[0][0][1]
+                contracting = _dims(cm.group(1))
+                try:
+                    k = _prod(lhs_dims[d] for d in contracting) if contracting else 1
+                except IndexError:
+                    k = 1
+            cur.flops += 2.0 * result_elems * k
+        elif op == "convolution":
+            ops_shapes = operand_shapes()
+            if res_shapes and len(ops_shapes) >= 2:
+                res = res_shapes[0][1]
+                rhs = ops_shapes[1][0][1]
+                cur.flops += 2.0 * _prod(res) * max(_prod(rhs) // max(res[-1], 1), 1)
+        elif op in _ELEMENTWISE:
+            if res_shapes:
+                cur.flops += _prod(res_shapes[0][1])
+
+        kind = op.replace("-start", "")
+        if kind in COLLECTIVES and not op.endswith("-done"):
+            osh = operand_shapes()
+            total = sum(_shape_bytes_list(s) for s in osh)
+            if total == 0 and res_shapes:       # unresolved operands: use result
+                total = _shape_bytes_list(res_shapes)
+            cur.coll[kind] += total
+
+        # byte traffic at computation scope (fusion internals excluded)
+        if op not in ("tuple", "get-tuple-element", "parameter", "constant",
+                      "bitcast", "after-all", "partition-id", "replica-id"):
+            if ops_shapes is None:
+                ops_shapes = operand_shapes()
+            cur.bytes += _shape_bytes_list(res_shapes)
+            cur.bytes += sum(_shape_bytes_list(s) for s in ops_shapes)
+
+    return comps, entry
+
+
+@dataclass
+class HloCost:
+    flops: float
+    bytes: float
+    collectives: Dict[str, float]
+    unknown_trip_loops: int
+
+    @property
+    def collective_bytes(self) -> float:
+        return sum(self.collectives.values())
+
+
+def analyze(hlo_text: str, default_trip: float = 1.0) -> HloCost:
+    comps, entry = parse_hlo(hlo_text)
+    memo: Dict[str, Tuple[float, float, Dict[str, float]]] = {}
+    unknown = [0]
+
+    def total(name: str, stack=()) -> Tuple[float, float, Dict[str, float]]:
+        if name in memo:
+            return memo[name]
+        if name in stack or name not in comps:
+            return (0.0, 0.0, {})
+        c = comps[name]
+        f, b = c.flops, c.bytes
+        coll = defaultdict(float, c.coll)
+        for child, mult in c.children:
+            if mult < 0:
+                unknown[0] += 1
+                mult = default_trip
+            cf, cb, cc = total(child, stack + (name,))
+            f += mult * cf
+            b += mult * cb
+            for k, v in cc.items():
+                coll[k] += mult * v
+        memo[name] = (f, b, dict(coll))
+        return memo[name]
+
+    if entry is None:
+        return HloCost(0.0, 0.0, {}, 0)
+    f, b, coll = total(entry)
+    return HloCost(flops=f, bytes=b, collectives=coll, unknown_trip_loops=unknown[0])
+
+
+def collective_bytes(hlo_text: str) -> Dict[str, int]:
+    """Trip-count-aware collective operand bytes per kind."""
+    return {k: int(v) for k, v in analyze(hlo_text).collectives.items()}

@@ -1,0 +1,26 @@
+"""Production mesh factories.
+
+``make_production_mesh`` is a FUNCTION (importing this module never touches
+jax device state): (16, 16) data x model single-pod, (2, 16, 16)
+pod x data x model multi-pod — TPU v5e pods of 256 chips.
+"""
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_mesh(shape, axes):
+    return jax.make_mesh(tuple(shape), tuple(axes))
+
+
+def make_host_mesh(model_degree: int = 1):
+    """Whatever this process actually has (CPU tests: 1 device)."""
+    n = len(jax.devices())
+    data = max(1, n // model_degree)
+    return jax.make_mesh((data, min(model_degree, n)), ("data", "model"))

@@ -1,0 +1,58 @@
+"""EONSim CLI — run the simulator on a workload.
+
+    PYTHONPATH=src python -m repro.launch.simulate --workload dlrm \
+        --tables 60 --rows 1000000 --batch 32 --policy lru
+    PYTHONPATH=src python -m repro.launch.simulate --workload lm \
+        --arch command_r_plus_104b --shape decode_32k --policy pinning
+"""
+from __future__ import annotations
+
+import argparse
+import json
+
+import numpy as np
+
+from repro.core import OnChipPolicy, dlrm_rmc2_small, simulate, tpuv6e
+from repro.core.lm_mapper import lm_workload
+from repro.core.trace import REUSE_LEVELS, generate_zipf_trace
+from repro.models import SHAPES_BY_NAME, get_config
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--workload", default="dlrm", choices=["dlrm", "lm"])
+    ap.add_argument("--policy", default="spm",
+                    choices=[p.value for p in OnChipPolicy])
+    ap.add_argument("--tables", type=int, default=60)
+    ap.add_argument("--rows", type=int, default=1_000_000)
+    ap.add_argument("--lookups", type=int, default=120)
+    ap.add_argument("--batch", type=int, default=32)
+    ap.add_argument("--num-batches", type=int, default=1)
+    ap.add_argument("--zipf", type=float, default=REUSE_LEVELS["reuse_mid"])
+    ap.add_argument("--arch", default="stablelm_3b")
+    ap.add_argument("--shape", default="decode_32k")
+    ap.add_argument("--json", action="store_true")
+    args = ap.parse_args()
+
+    hw = tpuv6e().with_policy(OnChipPolicy(args.policy))
+    if args.workload == "dlrm":
+        wl = dlrm_rmc2_small(
+            num_tables=args.tables, rows_per_table=args.rows,
+            lookups=args.lookups, batch_size=args.batch,
+            num_batches=args.num_batches,
+        )
+    else:
+        cfg = get_config(args.arch)
+        wl = lm_workload(cfg, SHAPES_BY_NAME[args.shape], num_batches=args.num_batches)
+
+    res = simulate(wl, hw, zipf_s=args.zipf)
+    if args.json:
+        print(res.to_json())
+    else:
+        s = res.summary()
+        for k, v in s.items():
+            print(f"{k:20s} {v}")
+
+
+if __name__ == "__main__":
+    main()

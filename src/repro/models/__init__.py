@@ -1,0 +1,21 @@
+from .config import (
+    ALL_SHAPES,
+    SHAPES_BY_NAME,
+    ArchConfig,
+    ShapeConfig,
+    shapes_for,
+)
+from .registry import ARCH_IDS, get_config, get_smoke_config, family_module, param_count
+
+__all__ = [
+    "ALL_SHAPES",
+    "SHAPES_BY_NAME",
+    "ArchConfig",
+    "ShapeConfig",
+    "shapes_for",
+    "ARCH_IDS",
+    "get_config",
+    "get_smoke_config",
+    "family_module",
+    "param_count",
+]

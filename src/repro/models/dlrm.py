@@ -1,0 +1,117 @@
+"""DLRM — the paper's evaluation workload (Table I: DLRM-RMC2-small).
+
+Bottom MLP over dense features, embedding-bag lookups over T tables (the
+paper's operation — optionally through the Pallas kernels, including the
+hot-pinned VMEM path), dot-product feature interaction, top MLP.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..kernels import ops
+from . import layers as L
+
+Params = Dict[str, Any]
+
+
+@dataclass(frozen=True)
+class DLRMConfig:
+    num_tables: int = 60
+    rows_per_table: int = 1_000_000
+    dim: int = 128
+    lookups_per_table: int = 120
+    dense_features: int = 13
+    bottom_mlp: Tuple[int, ...] = (256, 128, 128)
+    top_mlp: Tuple[int, ...] = (128, 64, 1)
+    dtype: str = "float32"
+
+    def __post_init__(self):
+        assert self.bottom_mlp[-1] == self.dim, (
+            "dot-interaction requires bottom_mlp[-1] == embedding dim",
+            self.bottom_mlp, self.dim,
+        )
+
+    @property
+    def n_vectors(self) -> int:
+        return self.num_tables + 1  # + bottom-MLP output
+
+
+def smoke_config() -> DLRMConfig:
+    return DLRMConfig(num_tables=4, rows_per_table=1000, dim=32,
+                      lookups_per_table=8, bottom_mlp=(64, 32), top_mlp=(32, 1))
+
+
+def _mlp_init(key, dims, in_dim, dtype):
+    ks = jax.random.split(key, len(dims))
+    ws, d = [], in_dim
+    for k, out in zip(ks, dims):
+        ws.append({"w": L._dense_init(k, (d, out), dtype=dtype),
+                   "b": jnp.zeros((out,), dtype=dtype)})
+        d = out
+    return ws
+
+
+def _mlp_apply(ws, x, final_linear=True):
+    for i, p in enumerate(ws):
+        x = x @ p["w"] + p["b"]
+        if i < len(ws) - 1 or not final_linear:
+            x = jax.nn.relu(x)
+    return x
+
+
+def init(key, cfg: DLRMConfig) -> Params:
+    dt = jnp.dtype(cfg.dtype)
+    ks = jax.random.split(key, 4)
+    table = L._dense_init(
+        ks[0], (cfg.num_tables * cfg.rows_per_table, cfg.dim), scale=0.01, dtype=dt
+    )
+    n = cfg.n_vectors
+    interact_dim = n * (n - 1) // 2 + cfg.bottom_mlp[-1]
+    return {
+        "tables": table,
+        "bottom": _mlp_init(ks[1], cfg.bottom_mlp, cfg.dense_features, dt),
+        "top": _mlp_init(ks[2], cfg.top_mlp, interact_dim, dt),
+    }
+
+
+def interact(dense_vec: jax.Array, emb: jax.Array) -> jax.Array:
+    """Dot-product interaction. dense_vec (B, D), emb (B, T, D)."""
+    allv = jnp.concatenate([dense_vec[:, None, :], emb], axis=1)  # (B, n, D)
+    z = jnp.einsum("bnd,bmd->bnm", allv, allv)
+    n = allv.shape[1]
+    iu, ju = jnp.triu_indices(n, k=1)
+    return z[:, iu, ju]                                           # (B, n(n-1)/2)
+
+
+def forward(
+    params: Params,
+    dense: jax.Array,        # (B, 13)
+    sparse: jax.Array,       # (B, T, L) int32 per-table row ids
+    cfg: DLRMConfig,
+    *,
+    use_pallas: bool = False,
+    pinned: Optional[Dict[str, jax.Array]] = None,
+) -> jax.Array:              # (B,) logit
+    bot = _mlp_apply(params["bottom"], dense)                     # (B, D_b)
+    if pinned is not None:
+        emb = ops.embedding_bag_pinned(
+            params["tables"], pinned["hot_table"], sparse,
+            pinned["positions"], pinned["mask"], cfg.rows_per_table,
+            use_pallas=use_pallas,
+        )
+    else:
+        emb = ops.embedding_bag(
+            params["tables"], sparse, cfg.rows_per_table, use_pallas=use_pallas
+        )                                                         # (B, T, D)
+    feat = jnp.concatenate([bot, interact(bot, emb)], axis=1)
+    return _mlp_apply(params["top"], feat)[:, 0]
+
+
+def bce_loss(logit: jax.Array, label: jax.Array) -> jax.Array:
+    z = logit.astype(jnp.float32)
+    return jnp.mean(jnp.maximum(z, 0) - z * label + jnp.log1p(jnp.exp(-jnp.abs(z))))

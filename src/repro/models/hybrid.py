@@ -1,0 +1,190 @@
+"""Zamba2-style hybrid: Mamba2 backbone + ONE shared attention+MLP block
+applied every ``attn_every`` layers (the shared block's parameters are reused
+at every application — Zamba2's signature weight-sharing trick)."""
+from __future__ import annotations
+
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from . import layers as L
+from . import mamba
+from .config import ArchConfig
+from ..distributed.sharding import activation_constraint, fsdp_unshard
+
+Params = Dict[str, Any]
+
+
+def _dtype(cfg):
+    return jnp.dtype(cfg.dtype)
+
+
+def _check(cfg: ArchConfig):
+    assert cfg.hybrid is not None and cfg.ssm is not None
+    assert cfg.n_layers % cfg.hybrid.attn_every == 0, (
+        cfg.n_layers, cfg.hybrid.attn_every
+    )
+
+
+def init_lm(key, cfg: ArchConfig) -> Params:
+    _check(cfg)
+    G = cfg.n_layers // cfg.hybrid.attn_every
+    E = cfg.hybrid.attn_every
+    ks = jax.random.split(key, 6)
+    layer_keys = jax.random.split(ks[2], G * E).reshape(G, E, 2)
+    stacked = jax.vmap(jax.vmap(lambda k: mamba.init_layer(k, cfg)))(layer_keys)
+    d_ff = cfg.hybrid.shared_d_ff or 4 * cfg.d_model
+    shared = {
+        "norm1": L.init_rmsnorm(cfg.d_model),
+        "attn": L.init_attention(ks[3], cfg, _dtype(cfg)),
+        "norm2": L.init_rmsnorm(cfg.d_model),
+        "mlp": L.init_swiglu(ks[4], cfg.d_model, d_ff, _dtype(cfg)),
+    }
+    p = {
+        "embed": L.init_embedding(ks[0], cfg.vocab, cfg.d_model, _dtype(cfg)),
+        "groups": stacked,
+        "shared": shared,
+        "final_norm": L.init_rmsnorm(cfg.d_model),
+    }
+    if not cfg.tie_embeddings:
+        p["head"] = L.init_lm_head(ks[1], cfg.d_model, cfg.vocab, _dtype(cfg))
+    return p
+
+
+def _shared_block(cfg, shared, x, positions, *, kv_cache=None, cache_index=None,
+                  use_pallas=False, prefill=False):
+    h = L.rmsnorm(shared["norm1"], x, cfg.norm_eps)
+    attn_out, new_cache = L.attention(
+        shared["attn"], h, cfg, positions=positions,
+        kv_cache=kv_cache, cache_index=cache_index, use_pallas=use_pallas,
+        prefill=prefill,
+    )
+    x = x + attn_out
+    h = L.rmsnorm(shared["norm2"], x, cfg.norm_eps)
+    return x + L.swiglu(shared["mlp"], h), new_cache
+
+
+def final_hidden(params, tokens, cfg, *, use_pallas=False, remat=True):
+    _check(cfg)
+    x = activation_constraint(L.embed(params["embed"], tokens, use_pallas=use_pallas))
+    positions = jnp.arange(tokens.shape[1])
+    shared = params["shared"]
+
+    def group_body(x, group_p):
+        def inner(x, lp):
+            y, _, _ = mamba._apply_layer(cfg, fsdp_unshard(lp), x, use_pallas=use_pallas)
+            return y, None
+
+        x, _ = jax.lax.scan(inner, x, group_p)
+        x, _ = _shared_block(cfg, fsdp_unshard(shared), x, positions,
+                             use_pallas=use_pallas)
+        return x, None
+
+    if remat:
+        group_body = jax.checkpoint(group_body, prevent_cse=False)
+    x, _ = jax.lax.scan(group_body, x, params["groups"])
+    return L.rmsnorm(params["final_norm"], x, cfg.norm_eps)
+
+
+def forward(params, tokens, cfg, *, use_pallas=False, remat=True):
+    x = final_hidden(params, tokens, cfg, use_pallas=use_pallas, remat=remat)
+    from .transformer import hidden_to_logits
+
+    return hidden_to_logits(params, x, cfg)
+
+
+# --------------------------------------------------------------------------
+# Serving: SSM states per mamba layer + KV cache per shared-block application
+# --------------------------------------------------------------------------
+
+def init_state_cache(cfg: ArchConfig, batch: int, max_seq: int):
+    _check(cfg)
+    G = cfg.n_layers // cfg.hybrid.attn_every
+    E = cfg.hybrid.attn_every
+    s = cfg.ssm
+    H = s.num_heads(cfg.d_model)
+    di = s.d_inner(cfg.d_model)
+    conv_ch = di + 2 * s.state_dim
+    ssm = jnp.zeros((G, E, batch, H, s.head_dim, s.state_dim), jnp.float32)
+    conv = jnp.zeros((G, E, batch, s.conv_width - 1, conv_ch), _dtype(cfg))
+    dh = cfg.attn_head_dim
+    kv = (
+        jnp.zeros((G, batch, cfg.n_kv_heads, max_seq, dh), _dtype(cfg)),
+        jnp.zeros((G, batch, cfg.n_kv_heads, max_seq, dh), _dtype(cfg)),
+    )
+    return ssm, conv, kv
+
+
+def prefill_with_state(params, tokens, cfg, *, use_pallas=False, max_seq=None):
+    """Parallel prompt pass: chunked SSD for the mamba layers + flash for the
+    shared attention (whose kv land at cache position 0)."""
+    _check(cfg)
+    B, S = tokens.shape
+    max_seq = max_seq or S
+    x = activation_constraint(L.embed(params["embed"], tokens, use_pallas=use_pallas))
+    positions = jnp.arange(S)
+    shared = params["shared"]
+    dh = cfg.attn_head_dim
+    kv0 = (
+        jnp.zeros((B, cfg.n_kv_heads, max_seq, dh), _dtype(cfg)),
+        jnp.zeros((B, cfg.n_kv_heads, max_seq, dh), _dtype(cfg)),
+    )
+
+    def group_body(x, group_p):
+        def inner(x, lp):
+            lp = fsdp_unshard(lp)
+            h = L.rmsnorm(lp["norm"], x, cfg.norm_eps)
+            y, st, cv = L.mamba2_block(
+                lp["mixer"], h, cfg, use_pallas=use_pallas, return_final_state=True
+            )
+            return x + y, (st, cv)
+
+        x, (st_g, cv_g) = jax.lax.scan(inner, x, group_p)
+        x, new_kv = _shared_block(
+            cfg, fsdp_unshard(shared), x, positions,
+            kv_cache=kv0, cache_index=jnp.int32(0), use_pallas=use_pallas,
+            prefill=True,
+        )
+        return x, (st_g, cv_g, *new_kv)
+
+    x, (ssm, conv, kv_k, kv_v) = jax.lax.scan(group_body, x, params["groups"])
+    x = L.rmsnorm(params["final_norm"], x, cfg.norm_eps)
+    from .transformer import hidden_to_logits
+
+    logits = hidden_to_logits(params, x[:, -1:], cfg)
+    return logits, (ssm, conv.astype(_dtype(cfg)), (kv_k, kv_v))
+
+
+def decode_step(params, tokens, cache_index, caches, cfg, *, use_pallas=False):
+    _check(cfg)
+    ssm_c, conv_c, (kv_k, kv_v) = caches
+    x = activation_constraint(L.embed(params["embed"], tokens, use_pallas=use_pallas))
+    positions = cache_index + jnp.arange(tokens.shape[1])
+    shared = params["shared"]
+
+    def group_body(x, inp):
+        group_p, st_g, cv_g, ck, cv = inp
+
+        def inner(x, lp_state):
+            lp, st, conv_st = lp_state
+            y, new_st, new_cv = mamba._apply_layer(
+                cfg, fsdp_unshard(lp), x, ssm_state=st, conv_state=conv_st,
+                use_pallas=use_pallas
+            )
+            return y, (new_st, new_cv)
+
+        x, (new_st_g, new_cv_g) = jax.lax.scan(inner, x, (group_p, st_g, cv_g))
+        x, new_kv = _shared_block(
+            cfg, fsdp_unshard(shared), x, positions,
+            kv_cache=(ck, cv), cache_index=cache_index, use_pallas=use_pallas,
+        )
+        return x, (new_st_g, new_cv_g, *new_kv)
+
+    x, (new_ssm, new_conv, new_k, new_v) = jax.lax.scan(
+        group_body, x, (params["groups"], ssm_c, conv_c, kv_k, kv_v)
+    )
+    x = L.rmsnorm(params["final_norm"], x, cfg.norm_eps)
+    from .transformer import hidden_to_logits
+
+    return hidden_to_logits(params, x, cfg), (new_ssm, new_conv, (new_k, new_v))

@@ -1,0 +1,571 @@
+"""Core layers for the model zoo — functional JAX (params are pytrees).
+
+Covers every assigned family: GQA/MQA attention, DeepSeek MLA, SwiGLU and
+GELU MLPs, sort-based capacity MoE (GShard-style without the (T,E,C) one-hot
+blowup), Mamba2/SSD blocks, RMS/LayerNorm, RoPE.
+
+All ``init_*`` take an rng key and return a dict; all ``apply`` functions are
+pure. Matmul-heavy paths accept ``use_pallas`` to route through the Pallas
+kernels (interpret mode on CPU) or the jnp reference (the XLA path the
+dry-run lowers).
+"""
+from __future__ import annotations
+
+import math
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..kernels import ops
+from .config import ArchConfig, MLAConfig, MoEConfig, SSMConfig
+
+Params = Dict[str, Any]
+
+
+def _dense_init(key, shape, scale: Optional[float] = None, dtype=jnp.float32):
+    if scale is None:
+        scale = 1.0 / math.sqrt(shape[0])
+    return (jax.random.normal(key, shape, dtype=jnp.float32) * scale).astype(dtype)
+
+
+# --------------------------------------------------------------------------
+# Norms
+# --------------------------------------------------------------------------
+
+def init_rmsnorm(d: int, dtype=jnp.float32) -> Params:
+    return {"scale": jnp.ones((d,), dtype=dtype)}
+
+
+def rmsnorm(p: Params, x: jax.Array, eps: float = 1e-5) -> jax.Array:
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    return (xf * jax.lax.rsqrt(var + eps) * p["scale"].astype(jnp.float32)).astype(x.dtype)
+
+
+def init_layernorm(d: int, dtype=jnp.float32) -> Params:
+    return {"scale": jnp.ones((d,), dtype=dtype), "bias": jnp.zeros((d,), dtype=dtype)}
+
+
+def layernorm(p: Params, x: jax.Array, eps: float = 1e-5) -> jax.Array:
+    xf = x.astype(jnp.float32)
+    mu = jnp.mean(xf, axis=-1, keepdims=True)
+    var = jnp.var(xf, axis=-1, keepdims=True)
+    y = (xf - mu) * jax.lax.rsqrt(var + eps)
+    return (y * p["scale"].astype(jnp.float32) + p["bias"].astype(jnp.float32)).astype(x.dtype)
+
+
+# --------------------------------------------------------------------------
+# RoPE
+# --------------------------------------------------------------------------
+
+def rope_freqs(head_dim: int, theta: float) -> jax.Array:
+    return 1.0 / (theta ** (jnp.arange(0, head_dim, 2, dtype=jnp.float32) / head_dim))
+
+
+def apply_rope(x: jax.Array, positions: jax.Array, theta: float) -> jax.Array:
+    """x: (..., S, d); positions: (S,) or broadcastable."""
+    d = x.shape[-1]
+    freqs = rope_freqs(d, theta)                       # (d/2,)
+    angles = positions[..., :, None].astype(jnp.float32) * freqs  # (..., S, d/2)
+    cos, sin = jnp.cos(angles), jnp.sin(angles)
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return out.astype(x.dtype)
+
+
+# --------------------------------------------------------------------------
+# GQA attention
+# --------------------------------------------------------------------------
+
+def init_attention(key, cfg: ArchConfig, dtype) -> Params:
+    D, Hq, Hkv, dh = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.attn_head_dim
+    ks = jax.random.split(key, 4)
+    return {
+        "wq": _dense_init(ks[0], (D, Hq * dh), dtype=dtype),
+        "wk": _dense_init(ks[1], (D, Hkv * dh), dtype=dtype),
+        "wv": _dense_init(ks[2], (D, Hkv * dh), dtype=dtype),
+        "wo": _dense_init(ks[3], (Hq * dh, D), dtype=dtype),
+    }
+
+
+def attention(
+    p: Params,
+    x: jax.Array,                  # (B, S, D)
+    cfg: ArchConfig,
+    *,
+    positions: Optional[jax.Array] = None,
+    causal: bool = True,
+    kv_cache: Optional[Tuple[jax.Array, jax.Array]] = None,
+    cache_index: Optional[jax.Array] = None,
+    use_pallas: bool = False,
+    use_rope: bool = True,
+    prefill: bool = False,
+) -> Tuple[jax.Array, Optional[Tuple[jax.Array, jax.Array]]]:
+    """Returns (out, new_kv_cache). With a cache, x is the new-token slice.
+
+    ``prefill=True`` (static): the cache is empty and x is the full prompt —
+    attention runs causal-flash over the new tokens only (never materializing
+    (S, S_max) scores) and k/v are written at position 0.
+    """
+    B, S, D = x.shape
+    Hq, Hkv, dh = cfg.n_heads, cfg.n_kv_heads, cfg.attn_head_dim
+    if positions is None:
+        positions = jnp.arange(S)
+
+    q = (x @ p["wq"]).reshape(B, S, Hq, dh).transpose(0, 2, 1, 3)
+    k = (x @ p["wk"]).reshape(B, S, Hkv, dh).transpose(0, 2, 1, 3)
+    v = (x @ p["wv"]).reshape(B, S, Hkv, dh).transpose(0, 2, 1, 3)
+    if use_rope:
+        q = apply_rope(q, positions, cfg.rope_theta)
+        k = apply_rope(k, positions, cfg.rope_theta)
+    if S > 1:
+        from ..distributed.sharding import shard_attention_q
+
+        q = shard_attention_q(q)
+
+    new_cache = None
+    if kv_cache is not None:
+        ck, cv = kv_cache                       # (B, Hkv, S_max, dh)
+        ck = jax.lax.dynamic_update_slice(ck, k.astype(ck.dtype), (0, 0, cache_index, 0))
+        cv = jax.lax.dynamic_update_slice(cv, v.astype(cv.dtype), (0, 0, cache_index, 0))
+        new_cache = (ck, cv)
+        if prefill:
+            out = ops.flash_attention(q, k, v, causal=causal, use_pallas=use_pallas)
+        elif use_pallas and S == 1:
+            out = ops.decode_attention(
+                q[:, :, 0], ck, cv, cache_index + S
+            )[:, :, None, :]
+        else:
+            out = _decode_attention(q, ck, cv, cache_index + S, Hq // Hkv)
+    else:
+        out = ops.flash_attention(q, k, v, causal=causal, use_pallas=use_pallas)
+
+    out = out.transpose(0, 2, 1, 3).reshape(B, S, Hq * dh)
+    return out @ p["wo"], new_cache
+
+
+def _decode_attention(q, ck, cv, valid_len, group: int) -> jax.Array:
+    """Full-cache attention with length masking (decode path).
+
+    q: (B, Hq, S_new, dh); cache: (B, Hkv, S_max, dh). kv stay in cache dtype
+    (f32 accumulation via preferred_element_type) so the GQA head expansion
+    is a bf16 transient, not an f32 copy of the whole cache.
+    """
+    B, Hq, Sn, dh = q.shape
+    kf = jnp.repeat(ck, group, axis=1)
+    vf = jnp.repeat(cv, group, axis=1)
+    s = jnp.einsum(
+        "bhqd,bhkd->bhqk", q, kf, preferred_element_type=jnp.float32
+    ) / math.sqrt(dh)
+    span = jnp.arange(ck.shape[2])
+    s = jnp.where(span[None, None, None, :] < valid_len, s, -1e30)
+    pmax = jnp.max(s, axis=-1, keepdims=True)
+    w = jnp.exp(s - pmax)
+    out = jnp.einsum(
+        "bhqk,bhkd->bhqd", w.astype(vf.dtype), vf,
+        preferred_element_type=jnp.float32,
+    ) / jnp.sum(w, axis=-1, keepdims=True)
+    return out.astype(q.dtype)
+
+
+# --------------------------------------------------------------------------
+# MLA attention (DeepSeek-V2): latent KV compression
+# --------------------------------------------------------------------------
+
+def init_mla(key, cfg: ArchConfig, dtype) -> Params:
+    m: MLAConfig = cfg.mla
+    D, H = cfg.d_model, cfg.n_heads
+    qd = m.qk_nope_head_dim + m.qk_rope_head_dim
+    ks = jax.random.split(key, 5)
+    return {
+        "wq": _dense_init(ks[0], (D, H * qd), dtype=dtype),
+        "w_dkv": _dense_init(ks[1], (D, m.kv_lora_rank + m.qk_rope_head_dim), dtype=dtype),
+        "w_uk": _dense_init(ks[2], (m.kv_lora_rank, H * m.qk_nope_head_dim), dtype=dtype),
+        "w_uv": _dense_init(ks[3], (m.kv_lora_rank, H * m.v_head_dim), dtype=dtype),
+        "wo": _dense_init(ks[4], (H * m.v_head_dim, D), dtype=dtype),
+    }
+
+
+def mla_attention(
+    p: Params,
+    x: jax.Array,
+    cfg: ArchConfig,
+    *,
+    positions: Optional[jax.Array] = None,
+    causal: bool = True,
+    kv_cache: Optional[jax.Array] = None,   # latent cache (B, S_max, r + rope)
+    cache_index: Optional[jax.Array] = None,
+    use_pallas: bool = False,
+    prefill: bool = False,
+) -> Tuple[jax.Array, Optional[jax.Array]]:
+    m: MLAConfig = cfg.mla
+    B, S, D = x.shape
+    H = cfg.n_heads
+    r = m.kv_lora_rank
+    if positions is None:
+        positions = jnp.arange(S)
+
+    q = (x @ p["wq"]).reshape(B, S, H, -1).transpose(0, 2, 1, 3)
+    q_nope, q_rope = q[..., : m.qk_nope_head_dim], q[..., m.qk_nope_head_dim:]
+    q_rope = apply_rope(q_rope, positions, cfg.rope_theta)
+
+    latent = x @ p["w_dkv"]                           # (B, S, r + rope)
+    kv_l, k_rope = latent[..., :r], latent[..., r:]
+    k_rope = apply_rope(k_rope[:, None], positions, cfg.rope_theta)  # (B,1,S,rope)
+
+    new_cache = None
+    if kv_cache is not None:
+        lat_new = jnp.concatenate([kv_l, k_rope[:, 0]], axis=-1)
+        kv_cache = jax.lax.dynamic_update_slice(
+            kv_cache, lat_new.astype(kv_cache.dtype), (0, cache_index, 0)
+        )
+        new_cache = kv_cache
+        if not prefill:
+            # DECODE: weight-absorbed latent attention (DeepSeek's "matrix
+            # absorption"). The naive path recomputes per-head K/V from the
+            # whole latent cache every step (~1000x the useful FLOPs at 32k
+            # context, EXPERIMENTS.md §Perf); absorbing w_uk into the query
+            # and deferring w_uv past the softmax runs attention directly in
+            # the (r+rope)-dim latent space:
+            #   score = (q_nope W_uk^T) . latent  +  q_rope . k_rope
+            #   out   = (softmax . latent) W_uv
+            out = _mla_absorbed_decode(
+                p, q_nope, q_rope, kv_cache, cache_index + S, m, H
+            )
+            out = out.transpose(0, 2, 1, 3).reshape(B, S, H * m.v_head_dim)
+            return out @ p["wo"], new_cache
+
+    k_nope = (kv_l @ p["w_uk"]).reshape(B, -1, H, m.qk_nope_head_dim).transpose(0, 2, 1, 3)
+    vv = (kv_l @ p["w_uv"]).reshape(B, -1, H, m.v_head_dim).transpose(0, 2, 1, 3)
+    k = jnp.concatenate([k_nope, jnp.broadcast_to(k_rope, (*k_nope.shape[:3], m.qk_rope_head_dim))], axis=-1)
+    qq = jnp.concatenate([q_nope, q_rope], axis=-1)
+
+    out = ops.flash_attention(
+        qq, k, vv, causal=causal,
+        use_pallas=use_pallas and m.v_head_dim == qq.shape[-1],
+    )
+
+    out = out.transpose(0, 2, 1, 3).reshape(B, S, H * m.v_head_dim)
+    return out @ p["wo"], new_cache
+
+
+def _mla_absorbed_decode(p, q_nope, q_rope, latent_cache, valid_len, m, H):
+    """q_nope/q_rope: (B, H, Sn, .); latent_cache: (B, S_max, r + rope)."""
+    r = m.kv_lora_rank
+    lat = latent_cache[..., :r]                              # (B, S, r)
+    k_rope = latent_cache[..., r:]                           # (B, S, rope)
+    w_uk = p["w_uk"].reshape(r, H, m.qk_nope_head_dim)       # (r, H, n)
+    q_lat = jnp.einsum("bhqn,rhn->bhqr", q_nope.astype(jnp.float32),
+                       w_uk.astype(jnp.float32))             # (B, H, Sn, r)
+    s = jnp.einsum("bhqr,bsr->bhqs", q_lat, lat.astype(jnp.float32))
+    s = s + jnp.einsum("bhqp,bsp->bhqs", q_rope.astype(jnp.float32),
+                       k_rope.astype(jnp.float32))
+    s = s / math.sqrt(m.qk_nope_head_dim + m.qk_rope_head_dim)
+    span = jnp.arange(lat.shape[1])
+    s = jnp.where(span[None, None, None, :] < valid_len, s, -1e30)
+    w = jax.nn.softmax(s, axis=-1)
+    ctx = jnp.einsum("bhqs,bsr->bhqr", w, lat.astype(jnp.float32))
+    w_uv = p["w_uv"].reshape(r, H, m.v_head_dim)
+    return jnp.einsum("bhqr,rhv->bhqv", ctx,
+                      w_uv.astype(jnp.float32)).astype(q_nope.dtype)
+
+
+def _full_attention(q, k, v, *, causal: bool) -> jax.Array:
+    B, H, S, dh = q.shape
+    s = jnp.einsum("bhqd,bhkd->bhqk", q.astype(jnp.float32), k.astype(jnp.float32))
+    s = s / math.sqrt(dh)
+    if causal:
+        Sk = k.shape[2]
+        mask = jnp.tril(jnp.ones((S, Sk), dtype=bool), k=Sk - S)
+        s = jnp.where(mask[None, None], s, -1e30)
+    w = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("bhqk,bhkd->bhqd", w, v.astype(jnp.float32)).astype(q.dtype)
+
+
+def _mla_masked_attention(q, k, v, valid_len) -> jax.Array:
+    s = jnp.einsum("bhqd,bhkd->bhqk", q.astype(jnp.float32), k.astype(jnp.float32))
+    s = s / math.sqrt(q.shape[-1])
+    span = jnp.arange(k.shape[2])
+    s = jnp.where(span[None, None, None, :] < valid_len, s, -1e30)
+    w = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("bhqk,bhkd->bhqd", w, v.astype(jnp.float32)).astype(q.dtype)
+
+
+# --------------------------------------------------------------------------
+# MLPs
+# --------------------------------------------------------------------------
+
+def init_swiglu(key, d: int, f: int, dtype) -> Params:
+    ks = jax.random.split(key, 3)
+    return {
+        "wg": _dense_init(ks[0], (d, f), dtype=dtype),
+        "wu": _dense_init(ks[1], (d, f), dtype=dtype),
+        "wd": _dense_init(ks[2], (f, d), dtype=dtype),
+    }
+
+
+def swiglu(p: Params, x: jax.Array) -> jax.Array:
+    return (jax.nn.silu(x @ p["wg"]) * (x @ p["wu"])) @ p["wd"]
+
+
+def init_gelu_mlp(key, d: int, f: int, dtype) -> Params:
+    ks = jax.random.split(key, 2)
+    return {
+        "w1": _dense_init(ks[0], (d, f), dtype=dtype),
+        "b1": jnp.zeros((f,), dtype=dtype),
+        "w2": _dense_init(ks[1], (f, d), dtype=dtype),
+        "b2": jnp.zeros((d,), dtype=dtype),
+    }
+
+
+def gelu_mlp(p: Params, x: jax.Array) -> jax.Array:
+    return jax.nn.gelu(x @ p["w1"] + p["b1"]) @ p["w2"] + p["b2"]
+
+
+# --------------------------------------------------------------------------
+# Mixture of Experts (sort-based capacity dispatch)
+# --------------------------------------------------------------------------
+
+def init_moe(key, cfg: ArchConfig, dtype) -> Params:
+    m: MoEConfig = cfg.moe
+    D = cfg.d_model
+    ks = jax.random.split(key, 5)
+    p = {
+        "router": _dense_init(ks[0], (D, m.num_experts), dtype=jnp.float32),
+        "wg": _dense_init(ks[1], (m.num_experts, D, m.d_ff_expert), dtype=dtype),
+        "wu": _dense_init(ks[2], (m.num_experts, D, m.d_ff_expert), dtype=dtype),
+        "wd": _dense_init(ks[3], (m.num_experts, m.d_ff_expert, D), dtype=dtype),
+    }
+    if m.num_shared_experts:
+        f_sh = m.d_ff_shared or m.d_ff_expert * m.num_shared_experts
+        p["shared"] = init_swiglu(ks[4], D, f_sh, dtype)
+    return p
+
+
+def _rank_within_group(ids: jax.Array, iota: jax.Array) -> jax.Array:
+    """Position of each element within its (sorted) id group. Batched over
+    leading dims (operates on the last axis)."""
+    first = jnp.concatenate(
+        [jnp.ones((*ids.shape[:-1], 1), bool), ids[..., 1:] != ids[..., :-1]], axis=-1
+    )
+    start = jax.lax.associative_scan(
+        jnp.maximum, jnp.where(first, iota, 0), axis=-1
+    )
+    return iota - start
+
+
+def moe(
+    p: Params,
+    x: jax.Array,                 # (B, S, D)
+    cfg: ArchConfig,
+    *,
+    capacity_factor: Optional[float] = None,
+) -> jax.Array:
+    """Sort-based capacity MoE with group-local dispatch.
+
+    Tokens are split into ``dispatch_groups`` groups (aligned with the
+    data-parallel shards so the routing sort never crosses devices), routed
+    top-k, sorted by expert within the group, packed into a (G, E, C, D)
+    buffer (overflow dropped — GShard capacity semantics), run through the
+    expert FFNs as one batched einsum (experts sharded over the model axis =
+    EP; the token->expert reshard lowers to all-to-all-class collectives),
+    and combined back with the gate weights. Avoids the (T, E, C) one-hot
+    dispatch blowup.
+    """
+    m: MoEConfig = cfg.moe
+    B, S, D = x.shape
+    T = B * S
+    E, K = m.num_experts, m.top_k
+    cf = capacity_factor if capacity_factor is not None else m.capacity_factor
+    G = m.dispatch_groups if T % m.dispatch_groups == 0 else 1
+    Tg = T // G
+    C = max(1, int(Tg * K * cf) // E)
+
+    from ..distributed.sharding import constrain
+
+    # Dispatch groups ride the data axis; without explicit constraints the
+    # scatter/gather pair below defeats GSPMD propagation and the expert
+    # einsums replicate all groups on every data shard (16x compute bloat,
+    # EXPERIMENTS.md §Perf iteration 4).
+    xg = constrain(x.reshape(G, Tg, D), "dp", None, None)
+    logits = (xg.astype(jnp.float32) @ p["router"])           # (G, Tg, E)
+    probs = jax.nn.softmax(logits, axis=-1)
+    gate_w, gate_e = jax.lax.top_k(probs, K)                  # (G, Tg, K)
+    gate_w = gate_w / jnp.clip(gate_w.sum(-1, keepdims=True), 1e-9)
+
+    a_expert = gate_e.reshape(G, Tg * K)
+    a_token = jnp.broadcast_to(
+        jnp.repeat(jnp.arange(Tg), K)[None], (G, Tg * K)
+    )
+    a_gate = gate_w.reshape(G, Tg * K)
+
+    order = jnp.argsort(a_expert, axis=-1)                    # per-group sort
+    se = jnp.take_along_axis(a_expert, order, axis=-1)
+    st = jnp.take_along_axis(a_token, order, axis=-1)
+    sg = jnp.take_along_axis(a_gate, order, axis=-1)
+    iota = jnp.broadcast_to(jnp.arange(Tg * K)[None], se.shape)
+    rank = _rank_within_group(se, iota)
+
+    keep = rank < C
+    slot = constrain(se * C + jnp.minimum(rank, C - 1), "dp", None)  # (G, Tg*K)
+    vals = jnp.where(
+        keep[..., None], jnp.take_along_axis(xg, st[..., None], axis=1), 0
+    )
+    vals = constrain(vals, "dp", None, None)
+    buf = jax.vmap(lambda s, v: jnp.zeros((E * C, D), x.dtype).at[s].add(v))(
+        slot, vals
+    )                                                          # (G, E*C, D)
+    buf = constrain(buf, "dp", None, None)
+
+    h = constrain(buf.reshape(G, E, C, D), "dp", "model", None, None)
+    act = jax.nn.silu(jnp.einsum("gecd,edf->gecf", h, p["wg"])) * jnp.einsum(
+        "gecd,edf->gecf", h, p["wu"]
+    )
+    act = constrain(act, "dp", "model", None, None)
+    out_buf = jnp.einsum("gecf,efd->gecd", act, p["wd"]).reshape(G, E * C, D)
+    out_buf = constrain(out_buf, "dp", None, None)
+
+    contrib = jnp.take_along_axis(out_buf, slot[..., None], axis=1)
+    contrib = contrib * (sg * keep)[..., None].astype(out_buf.dtype)
+    out = jax.vmap(lambda t, c: jnp.zeros((Tg, D), x.dtype).at[t].add(c))(
+        st, contrib.astype(x.dtype)
+    )
+    out = constrain(out, "dp", None, None).reshape(B, S, D)
+
+    if "shared" in p:
+        out = out + swiglu(p["shared"], x)
+    return out
+
+
+# --------------------------------------------------------------------------
+# Mamba2 / SSD block
+# --------------------------------------------------------------------------
+
+def init_mamba2(key, cfg: ArchConfig, dtype) -> Params:
+    s: SSMConfig = cfg.ssm
+    D = cfg.d_model
+    di = s.d_inner(D)
+    H = s.num_heads(D)
+    N = s.state_dim
+    conv_ch = di + 2 * N
+    ks = jax.random.split(key, 6)
+    # The projection is split (z | xBC | dt) rather than fused so each piece
+    # shards cleanly over the model axis (the fused 2*di+2N+H width is not
+    # divisible by typical TP degrees).
+    return {
+        "in_z": _dense_init(ks[0], (D, di), dtype=dtype),
+        "in_xbc": _dense_init(ks[1], (D, conv_ch), dtype=dtype),
+        "in_dt": _dense_init(ks[2], (D, H), dtype=dtype),
+        "conv_w": _dense_init(ks[3], (s.conv_width, conv_ch), scale=0.5, dtype=dtype),
+        "conv_b": jnp.zeros((conv_ch,), dtype=dtype),
+        "a_log": jnp.log(jnp.linspace(1.0, 16.0, H)).astype(jnp.float32),
+        "dt_bias": jnp.zeros((H,), dtype=jnp.float32),
+        "d_skip": jnp.ones((H,), dtype=jnp.float32),
+        "norm": init_rmsnorm(di, dtype=dtype),
+        "out_proj": _dense_init(ks[4], (di, D), dtype=dtype),
+    }
+
+
+def _causal_conv1d(x: jax.Array, w: jax.Array, b: jax.Array,
+                   state: Optional[jax.Array] = None) -> Tuple[jax.Array, jax.Array]:
+    """Depthwise causal conv. x: (B, S, Ch), w: (W, Ch). Returns (y, new_state)
+    where state carries the last W-1 inputs for decode."""
+    W = w.shape[0]
+    if state is None:
+        pad = jnp.zeros((x.shape[0], W - 1, x.shape[2]), dtype=x.dtype)
+    else:
+        pad = state
+    xp = jnp.concatenate([pad, x], axis=1)          # (B, S+W-1, Ch)
+    y = sum(xp[:, i : i + x.shape[1], :] * w[i] for i in range(W))
+    new_state = xp[:, -(W - 1):, :] if W > 1 else jnp.zeros_like(pad)
+    return jax.nn.silu(y + b), new_state
+
+
+def mamba2_block(
+    p: Params,
+    x: jax.Array,                  # (B, S, D)
+    cfg: ArchConfig,
+    *,
+    ssm_state: Optional[jax.Array] = None,   # (B, H, P, N) decode carry
+    conv_state: Optional[jax.Array] = None,  # (B, W-1, Ch)
+    use_pallas: bool = False,
+    return_final_state: bool = False,        # prefill: parallel scan + state out
+) -> Tuple[jax.Array, Optional[jax.Array], Optional[jax.Array]]:
+    s: SSMConfig = cfg.ssm
+    B, S, D = x.shape
+    di = s.d_inner(D)
+    H = s.num_heads(D)
+    N, P = s.state_dim, s.head_dim
+
+    z = x @ p["in_z"]
+    xbc = x @ p["in_xbc"]
+    dt_raw = x @ p["in_dt"]
+
+    xbc, new_conv = _causal_conv1d(xbc, p["conv_w"], p["conv_b"], conv_state)
+    xs = xbc[..., :di]
+    Bm = xbc[..., di : di + N]
+    Cm = xbc[..., di + N :]
+
+    dt = jax.nn.softplus(dt_raw.astype(jnp.float32) + p["dt_bias"])   # (B,S,H)
+    A = -jnp.exp(p["a_log"])                                          # (H,)
+
+    xh = xs.reshape(B, S, H, P).transpose(0, 2, 1, 3)                 # (B,H,S,P)
+    dt_h = dt.transpose(0, 2, 1)                                      # (B,H,S)
+    adt = A[None, :, None] * dt_h
+
+    if ssm_state is None:
+        y = ops.mamba2_ssd(
+            xh, adt, dt_h, Bm, Cm, chunk=s.chunk, use_pallas=use_pallas
+        )                                                             # (B,H,S,P)
+        new_state = None
+        if return_final_state:
+            from . import config as _c  # noqa: F401 (doc anchor)
+            from ..kernels import ref as kref
+
+            new_state = kref.mamba2_final_state(xh, adt, dt_h, Bm)
+    else:
+        y, new_state = _ssd_decode_step(xh, adt, dt_h, Bm, Cm, ssm_state)
+
+    y = y + p["d_skip"][None, :, None, None] * xh.astype(jnp.float32)
+    y = y.transpose(0, 2, 1, 3).reshape(B, S, di).astype(x.dtype)
+    y = y * jax.nn.silu(z)
+    y = rmsnorm(p["norm"], y, cfg.norm_eps)
+    return y @ p["out_proj"], new_state, new_conv
+
+
+def _ssd_decode_step(xh, adt, dt_h, Bm, Cm, state):
+    """Sequential steps over the (short) new-token window, carrying state."""
+    Bsz, H, S, P = xh.shape
+
+    def step(st, t):
+        decay = jnp.exp(adt[:, :, t])[..., None, None]
+        outer = (dt_h[:, :, t, None, None] * xh[:, :, t, :, None]) * Bm[:, None, t, None, :]
+        st = decay * st + outer
+        y_t = jnp.einsum("bhpn,bn->bhp", st, Cm[:, t])
+        return st, y_t
+
+    state, ys = jax.lax.scan(step, state.astype(jnp.float32), jnp.arange(S))
+    return jnp.moveaxis(ys, 0, 2), state  # (B,H,S,P), (B,H,P,N)
+
+
+# --------------------------------------------------------------------------
+# Embedding / logits
+# --------------------------------------------------------------------------
+
+def init_embedding(key, vocab: int, d: int, dtype) -> Params:
+    return {"table": _dense_init(key, (vocab, d), scale=0.02, dtype=dtype)}
+
+
+def embed(p: Params, tokens: jax.Array, *, use_pallas: bool = False) -> jax.Array:
+    if use_pallas:
+        return ops.embedding_gather(p["table"], tokens)
+    return p["table"][tokens]
+
+
+def init_lm_head(key, d: int, vocab: int, dtype) -> Params:
+    return {"w": _dense_init(key, (d, vocab), dtype=dtype)}
+
+
+def lm_logits(p: Params, x: jax.Array) -> jax.Array:
+    return x @ p["w"]

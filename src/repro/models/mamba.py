@@ -1,0 +1,122 @@
+"""Mamba2 (SSD) decoder-only LM — attention-free family."""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from . import layers as L
+from .config import ArchConfig
+from ..distributed.sharding import activation_constraint, fsdp_unshard
+
+Params = Dict[str, Any]
+
+
+def _dtype(cfg):
+    return jnp.dtype(cfg.dtype)
+
+
+def init_layer(key, cfg: ArchConfig) -> Params:
+    return {
+        "norm": L.init_rmsnorm(cfg.d_model),
+        "mixer": L.init_mamba2(key, cfg, _dtype(cfg)),
+    }
+
+
+def init_lm(key, cfg: ArchConfig) -> Params:
+    ks = jax.random.split(key, 3 + cfg.n_layers)
+    stacked = jax.vmap(lambda k: init_layer(k, cfg))(jnp.stack(ks[3:]))
+    p = {
+        "embed": L.init_embedding(ks[0], cfg.vocab, cfg.d_model, _dtype(cfg)),
+        "layers": stacked,
+        "final_norm": L.init_rmsnorm(cfg.d_model),
+    }
+    if not cfg.tie_embeddings:
+        p["head"] = L.init_lm_head(ks[1], cfg.d_model, cfg.vocab, _dtype(cfg))
+    return p
+
+
+def _apply_layer(cfg, p, x, *, ssm_state=None, conv_state=None, use_pallas=False):
+    h = L.rmsnorm(p["norm"], x, cfg.norm_eps)
+    y, new_ssm, new_conv = L.mamba2_block(
+        p["mixer"], h, cfg,
+        ssm_state=ssm_state, conv_state=conv_state, use_pallas=use_pallas,
+    )
+    return x + y, new_ssm, new_conv
+
+
+def final_hidden(params, tokens, cfg, *, use_pallas=False, remat=True):
+    x = activation_constraint(L.embed(params["embed"], tokens, use_pallas=use_pallas))
+
+    def body(x, layer_p):
+        y, _, _ = _apply_layer(cfg, fsdp_unshard(layer_p), x, use_pallas=use_pallas)
+        return y, None
+
+    if remat:
+        body = jax.checkpoint(body, prevent_cse=False)
+    x, _ = jax.lax.scan(body, x, params["layers"])
+    return L.rmsnorm(params["final_norm"], x, cfg.norm_eps)
+
+
+def forward(params, tokens, cfg, *, use_pallas=False, remat=True):
+    x = final_hidden(params, tokens, cfg, use_pallas=use_pallas, remat=remat)
+    from .transformer import hidden_to_logits
+
+    return hidden_to_logits(params, x, cfg)
+
+
+# --------------------------------------------------------------------------
+# Serving: constant-size state cache (the sub-quadratic long_500k story)
+# --------------------------------------------------------------------------
+
+def init_state_cache(cfg: ArchConfig, batch: int) -> Tuple[jax.Array, jax.Array]:
+    s = cfg.ssm
+    H = s.num_heads(cfg.d_model)
+    di = s.d_inner(cfg.d_model)
+    conv_ch = di + 2 * s.state_dim
+    ssm = jnp.zeros((cfg.n_layers, batch, H, s.head_dim, s.state_dim), jnp.float32)
+    conv = jnp.zeros((cfg.n_layers, batch, s.conv_width - 1, conv_ch), _dtype(cfg))
+    return ssm, conv
+
+
+def prefill_with_state(params, tokens, cfg, *, use_pallas=False):
+    """Parallel (chunked-SSD) prompt pass that also extracts per-layer
+    (ssm_state, conv_state) so decode can continue — O(S) instead of the
+    sequential recurrence."""
+    x = activation_constraint(L.embed(params["embed"], tokens, use_pallas=use_pallas))
+
+    def body(x, layer_p):
+        layer_p = fsdp_unshard(layer_p)
+        h = L.rmsnorm(layer_p["norm"], x, cfg.norm_eps)
+        y, st, cv = L.mamba2_block(
+            layer_p["mixer"], h, cfg, use_pallas=use_pallas, return_final_state=True
+        )
+        return x + y, (st, cv)
+
+    x, (ssm_states, conv_states) = jax.lax.scan(body, x, params["layers"])
+    x = L.rmsnorm(params["final_norm"], x, cfg.norm_eps)
+    from .transformer import hidden_to_logits
+
+    logits = hidden_to_logits(params, x[:, -1:], cfg)
+    return logits, (ssm_states, conv_states.astype(_dtype(cfg)))
+
+
+def decode_step(params, tokens, cache_index, caches, cfg, *, use_pallas=False):
+    """Decode with O(1) state (cache_index kept for interface parity)."""
+    ssm_c, conv_c = caches
+    x = activation_constraint(L.embed(params["embed"], tokens, use_pallas=use_pallas))
+
+    def body(x, inp):
+        layer_p, st, cv = inp
+        layer_p = fsdp_unshard(layer_p)
+        y, new_st, new_cv = _apply_layer(
+            cfg, layer_p, x, ssm_state=st, conv_state=cv, use_pallas=use_pallas
+        )
+        return y, (new_st, new_cv)
+
+    x, (new_ssm, new_conv) = jax.lax.scan(body, x, (params["layers"], ssm_c, conv_c))
+    x = L.rmsnorm(params["final_norm"], x, cfg.norm_eps)
+    from .transformer import hidden_to_logits
+
+    return hidden_to_logits(params, x, cfg), (new_ssm, new_conv)

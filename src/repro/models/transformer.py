@@ -1,0 +1,230 @@
+"""Generic decoder-only LM covering the dense / moe / vlm(early-fusion)
+families: GQA or MLA attention + SwiGLU or MoE FFN, scan-over-layers with
+optional remat, KV-cache prefill/decode.
+
+Early-fusion VLM (chameleon) is structurally this model: VQ image tokens are
+ordinary vocabulary entries (the modality frontend is a stub per the brief).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from . import layers as L
+from .config import ArchConfig
+from ..distributed.sharding import activation_constraint, fsdp_unshard
+
+Params = Dict[str, Any]
+
+
+def _dtype(cfg: ArchConfig):
+    return jnp.dtype(cfg.dtype)
+
+
+def init_layer(key, cfg: ArchConfig) -> Params:
+    dt = _dtype(cfg)
+    ks = jax.random.split(key, 4)
+    p: Params = {"norm1": L.init_rmsnorm(cfg.d_model), "norm2": L.init_rmsnorm(cfg.d_model)}
+    if cfg.mla is not None:
+        p["attn"] = L.init_mla(ks[0], cfg, dt)
+    else:
+        p["attn"] = L.init_attention(ks[0], cfg, dt)
+    def _mlp(k):
+        if cfg.mlp_type == "gelu":
+            return L.init_gelu_mlp(k, cfg.d_model, cfg.d_ff, dt)
+        return L.init_swiglu(k, cfg.d_model, cfg.d_ff, dt)
+
+    if cfg.moe is not None:
+        p["moe"] = L.init_moe(ks[1], cfg, dt)
+        if cfg.d_ff:  # e.g. arctic: dense residual MLP in parallel with MoE
+            p["mlp"] = _mlp(ks[2])
+    else:
+        p["mlp"] = _mlp(ks[2])
+    return p
+
+
+def init_lm(key, cfg: ArchConfig) -> Params:
+    dt = _dtype(cfg)
+    ks = jax.random.split(key, 3 + cfg.n_layers)
+    layer_keys = jnp.stack(ks[3:])
+    stacked = jax.vmap(lambda k: init_layer(k, cfg))(layer_keys)
+    p = {
+        "embed": L.init_embedding(ks[0], cfg.vocab, cfg.d_model, dt),
+        "layers": stacked,
+        "final_norm": L.init_rmsnorm(cfg.d_model),
+    }
+    if not cfg.tie_embeddings:
+        p["head"] = L.init_lm_head(ks[1], cfg.d_model, cfg.vocab, dt)
+    return p
+
+
+def _apply_layer(
+    cfg: ArchConfig,
+    p: Params,
+    x: jax.Array,
+    positions: jax.Array,
+    *,
+    kv_cache=None,
+    cache_index=None,
+    use_pallas: bool = False,
+    prefill: bool = False,
+) -> Tuple[jax.Array, Any]:
+    h = L.rmsnorm(p["norm1"], x, cfg.norm_eps)
+    if cfg.mla is not None:
+        attn_out, new_cache = L.mla_attention(
+            p["attn"], h, cfg, positions=positions,
+            kv_cache=kv_cache, cache_index=cache_index, use_pallas=use_pallas,
+            prefill=prefill,
+        )
+    else:
+        attn_out, new_cache = L.attention(
+            p["attn"], h, cfg, positions=positions,
+            kv_cache=kv_cache, cache_index=cache_index, use_pallas=use_pallas,
+            prefill=prefill,
+        )
+    x = x + attn_out
+    h = L.rmsnorm(p["norm2"], x, cfg.norm_eps)
+    dense_mlp = L.gelu_mlp if cfg.mlp_type == "gelu" else L.swiglu
+    if cfg.moe is not None:
+        ff = L.moe(p["moe"], h, cfg)
+        if "mlp" in p:
+            ff = ff + dense_mlp(p["mlp"], h)
+    else:
+        ff = dense_mlp(p["mlp"], h)
+    return x + ff, new_cache
+
+
+def forward(
+    params: Params,
+    tokens: jax.Array,          # (B, S) int32
+    cfg: ArchConfig,
+    *,
+    use_pallas: bool = False,
+    remat: bool = True,
+) -> jax.Array:                 # (B, S, vocab) logits
+    x = activation_constraint(L.embed(params["embed"], tokens, use_pallas=use_pallas))
+    positions = jnp.arange(tokens.shape[1])
+
+    def body(x, layer_p):
+        layer_p = fsdp_unshard(layer_p)   # gather FSDP shards per layer
+        y, _ = _apply_layer(cfg, layer_p, x, positions, use_pallas=use_pallas)
+        return y, None
+
+    if remat:
+        body = jax.checkpoint(body, prevent_cse=False)
+    x, _ = jax.lax.scan(body, x, params["layers"])
+    x = L.rmsnorm(params["final_norm"], x, cfg.norm_eps)
+    return hidden_to_logits(params, x, cfg)
+
+
+def hidden_to_logits(params: Params, x: jax.Array, cfg: ArchConfig) -> jax.Array:
+    if cfg.tie_embeddings:
+        return x @ fsdp_unshard(params["embed"])["table"].T
+    return L.lm_logits(fsdp_unshard({"head": params["head"]})["head"], x)
+
+
+def final_hidden(
+    params: Params,
+    tokens: jax.Array,
+    cfg: ArchConfig,
+    *,
+    use_pallas: bool = False,
+    remat: bool = True,
+) -> jax.Array:
+    """Hidden states after final norm (loss computed separately, chunked)."""
+    x = activation_constraint(L.embed(params["embed"], tokens, use_pallas=use_pallas))
+    positions = jnp.arange(tokens.shape[1])
+
+    def body(x, layer_p):
+        layer_p = fsdp_unshard(layer_p)
+        y, _ = _apply_layer(cfg, layer_p, x, positions, use_pallas=use_pallas)
+        return y, None
+
+    if remat:
+        body = jax.checkpoint(body, prevent_cse=False)
+    x, _ = jax.lax.scan(body, x, params["layers"])
+    return L.rmsnorm(params["final_norm"], x, cfg.norm_eps)
+
+
+# --------------------------------------------------------------------------
+# Serving: KV cache prefill / decode
+# --------------------------------------------------------------------------
+
+def init_kv_cache(cfg: ArchConfig, batch: int, max_seq: int) -> Any:
+    dt = _dtype(cfg)
+    Ll = cfg.n_layers
+    if cfg.mla is not None:
+        m = cfg.mla
+        width = m.kv_lora_rank + m.qk_rope_head_dim
+        return jnp.zeros((Ll, batch, max_seq, width), dtype=dt)
+    dh = cfg.attn_head_dim
+    shape = (Ll, batch, cfg.n_kv_heads, max_seq, dh)
+    return (jnp.zeros(shape, dtype=dt), jnp.zeros(shape, dtype=dt))
+
+
+def _scan_cached(params, x, cfg, caches, cache_index, positions, use_pallas,
+                 prefill=False):
+    if cfg.mla is not None:
+        def body(x, inp):
+            layer_p, cache = inp
+            y, new_cache = _apply_layer(
+                cfg, fsdp_unshard(layer_p), x, positions,
+                kv_cache=cache, cache_index=cache_index, use_pallas=use_pallas,
+                prefill=prefill,
+            )
+            return y, new_cache
+
+        x, new_caches = jax.lax.scan(body, x, (params["layers"], caches))
+    else:
+        def body(x, inp):
+            layer_p, ck, cv = inp
+            y, new_cache = _apply_layer(
+                cfg, fsdp_unshard(layer_p), x, positions,
+                kv_cache=(ck, cv), cache_index=cache_index, use_pallas=use_pallas,
+                prefill=prefill,
+            )
+            return y, new_cache
+
+        x, new_caches = jax.lax.scan(body, x, (params["layers"], *caches))
+    return x, new_caches
+
+
+def decode_step(
+    params: Params,
+    tokens: jax.Array,          # (B, S_new) usually S_new = 1
+    cache_index: jax.Array,     # scalar int32: current length
+    caches: Any,
+    cfg: ArchConfig,
+    *,
+    use_pallas: bool = False,
+    prefill: bool = False,
+) -> Tuple[jax.Array, Any]:
+    """One decode step against a KV cache of ``max_seq`` capacity."""
+    B, Sn = tokens.shape
+    x = activation_constraint(L.embed(params["embed"], tokens, use_pallas=use_pallas))
+    positions = cache_index + jnp.arange(Sn)
+    x, new_caches = _scan_cached(
+        params, x, cfg, caches, cache_index, positions, use_pallas, prefill=prefill
+    )
+    x = L.rmsnorm(params["final_norm"], x, cfg.norm_eps)
+    return hidden_to_logits(params, x, cfg), new_caches
+
+
+def prefill(
+    params: Params,
+    tokens: jax.Array,          # (B, S)
+    caches: Any,
+    cfg: ArchConfig,
+    *,
+    use_pallas: bool = False,
+) -> Tuple[jax.Array, Any]:
+    """Prefill the cache with a full prompt; returns last-token logits.
+    Attention runs flash over the prompt (cache starts empty)."""
+    logits, caches = decode_step(
+        params, tokens, jnp.int32(0), caches, cfg, use_pallas=use_pallas,
+        prefill=True,
+    )
+    return logits[:, -1:], caches

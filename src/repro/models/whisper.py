@@ -1,0 +1,175 @@
+"""Whisper-style encoder-decoder backbone (audio family).
+
+Per the brief, the conv/mel frontend is a STUB: ``input_specs`` supplies
+precomputed frame embeddings (B, S_enc, d_model). The transformer backbone is
+real: pre-LN encoder (bidirectional self-attn + GELU MLP) and decoder (causal
+self-attn + cross-attn + GELU MLP), sinusoidal encoder positions, learned
+decoder positions."""
+from __future__ import annotations
+
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from . import layers as L
+from .config import ArchConfig
+from ..distributed.sharding import activation_constraint, fsdp_unshard
+
+Params = Dict[str, Any]
+
+
+def _dtype(cfg):
+    return jnp.dtype(cfg.dtype)
+
+
+def sinusoids(length: int, channels: int) -> jax.Array:
+    log_timescale = jnp.log(10000.0) / (channels // 2 - 1)
+    inv = jnp.exp(-log_timescale * jnp.arange(channels // 2))
+    scaled = jnp.arange(length)[:, None] * inv[None, :]
+    return jnp.concatenate([jnp.sin(scaled), jnp.cos(scaled)], axis=1)
+
+
+def init_cross_attention(key, cfg: ArchConfig, dtype) -> Params:
+    return L.init_attention(key, cfg, dtype)
+
+
+def cross_attention(p, x, enc_kv, cfg) -> jax.Array:
+    """x: (B, S_dec, D); enc_kv: precomputed (k, v) (B, Hkv, S_enc, dh)."""
+    from ..kernels import ops
+
+    B, S, D = x.shape
+    Hq, Hkv, dh = cfg.n_heads, cfg.n_kv_heads, cfg.attn_head_dim
+    q = (x @ p["wq"]).reshape(B, S, Hq, dh).transpose(0, 2, 1, 3)
+    k, v = enc_kv
+    out = ops.flash_attention(q, k, v, causal=False, use_pallas=False)
+    return out.transpose(0, 2, 1, 3).reshape(B, S, Hq * dh) @ p["wo"]
+
+
+def encode_kv(p, enc_out, cfg) -> Tuple[jax.Array, jax.Array]:
+    B, S, D = enc_out.shape
+    Hkv, dh = cfg.n_kv_heads, cfg.attn_head_dim
+    k = (enc_out @ p["wk"]).reshape(B, S, Hkv, dh).transpose(0, 2, 1, 3)
+    v = (enc_out @ p["wv"]).reshape(B, S, Hkv, dh).transpose(0, 2, 1, 3)
+    return k, v
+
+
+def init_model(key, cfg: ArchConfig) -> Params:
+    dt = _dtype(cfg)
+    enc_layers = cfg.encdec.encoder_layers
+    ks = jax.random.split(key, 8)
+
+    def enc_layer(k):
+        k1, k2 = jax.random.split(k)
+        return {
+            "norm1": L.init_layernorm(cfg.d_model),
+            "attn": L.init_attention(k1, cfg, dt),
+            "norm2": L.init_layernorm(cfg.d_model),
+            "mlp": L.init_gelu_mlp(k2, cfg.d_model, cfg.d_ff, dt),
+        }
+
+    def dec_layer(k):
+        k1, k2, k3 = jax.random.split(k, 3)
+        return {
+            "norm1": L.init_layernorm(cfg.d_model),
+            "self_attn": L.init_attention(k1, cfg, dt),
+            "norm2": L.init_layernorm(cfg.d_model),
+            "cross_attn": init_cross_attention(k2, cfg, dt),
+            "norm3": L.init_layernorm(cfg.d_model),
+            "mlp": L.init_gelu_mlp(k3, cfg.d_model, cfg.d_ff, dt),
+        }
+
+    enc_keys = jnp.stack(jax.random.split(ks[0], enc_layers))
+    dec_keys = jnp.stack(jax.random.split(ks[1], cfg.n_layers))
+    return {
+        "embed": L.init_embedding(ks[2], cfg.vocab, cfg.d_model, dt),
+        "pos_dec": L._dense_init(ks[3], (4096, cfg.d_model), scale=0.01, dtype=dt),
+        "enc_layers": jax.vmap(enc_layer)(enc_keys),
+        "enc_norm": L.init_layernorm(cfg.d_model),
+        "dec_layers": jax.vmap(dec_layer)(dec_keys),
+        "dec_norm": L.init_layernorm(cfg.d_model),
+    }
+
+
+def encode(params, frames, cfg, *, use_pallas=False):
+    """frames: (B, S_enc, D) stub embeddings -> encoder states."""
+    x = frames + sinusoids(frames.shape[1], cfg.d_model).astype(frames.dtype)
+
+    def body(x, p):
+        p = fsdp_unshard(p)
+        h = L.layernorm(p["norm1"], x, cfg.norm_eps)
+        a, _ = L.attention(p["attn"], h, cfg, causal=False,
+                           use_pallas=use_pallas, use_rope=False)
+        x = x + a
+        h = L.layernorm(p["norm2"], x, cfg.norm_eps)
+        return x + L.gelu_mlp(p["mlp"], h), None
+
+    x, _ = jax.lax.scan(body, x, params["enc_layers"])
+    return L.layernorm(params["enc_norm"], x, cfg.norm_eps)
+
+
+def decode_hidden(params, tokens, enc_out, cfg, *, positions=None,
+                  kv_caches=None, cache_index=None, use_pallas=False,
+                  prefill=False):
+    B, S = tokens.shape
+    if positions is None:
+        positions = jnp.arange(S)
+    x = activation_constraint(L.embed(params["embed"], tokens, use_pallas=use_pallas))
+    x = x + params["pos_dec"][positions]
+
+    def body(x, inp):
+        if kv_caches is None:
+            p = inp
+            cache = None
+        else:
+            p, ck, cv = inp
+            cache = (ck, cv)
+        p = fsdp_unshard(p)
+        h = L.layernorm(p["norm1"], x, cfg.norm_eps)
+        a, new_cache = L.attention(
+            p["self_attn"], h, cfg, positions=positions, causal=True,
+            kv_cache=cache, cache_index=cache_index,
+            use_pallas=use_pallas, use_rope=False, prefill=prefill,
+        )
+        x = x + a
+        h = L.layernorm(p["norm2"], x, cfg.norm_eps)
+        enc_kv = encode_kv(p["cross_attn"], enc_out, cfg)
+        x = x + cross_attention(p["cross_attn"], h, enc_kv, cfg)
+        h = L.layernorm(p["norm3"], x, cfg.norm_eps)
+        x = x + L.gelu_mlp(p["mlp"], h)
+        if cache is None:
+            return x, None
+        return x, new_cache
+
+    if kv_caches is None:
+        x, _ = jax.lax.scan(body, x, params["dec_layers"])
+        new_caches = None
+    else:
+        x, new_caches = jax.lax.scan(body, x, (params["dec_layers"], *kv_caches))
+    x = L.layernorm(params["dec_norm"], x, cfg.norm_eps)
+    return x, new_caches
+
+
+def forward(params, tokens, frames, cfg, *, use_pallas=False, remat=True):
+    """Full enc-dec forward -> decoder logits (tied embeddings, Whisper-style)."""
+    enc_out = encode(params, frames, cfg, use_pallas=use_pallas)
+    x, _ = decode_hidden(params, tokens, enc_out, cfg, use_pallas=use_pallas)
+    return x @ params["embed"]["table"].T
+
+
+def init_kv_cache(cfg: ArchConfig, batch: int, max_seq: int):
+    dh = cfg.attn_head_dim
+    shape = (cfg.n_layers, batch, cfg.n_kv_heads, max_seq, dh)
+    dt = _dtype(cfg)
+    return (jnp.zeros(shape, dt), jnp.zeros(shape, dt))
+
+
+def decode_step(params, tokens, cache_index, caches, enc_out, cfg, *,
+                use_pallas=False, prefill=False):
+    positions = cache_index + jnp.arange(tokens.shape[1])
+    x, new_caches = decode_hidden(
+        params, tokens, enc_out, cfg, positions=positions,
+        kv_caches=caches, cache_index=cache_index, use_pallas=use_pallas,
+        prefill=prefill,
+    )
+    return x @ params["embed"]["table"].T, new_caches

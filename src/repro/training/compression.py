@@ -1,0 +1,86 @@
+"""Gradient compression with error feedback — for cross-pod data parallelism.
+
+On a multi-pod mesh the ``pod`` axis rides the slow inter-pod links; the
+standard mitigation is to compress the DP gradient exchange. Two compressors:
+
+  * int8 blockwise (absmax scales) — ~4x traffic reduction, near-lossless
+    with error feedback;
+  * top-k magnitude sparsification — ~(1/density)x, for extreme cases.
+
+Error feedback (Karimireddy et al.): the compression residual is added back
+into the next step's gradient, making biased compressors convergent. The
+compressor runs *before* the (simulated) cross-pod all-reduce; tests verify
+convergence parity on a quadratic problem and a tiny LM.
+"""
+from __future__ import annotations
+
+import functools
+from dataclasses import dataclass
+from typing import Any, Tuple
+
+import jax
+import jax.numpy as jnp
+
+CBLOCK = 256
+
+
+@dataclass(frozen=True)
+class CompressionConfig:
+    kind: str = "none"              # none | int8 | topk
+    topk_density: float = 0.01
+    error_feedback: bool = True
+
+    @property
+    def enabled(self) -> bool:
+        return self.kind != "none"
+
+
+def init_error(params: Any) -> Any:
+    return jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+
+
+def _int8_roundtrip(g: jax.Array) -> jax.Array:
+    flat = g.reshape(-1)
+    pad = (-flat.size) % CBLOCK
+    fp = jnp.pad(flat, (0, pad)).reshape(-1, CBLOCK)
+    scale = jnp.max(jnp.abs(fp), axis=1, keepdims=True) / 127.0
+    q = jnp.round(fp / jnp.maximum(scale, 1e-12)).astype(jnp.int8)
+    deq = (q.astype(jnp.float32) * scale).reshape(-1)[: flat.size]
+    return deq.reshape(g.shape)
+
+
+def _topk_roundtrip(g: jax.Array, density: float) -> jax.Array:
+    flat = g.reshape(-1)
+    k = max(1, int(flat.size * density))
+    _, idx = jax.lax.top_k(jnp.abs(flat), k)
+    out = jnp.zeros_like(flat).at[idx].set(flat[idx])
+    return out.reshape(g.shape)
+
+
+def compress_grads(
+    grads: Any, error: Any, cfg: CompressionConfig
+) -> Tuple[Any, Any, dict]:
+    """Returns (decompressed grads as they arrive after the wire, new error
+    state, metrics). Identity when disabled."""
+    if not cfg.enabled:
+        return grads, error, {"compression_ratio": 1.0}
+
+    def one(g, e):
+        gf = g.astype(jnp.float32) + (e if cfg.error_feedback else 0.0)
+        if cfg.kind == "int8":
+            sent = _int8_roundtrip(gf)
+            ratio = 4.0 * CBLOCK / (CBLOCK + 4)      # int8 payload + fp32 scale
+        elif cfg.kind == "topk":
+            sent = _topk_roundtrip(gf, cfg.topk_density)
+            ratio = 1.0 / (2 * cfg.topk_density)     # value+index per entry
+        else:
+            raise ValueError(cfg.kind)
+        new_e = gf - sent if cfg.error_feedback else jnp.zeros_like(gf)
+        return sent.astype(g.dtype), new_e, ratio
+
+    flat_g, treedef = jax.tree.flatten(grads)
+    flat_e = treedef.flatten_up_to(error)
+    outs = [one(g, e) for g, e in zip(flat_g, flat_e)]
+    new_g = treedef.unflatten([o[0] for o in outs])
+    new_e = treedef.unflatten([o[1] for o in outs])
+    return new_g, new_e, {"compression_ratio": outs[0][2] if outs else 1.0}

@@ -1,0 +1,59 @@
+"""Cross-entropy without materializing (B, S, V) logits.
+
+At command-r-plus scale (vocab 256k) full logits for train_4k would be
+(256, 4096, 256000) — ~1 TB in fp32. The loss is computed in sequence chunks
+inside a lax.scan; within a chunk, logits stay (B, chunk, V[sharded]) and only
+the per-token logsumexp and the label logit survive. With the LM head sharded
+over the model axis, XLA turns the reductions into all-reduces over vocab
+shards (vocab-parallel CE).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+def chunked_softmax_xent(
+    hidden: jax.Array,       # (B, S, D) final hidden states
+    head_w: jax.Array,       # (D, V) lm head (possibly vocab-sharded)
+    labels: jax.Array,       # (B, S) int32
+    *,
+    chunk: int = 512,
+    label_mask: jax.Array | None = None,   # (B, S) 1 = count this token
+) -> jax.Array:
+    B, S, D = hidden.shape
+    chunk = min(chunk, S)
+    assert S % chunk == 0, (S, chunk)
+    n_chunks = S // chunk
+
+    h = hidden.reshape(B, n_chunks, chunk, D).transpose(1, 0, 2, 3)
+    y = labels.reshape(B, n_chunks, chunk).transpose(1, 0, 2)
+    if label_mask is None:
+        m = jnp.ones((n_chunks, B, chunk), dtype=jnp.float32)
+    else:
+        m = label_mask.reshape(B, n_chunks, chunk).transpose(1, 0, 2).astype(jnp.float32)
+
+    def body(acc, inp):
+        h_c, y_c, m_c = inp
+        logits = (h_c.astype(jnp.float32) @ head_w.astype(jnp.float32))
+        lse = jax.nn.logsumexp(logits, axis=-1)
+        gold = jnp.take_along_axis(logits, y_c[..., None], axis=-1)[..., 0]
+        loss = (lse - gold) * m_c
+        return (acc[0] + loss.sum(), acc[1] + m_c.sum()), None
+
+    (total, count), _ = jax.lax.scan(
+        body, (jnp.float32(0), jnp.float32(0)), (h, y, m)
+    )
+    return total / jnp.maximum(count, 1.0)
+
+
+def full_softmax_xent(logits: jax.Array, labels: jax.Array) -> jax.Array:
+    """Reference (small-model) path."""
+    lse = jax.nn.logsumexp(logits.astype(jnp.float32), axis=-1)
+    gold = jnp.take_along_axis(
+        logits.astype(jnp.float32), labels[..., None], axis=-1
+    )[..., 0]
+    return jnp.mean(lse - gold)

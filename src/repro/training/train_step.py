@@ -1,0 +1,123 @@
+"""Train-step builder: loss (chunked CE) -> grads -> compression -> AdamW.
+
+One builder covers every assigned arch family; the returned function is pure
+and jit/pjit-able (the launcher supplies in/out shardings). Gradient
+accumulation (microbatching) wraps the same loss via lax.scan.
+"""
+from __future__ import annotations
+
+import functools
+from dataclasses import dataclass, field
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..models import family_module
+from ..models.config import ArchConfig
+from . import compression, losses, optimizer
+
+
+@dataclass(frozen=True)
+class TrainConfig:
+    adamw: optimizer.AdamWConfig = field(default_factory=optimizer.AdamWConfig)
+    compression: compression.CompressionConfig = field(
+        default_factory=compression.CompressionConfig
+    )
+    loss_chunk: int = 512
+    remat: bool = True
+    use_pallas: bool = False
+    microbatches: int = 1
+
+
+class TrainState(dict):
+    """params / opt / err(optional) / step — a plain dict for easy pytree IO."""
+
+
+def init_state(key, cfg: ArchConfig, tcfg: TrainConfig) -> Dict[str, Any]:
+    mod = family_module(cfg)
+    if cfg.family == "audio":
+        params = mod.init_model(key, cfg)
+    else:
+        params = mod.init_lm(key, cfg)
+    state = {
+        "params": params,
+        "opt": optimizer.init(params, tcfg.adamw),
+        "step": jnp.zeros((), jnp.int32),
+    }
+    if tcfg.compression.enabled and tcfg.compression.error_feedback:
+        state["err"] = compression.init_error(params)
+    return state
+
+
+def _head_weight(params, cfg: ArchConfig):
+    from ..distributed.sharding import fsdp_unshard
+
+    if cfg.tie_embeddings or "head" not in params:
+        return fsdp_unshard(params["embed"])["table"].T
+    return fsdp_unshard({"head": params["head"]})["head"]["w"]
+
+
+def build_loss_fn(cfg: ArchConfig, tcfg: TrainConfig) -> Callable:
+    mod = family_module(cfg)
+
+    def loss_fn(params, batch):
+        if cfg.family == "audio":
+            enc = mod.encode(params, batch["frames"], cfg, use_pallas=tcfg.use_pallas)
+            hidden, _ = mod.decode_hidden(
+                params, batch["tokens"], enc, cfg, use_pallas=tcfg.use_pallas
+            )
+        else:
+            hidden = mod.final_hidden(
+                params, batch["tokens"], cfg,
+                use_pallas=tcfg.use_pallas, remat=tcfg.remat,
+            )
+        chunk = min(tcfg.loss_chunk, hidden.shape[1])
+        while hidden.shape[1] % chunk:
+            chunk -= 1
+        return losses.chunked_softmax_xent(
+            hidden, _head_weight(params, cfg), batch["labels"], chunk=chunk
+        )
+
+    return loss_fn
+
+
+def build_train_step(cfg: ArchConfig, tcfg: TrainConfig) -> Callable:
+    loss_fn = build_loss_fn(cfg, tcfg)
+    grad_fn = jax.value_and_grad(loss_fn)
+
+    def train_step(state: Dict[str, Any], batch: Dict[str, jax.Array]):
+        params = state["params"]
+
+        if tcfg.microbatches > 1:
+            def micro(carry, mb):
+                loss_acc, grad_acc = carry
+                loss, grads = grad_fn(params, mb)
+                grad_acc = jax.tree.map(jnp.add, grad_acc, grads)
+                return (loss_acc + loss, grad_acc), None
+
+            mb_batch = jax.tree.map(
+                lambda x: x.reshape(tcfg.microbatches, -1, *x.shape[1:]), batch
+            )
+            zeros = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+            (loss, grads), _ = jax.lax.scan(micro, (jnp.float32(0), zeros), mb_batch)
+            loss = loss / tcfg.microbatches
+            grads = jax.tree.map(lambda g: g / tcfg.microbatches, grads)
+        else:
+            loss, grads = grad_fn(params, batch)
+
+        metrics = {"loss": loss}
+        new_state = dict(state)
+        if tcfg.compression.enabled:
+            grads, new_err, cm = compression.compress_grads(
+                grads, state.get("err"), tcfg.compression
+            )
+            new_state["err"] = new_err
+            metrics.update(cm)
+
+        new_params, new_opt, om = optimizer.apply(params, grads, state["opt"], tcfg.adamw)
+        metrics.update(om)
+        new_state.update(params=new_params, opt=new_opt, step=state["step"] + 1)
+        return new_state, metrics
+
+    return train_step

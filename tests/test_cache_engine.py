@@ -1,0 +1,81 @@
+"""Cache engine: bit-exactness vs the ChampSim-semantics golden model
+(reproduces the paper's Fig. 4a claim of identical hit/miss counts) +
+property tests on cache invariants."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.memory.cache import CacheGeometry, simulate_cache
+from repro.core.memory.golden import GoldenCache
+
+POLICIES = ["lru", "srrip", "fifo"]
+
+
+@pytest.mark.parametrize("policy", POLICIES)
+@pytest.mark.parametrize(
+    "sets,ways,space",
+    [(4, 2, 64), (16, 4, 800), (1, 8, 40), (8, 16, 4096), (64, 4, 3000), (128, 8, 50000)],
+)
+def test_bit_exact_vs_golden(policy, sets, ways, space, rng):
+    lines = rng.integers(0, space, size=3000)
+    geom = CacheGeometry(num_sets=sets, ways=ways, line_bytes=64)
+    ours = simulate_cache(lines, geom, policy)
+    gold = GoldenCache(geom, policy)
+    gold_hits = gold.run(lines)
+    assert np.array_equal(ours.hits, gold_hits)
+    assert ours.num_hits == gold.num_hits
+    assert ours.num_misses == gold.num_misses
+    assert ours.num_evictions == gold.num_evictions
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    policy=st.sampled_from(POLICIES),
+    sets=st.sampled_from([1, 2, 8, 32, 64]),
+    ways=st.sampled_from([1, 2, 4, 16]),
+    n=st.integers(50, 400),
+    space=st.integers(8, 2000),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_bit_exact_property(policy, sets, ways, n, space, seed):
+    lines = np.random.default_rng(seed).integers(0, space, size=n)
+    geom = CacheGeometry(num_sets=sets, ways=ways, line_bytes=64)
+    ours = simulate_cache(lines, geom, policy)
+    gold_hits = GoldenCache(geom, policy).run(lines)
+    assert np.array_equal(ours.hits, gold_hits)
+
+
+@settings(max_examples=15, deadline=None)
+@given(
+    n=st.integers(100, 500),
+    space=st.integers(10, 500),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_lru_inclusion_property(n, space, seed):
+    """Fully-associative LRU inclusion: every hit at capacity C is a hit at
+    capacity 2C (stack property of LRU)."""
+    lines = np.random.default_rng(seed).integers(0, space, size=n)
+    small = simulate_cache(lines, CacheGeometry(1, 16, 64), "lru")
+    big = simulate_cache(lines, CacheGeometry(1, 32, 64), "lru")
+    assert not np.any(small.hits & ~big.hits)
+
+
+def test_first_access_always_misses(rng):
+    lines = rng.permutation(200)  # all distinct
+    res = simulate_cache(lines, CacheGeometry(8, 4, 64), "lru")
+    assert res.num_hits == 0
+
+
+def test_repeat_within_capacity_hits():
+    lines = np.tile(np.arange(16), 4)  # 16 distinct lines, 4 passes
+    res = simulate_cache(lines, CacheGeometry(4, 8, 64), "lru")
+    # 32 lines capacity >= 16 distinct: everything after pass 1 hits
+    assert res.num_misses == 16
+    assert res.num_hits == 48
+
+
+def test_hits_bounded_by_accesses(rng):
+    lines = rng.integers(0, 100, size=500)
+    res = simulate_cache(lines, CacheGeometry(8, 2, 64), "srrip")
+    assert 0 <= res.num_hits <= 500
+    assert res.num_hits + res.num_misses == 500

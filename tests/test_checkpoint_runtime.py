@@ -1,0 +1,178 @@
+"""Checkpoint manager (atomic, async, integrity, keep-N, restore) + fault
+detection / elastic replanning / straggler policy."""
+import os
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.checkpoint import CheckpointConfig, CheckpointManager
+from repro.models import get_smoke_config
+from repro.runtime import (
+    FailureDetector,
+    FaultConfig,
+    StragglerPolicy,
+    plan_elastic,
+    plan_mesh_shape,
+)
+from repro.training import AdamWConfig, TrainConfig, build_train_step, init_state
+
+KEY = jax.random.PRNGKey(0)
+
+
+def _state():
+    cfg = get_smoke_config("stablelm_3b")
+    tcfg = TrainConfig(adamw=AdamWConfig(), loss_chunk=16)
+    return cfg, tcfg, init_state(KEY, cfg, tcfg)
+
+
+def test_checkpoint_roundtrip(tmp_path):
+    cfg, tcfg, state = _state()
+    mgr = CheckpointManager(CheckpointConfig(directory=str(tmp_path), async_save=False))
+    mgr.save(7, state, extra={"note": "x"})
+    step, extra, restored = mgr.restore(target_tree=state)
+    assert step == 7 and extra["note"] == "x"
+    for a, b in zip(jax.tree.leaves(state), jax.tree.leaves(restored)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_checkpoint_async_and_keepn(tmp_path):
+    cfg, tcfg, state = _state()
+    mgr = CheckpointManager(CheckpointConfig(directory=str(tmp_path), keep=2))
+    for s in (1, 2, 3, 4):
+        mgr.save(s, state)
+        mgr.wait()
+    assert mgr.all_steps() == [3, 4]
+
+
+def test_checkpoint_detects_corruption(tmp_path):
+    cfg, tcfg, state = _state()
+    mgr = CheckpointManager(CheckpointConfig(directory=str(tmp_path), async_save=False))
+    mgr.save(1, state)
+    d = os.path.join(str(tmp_path), "step_0000000001")
+    victim = [f for f in os.listdir(d) if f.endswith(".npy")][0]
+    with open(os.path.join(d, victim), "r+b") as f:
+        f.seek(200)
+        f.write(b"\xde\xad\xbe\xef")
+    with pytest.raises(IOError):
+        mgr.restore(target_tree=state)
+
+
+def test_checkpoint_resume_training(tmp_path):
+    """Train 5 steps, checkpoint, train 5 more; restart from ckpt must land
+    on the same loss trajectory (restart-safe data pipeline + state)."""
+    from repro.data import LMDataConfig, lm_batch
+
+    cfg, tcfg, state = _state()
+    step_fn = jax.jit(build_train_step(cfg, tcfg))
+    dcfg = LMDataConfig(vocab=cfg.vocab, seq_len=32, global_batch=4, seed=0)
+    mgr = CheckpointManager(CheckpointConfig(directory=str(tmp_path), async_save=False))
+
+    for i in range(5):
+        state, _ = step_fn(state, {k: jnp.asarray(v) for k, v in lm_batch(dcfg, i).items()})
+    mgr.save(5, state)
+    cont = []
+    for i in range(5, 10):
+        state, m = step_fn(state, {k: jnp.asarray(v) for k, v in lm_batch(dcfg, i).items()})
+        cont.append(float(m["loss"]))
+
+    _, _, restored = mgr.restore(target_tree=init_state(KEY, cfg, tcfg))
+    re_losses = []
+    for i in range(5, 10):
+        restored, m = step_fn(restored, {k: jnp.asarray(v) for k, v in lm_batch(dcfg, i).items()})
+        re_losses.append(float(m["loss"]))
+    np.testing.assert_allclose(cont, re_losses, rtol=1e-5)
+
+
+# --------------------------------------------------------------------------
+# fault detection + elastic + straggler
+# --------------------------------------------------------------------------
+
+def test_failure_detector_flags_dead_host():
+    clock = [0.0]
+    det = FailureDetector([f"h{i}" for i in range(8)],
+                          FaultConfig(heartbeat_timeout_s=10), clock=lambda: clock[0])
+    clock[0] = 5.0
+    for i in range(8):
+        if i != 3:
+            det.heartbeat(f"h{i}")
+    clock[0] = 12.0    # h3 last seen at 0 (>10s ago); others at 5 (7s ago)
+    dead = det.poll()
+    assert dead == {"h3"}
+    assert not det.should_halt()
+    assert len(det.healthy) == 7
+
+
+def test_failure_detector_halts_below_quorum():
+    clock = [0.0]
+    det = FailureDetector(["a", "b", "c", "d"],
+                          FaultConfig(heartbeat_timeout_s=1, min_healthy_fraction=0.75),
+                          clock=lambda: clock[0])
+    det.inject_failure("a")
+    det.inject_failure("b")
+    det.poll()
+    assert det.should_halt()
+
+
+def test_plan_mesh_shape():
+    assert plan_mesh_shape(256, 16) == (16, 16)
+    assert plan_mesh_shape(512, 16, pods=2) == (2, 16, 16)
+    assert plan_mesh_shape(240, 16) == (15, 16)      # lost a host: shrink data
+    assert plan_mesh_shape(8, 16) == (1, 1, 8)       # degenerate: shrink model
+
+
+def test_plan_elastic_preserves_model_axis():
+    plan = plan_elastic((16, 16), ("data", "model"), surviving_devices=240)
+    assert plan.mesh_shape == (15, 16)
+    assert plan.axis_names == ("data", "model")
+    assert plan.dropped_devices == 0
+    plan2 = plan_elastic((2, 16, 16), ("pod", "data", "model"), 256 + 240)
+    assert plan2.mesh_shape[-1] == 16
+
+
+def test_elastic_restore_across_topology(tmp_path):
+    """Checkpoint written under one topology restores onto another (the
+    elastic-scaling path; single real device, shardings still exercised)."""
+    cfg, tcfg, state = _state()
+    mgr = CheckpointManager(CheckpointConfig(directory=str(tmp_path), async_save=False))
+    mgr.save(3, state)
+    mesh = jax.make_mesh((1, 1), ("data", "model"))
+    from repro.distributed import param_specs, tree_shardings
+
+    shapes = jax.eval_shape(lambda: state)
+    specs = param_specs(shapes, mesh)
+    sh = tree_shardings(mesh, specs)
+    step, _, restored = mgr.restore(target_tree=state, shardings=sh)
+    assert step == 3
+    leaf = jax.tree.leaves(restored)[0]
+    assert leaf.sharding is not None
+
+
+def test_straggler_policy_rebalances():
+    pol = StragglerPolicy(threshold=1.5, window=4)
+    rep = None
+    for _ in range(4):
+        rep = pol.observe({"h0": 1.0, "h1": 1.0, "h2": 1.0, "h3": 2.5})
+    assert rep.stragglers == ["h3"]
+    assert rep.microbatch_shares["h3"] < 1.0
+    assert rep.persistent == ["h3"]
+
+
+def test_straggler_policy_drop_mode():
+    pol = StragglerPolicy(threshold=1.5, window=4, mode="drop")
+    for _ in range(4):
+        rep = pol.observe({"h0": 1.0, "h1": 1.0, "h2": 1.0, "h3": 3.0})
+    assert rep.microbatch_shares["h3"] == 0.0
+    assert abs(rep.grad_scale - 4 / 3) < 1e-9
+
+
+def test_straggler_recovers():
+    pol = StragglerPolicy(threshold=1.5, window=3)
+    for _ in range(3):
+        pol.observe({"h0": 1.0, "h1": 3.0})
+    for _ in range(6):
+        rep = pol.observe({"h0": 1.0, "h1": 1.0})
+    assert rep.stragglers == []
+    assert rep.persistent == []

@@ -1,0 +1,215 @@
+"""Sharding rules, collective matmul, DLRM model, data pipeline, HLO
+analyzer, matrix model, energy, oracle, lm_mapper."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from jax.sharding import PartitionSpec as P
+
+from repro.core import MatrixOpSpec, tpuv6e
+from repro.core.energy import estimate_energy
+from repro.core.matrix_model import matrix_compute_cycles, simulate_matrix_op
+from repro.distributed import batch_spec, param_specs
+from repro.distributed.collective_matmul import psum_matmul, ring_matmul
+from repro.distributed.sharding import greedy_spec
+from repro.launch.hlo_analysis import analyze
+from repro.models import get_smoke_config, family_module
+from repro.models.config import SHAPES_BY_NAME
+
+KEY = jax.random.PRNGKey(0)
+
+
+# --------------------------------------------------------------------------
+# sharding rules
+# --------------------------------------------------------------------------
+
+def _fake_mesh_16x16():
+    # abstract mesh for spec computation only (no allocation happens)
+    import types
+    m = types.SimpleNamespace()
+    m.axis_names = ("data", "model")
+    m.devices = np.empty((16, 16), dtype=object)
+    return m
+
+
+def test_param_specs_2d_fsdp_tp():
+    cfg = get_smoke_config("stablelm_3b").replace(
+        d_model=256, n_heads=16, n_kv_heads=16, head_dim=16, d_ff=512, vocab=4096
+    )
+    mod = family_module(cfg)
+    shapes = jax.eval_shape(lambda: mod.init_lm(KEY, cfg))
+    specs = param_specs(shapes, _fake_mesh_16x16())
+    # stacked layers: leading None then (data, model) for up-proj
+    assert specs["layers"]["attn"]["wq"] == P(None, "data", "model")
+    assert specs["layers"]["attn"]["wo"] == P(None, "model", "data")
+    assert specs["layers"]["mlp"]["wd"] == P(None, "model", "data")
+    assert specs["embed"]["table"] == P("model", "data")
+    assert specs["head"]["w"] == P("data", "model")
+    assert specs["final_norm"]["scale"] == P(None)
+
+
+def test_param_specs_divisibility_fallback():
+    cfg = get_smoke_config("stablelm_3b")  # tiny dims not divisible by 16
+    mod = family_module(cfg)
+    shapes = jax.eval_shape(lambda: mod.init_lm(KEY, cfg))
+    specs = param_specs(shapes, _fake_mesh_16x16())
+    wq = specs["layers"]["attn"]["wq"]
+    assert all(ax in (None, "data", "model") for ax in wq)
+
+
+def test_moe_expert_specs():
+    cfg = get_smoke_config("arctic_480b").replace(d_model=256, d_ff=512)
+    import dataclasses
+    cfg = cfg.replace(moe=dataclasses.replace(cfg.moe, num_experts=32, d_ff_expert=512))
+    mod = family_module(cfg)
+    shapes = jax.eval_shape(lambda: mod.init_lm(KEY, cfg))
+    specs = param_specs(shapes, _fake_mesh_16x16())
+    assert specs["layers"]["moe"]["wg"] == P(None, "model", "data", None)
+    assert specs["layers"]["moe"]["wd"] == P(None, "model", None, "data")
+
+
+def test_batch_spec_modes():
+    mesh = _fake_mesh_16x16()
+    assert batch_spec(SHAPES_BY_NAME["train_4k"], mesh) == P("data", None)
+    # long_500k: batch=1 -> sequence parallelism
+    assert batch_spec(SHAPES_BY_NAME["long_500k"], mesh) == P(None, "data")
+
+
+def test_greedy_spec():
+    mesh = _fake_mesh_16x16()
+    s = greedy_spec((24, 128, 80, 64, 64), mesh,
+                    [(1, "data"), (2, "model"), (3, "model")])
+    assert s == P(None, "data", "model", None, None)
+    s2 = greedy_spec((4, 2, 7, 13), mesh, [(2, "data"), (3, "model")])
+    assert s2 == P(None, None, None, None)
+
+
+# --------------------------------------------------------------------------
+# collective matmul (1-device mesh: semantics, not speed)
+# --------------------------------------------------------------------------
+
+def test_ring_matmul_matches_psum(rng):
+    mesh = jax.make_mesh((1,), ("model",))
+    x = jnp.asarray(rng.standard_normal((8, 16)), jnp.float32)
+    w = jnp.asarray(rng.standard_normal((16, 32)), jnp.float32)
+    a = ring_matmul(x, w, mesh, axis="model")
+    b = psum_matmul(x, w, mesh, axis="model")
+    np.testing.assert_allclose(np.asarray(a), np.asarray(b), atol=1e-5)
+    np.testing.assert_allclose(np.asarray(a), np.asarray(x @ w), atol=1e-5)
+
+
+# --------------------------------------------------------------------------
+# HLO analyzer
+# --------------------------------------------------------------------------
+
+def test_hlo_analyzer_trip_counts():
+    D = 64
+    w = jnp.ones((4, D, D), jnp.float32)
+    x = jnp.ones((8, D), jnp.float32)
+
+    def scanned(x, w):
+        return jax.lax.scan(lambda c, wi: (c @ wi, None), x, w)[0]
+
+    def unrolled(x, w):
+        for i in range(4):
+            x = x @ w[i]
+        return x
+
+    fs = analyze(jax.jit(scanned).lower(x, w).compile().as_text()).flops
+    fu = analyze(jax.jit(unrolled).lower(x, w).compile().as_text()).flops
+    true = 4 * 2 * 8 * D * D
+    assert abs(fs - true) / true < 0.05
+    assert abs(fu - true) / true < 0.05
+
+
+def test_hlo_analyzer_collectives():
+    mesh = jax.make_mesh((1,), ("data",))
+
+    def f(x):
+        return jax.shard_map(lambda a: jax.lax.psum(a @ a.T, "data"), mesh=mesh,
+                             in_specs=P("data", None), out_specs=P(None, None))(x)
+
+    c = analyze(jax.jit(f).lower(jnp.ones((8, 64))).compile().as_text())
+    assert c.collectives.get("all-reduce", 0) == 8 * 8 * 4
+
+
+# --------------------------------------------------------------------------
+# analytical matrix model / energy / dlrm / data
+# --------------------------------------------------------------------------
+
+def test_matrix_model_hand_computed():
+    hw = tpuv6e()
+    # single fold WS: K_t=256 fills, M=64 streams, C_t=256 drain
+    op = MatrixOpSpec(m=64, n=256, k=256)
+    cycles = matrix_compute_cycles(op, hw)
+    assert cycles == 256 + 64 + 256 + 256 - 2
+    # two folds along K
+    op2 = MatrixOpSpec(m=64, n=256, k=512)
+    assert matrix_compute_cycles(op2, hw) == 2 * cycles
+
+
+def test_matrix_model_invariants():
+    """The WS fold model charges weight fills as array-occupied cycles, so
+    compute >= fill time always; totals overlap double-buffered memory; and
+    streaming more rows amortizes the fill (higher utilization)."""
+    hw = tpuv6e()
+    tall = simulate_matrix_op(MatrixOpSpec(m=8192, n=256, k=256), hw)
+    fat = simulate_matrix_op(MatrixOpSpec(m=8, n=256, k=256), hw)
+    for r in (tall, fat):
+        assert r.total_cycles >= max(r.compute_cycles, r.memory_cycles)
+    # utilization = flops/cycle: tall amortizes the 256-cycle weight fill
+    assert tall.utilization > fat.utilization * 4
+
+
+def test_energy_monotone():
+    hw = tpuv6e()
+    e1 = estimate_energy(hw, macs=1e9, vector_ops=1e6, onchip_read_bytes=1e8,
+                         onchip_write_bytes=1e8, offchip_bytes=1e9, total_cycles=1e6)
+    e2 = estimate_energy(hw, macs=1e9, vector_ops=1e6, onchip_read_bytes=1e8,
+                         onchip_write_bytes=1e8, offchip_bytes=2e9, total_cycles=1e6)
+    assert e2.total_pj > e1.total_pj
+    assert e2.offchip_pj == 2 * e1.offchip_pj
+
+
+def test_dlrm_forward_and_loss(rng):
+    from repro.models import dlrm
+
+    cfg = dlrm.smoke_config()
+    params = dlrm.init(KEY, cfg)
+    B = 8
+    dense = jnp.asarray(rng.standard_normal((B, cfg.dense_features)), jnp.float32)
+    sparse = jnp.asarray(
+        rng.integers(0, cfg.rows_per_table, (B, cfg.num_tables, cfg.lookups_per_table)),
+        jnp.int32,
+    )
+    out = dlrm.forward(params, dense, sparse, cfg)
+    assert out.shape == (B,)
+    loss = dlrm.bce_loss(out, jnp.ones(B))
+    assert np.isfinite(float(loss))
+    # pallas path agrees
+    out_p = dlrm.forward(params, dense, sparse, cfg, use_pallas=True)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(out_p), atol=1e-4)
+
+
+def test_lm_data_pipeline_deterministic_and_learnable():
+    from repro.data import LMDataConfig, lm_batch
+
+    cfg = LMDataConfig(vocab=256, seq_len=32, global_batch=4, seed=1)
+    a, b = lm_batch(cfg, 5), lm_batch(cfg, 5)
+    assert np.array_equal(a["tokens"], b["tokens"])
+    c = lm_batch(cfg, 6)
+    assert not np.array_equal(a["tokens"], c["tokens"])
+    assert a["tokens"].shape == (4, 32)
+    np.testing.assert_array_equal(a["labels"][:, :-1], a["tokens"][:, 1:])
+
+
+def test_lm_mapper_produces_sane_workload():
+    from repro.core.lm_mapper import lm_workload
+    from repro.models import get_config
+
+    cfg = get_config("stablelm_3b")
+    wl = lm_workload(cfg, SHAPES_BY_NAME["train_4k"])
+    # 6ND rule: mapper matrix flops within 2x of 6 * params * tokens
+    six_nd = 6 * 2.8e9 * 256 * 4096
+    assert 0.4 < wl.matrix_flops / six_nd < 2.5
+    assert wl.embedding_ops[0].rows_per_table == cfg.vocab

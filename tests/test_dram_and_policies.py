@@ -1,0 +1,104 @@
+"""DRAM model vs sequential golden reference; fast path tolerance; on-chip
+policy semantics (SPM / cache / pinning)."""
+import numpy as np
+import pytest
+
+from repro.core.hardware import OnChipPolicy, tpuv6e
+from repro.core.memory.dram import DramModel, estimate_dram_fast, simulate_dram
+from repro.core.memory.golden_dram import golden_dram
+from repro.core.memory.policies import profile_hot_lines, run_policy
+from repro.core.trace import (
+    AddressTrace,
+    expand_trace,
+    generate_zipf_trace,
+    translate,
+)
+from repro.core.workload import EmbeddingOpSpec
+
+
+@pytest.fixture
+def dm():
+    return DramModel.from_hardware(tpuv6e())
+
+
+def _vec_trace(rng, n_vec, space, lpv=8):
+    base = rng.integers(0, space, size=n_vec) * lpv
+    return (base[:, None] + np.arange(lpv)[None, :]).reshape(-1)
+
+
+@pytest.mark.parametrize("pattern", ["random", "stream", "zipf"])
+def test_dram_engine_matches_golden(pattern, dm, rng):
+    if pattern == "stream":
+        lines = np.arange(20000)
+    elif pattern == "zipf":
+        v = generate_zipf_trace(2500, 100_000, 1.0, seed=3)
+        lines = (v[:, None] * 8 + np.arange(8)[None, :]).reshape(-1)
+    else:
+        lines = _vec_trace(rng, 2500, 500_000)
+    ours = simulate_dram(lines, dm)
+    gold = golden_dram(lines, dm)
+    assert ours.row_hits == gold.row_hits
+    # f32 scan accumulation vs python float: allow fp drift only
+    assert abs(ours.finish_cycle - gold.finish_cycle) / gold.finish_cycle < 1e-4
+
+
+def test_dram_fast_path_tolerance(dm, rng):
+    lines = _vec_trace(rng, 5000, 1_000_000)
+    det = simulate_dram(lines, dm)
+    fast = estimate_dram_fast(lines, dm)
+    assert abs(fast.finish_cycle - det.finish_cycle) / det.finish_cycle < 0.10
+    assert fast.row_hits == det.row_hits  # transition counting is exact
+
+
+def test_dram_streaming_beats_random(dm, rng):
+    stream = simulate_dram(np.arange(20000), dm)
+    rand = simulate_dram(_vec_trace(rng, 2500, 10_000_000), dm)
+    assert stream.finish_cycle < rand.finish_cycle
+    assert stream.row_hit_rate > rand.row_hit_rate
+
+
+def _atrace(rng, hw, n=2000):
+    spec = EmbeddingOpSpec(num_tables=4, rows_per_table=1000, dim=128,
+                           lookups_per_sample=10, dtype_bytes=4)
+    tr = generate_zipf_trace(n, 1000, 1.0, seed=1)
+    full = expand_trace(tr, spec, batch_size=n // 40, seed=2)
+    return translate(full, spec, hw.onchip.line_bytes), spec
+
+
+def test_spm_counts(rng):
+    hw = tpuv6e()
+    at, spec = _atrace(rng, hw)
+    out = run_policy(at, hw)
+    n = len(at)
+    assert out.offchip_reads == n            # everything fetched off-chip
+    assert out.onchip_reads == n
+    assert out.onchip_writes == n
+    assert not out.hits.any()
+    assert abs(out.onchip_ratio - 2 / 3) < 1e-9
+
+
+def test_cache_policy_reduces_offchip(rng):
+    hw = tpuv6e()
+    at, spec = _atrace(rng, hw)
+    spm = run_policy(at, hw)
+    lru = run_policy(at, hw.with_policy(OnChipPolicy.LRU))
+    assert lru.offchip_reads < spm.offchip_reads
+    assert lru.onchip_ratio > spm.onchip_ratio
+
+
+def test_pinning_hits_hot_lines(rng):
+    hw = tpuv6e().with_policy(OnChipPolicy.PINNING)
+    at, spec = _atrace(rng, hw, n=4000)
+    out = run_policy(at, hw)
+    # hottest lines pinned -> hit rate at least the hot mass share
+    assert out.hit_rate > 0.3
+    # pinned set within capacity
+    hot = profile_hot_lines(at.lines, hw.onchip.num_lines)
+    assert len(hot) <= hw.onchip.num_lines
+
+
+def test_pinning_respects_capacity(rng):
+    lines = rng.integers(0, 100_000, size=5000)
+    hot = profile_hot_lines(lines, 64)
+    assert len(hot) <= 64
+    assert np.all(np.diff(hot) > 0)  # sorted unique

@@ -1,0 +1,163 @@
+"""Pallas kernels vs pure-jnp oracles: shape/dtype sweeps (interpret=True)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import ops, ref
+
+
+def _rand(rng, shape, dtype):
+    x = rng.standard_normal(shape).astype(np.float32)
+    return jnp.asarray(x, dtype=dtype)
+
+
+# --------------------------------------------------------------------------
+# embedding bag / gather (the paper op)
+# --------------------------------------------------------------------------
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("T,R,D,B,L", [
+    (1, 16, 32, 2, 1),
+    (3, 50, 96, 4, 7),
+    (2, 128, 128, 8, 12),
+    (4, 64, 200, 2, 5),     # D not lane-aligned -> padding path
+])
+def test_embedding_bag_sweep(T, R, D, B, L, dtype, rng):
+    table = _rand(rng, (T * R, D), dtype)
+    idx = jnp.asarray(rng.integers(0, R, size=(B, T, L)), jnp.int32)
+    out_k = ops.embedding_bag(table, idx, R, use_pallas=True)
+    out_r = ops.embedding_bag(table, idx, R, use_pallas=False)
+    tol = 1e-5 if dtype == jnp.float32 else 5e-2
+    np.testing.assert_allclose(
+        np.asarray(out_k, np.float32), np.asarray(out_r, np.float32),
+        atol=tol, rtol=tol,
+    )
+
+
+@pytest.mark.parametrize("shape", [(7,), (3, 5), (2, 3, 4)])
+def test_embedding_gather_sweep(shape, rng):
+    table = _rand(rng, (64, 48), jnp.float32)
+    idx = jnp.asarray(rng.integers(0, 64, size=shape), jnp.int32)
+    k = ops.embedding_gather(table, idx, use_pallas=True)
+    r = ops.embedding_gather(table, idx, use_pallas=False)
+    np.testing.assert_allclose(np.asarray(k), np.asarray(r))
+
+
+def test_embedding_bag_pinned_equals_plain(rng):
+    """Hot-pinned path (paper's Profiling policy on TPU) == plain bag."""
+    T, R, D, B, L = 3, 40, 64, 4, 6
+    table = _rand(rng, (T * R, D), jnp.float32)
+    idx = jnp.asarray(rng.integers(0, R, size=(B, T, L)), jnp.int32)
+    hot_ids = np.sort(rng.choice(T * R, size=25, replace=False)).astype(np.int64)
+    pos, mask = ops.split_hot_cold(np.asarray(idx), hot_ids, R)
+    hot_table = table[jnp.asarray(hot_ids)]
+    plain = ops.embedding_bag(table, idx, R, use_pallas=False)
+    for up in (True, False):
+        pinned = ops.embedding_bag_pinned(
+            table, hot_table, idx, jnp.asarray(pos), jnp.asarray(mask), R,
+            use_pallas=up,
+        )
+        np.testing.assert_allclose(
+            np.asarray(pinned), np.asarray(plain), atol=1e-4, rtol=1e-4
+        )
+
+
+def test_split_hot_cold_mask_semantics(rng):
+    idx = rng.integers(0, 100, size=(2, 3, 4))
+    hot = np.array([5, 105, 250])           # global ids (t*R + r), R=100
+    pos, mask = ops.split_hot_cold(idx, hot, 100)
+    glob = np.arange(3)[None, :, None] * 100 + idx
+    assert np.array_equal(mask.astype(bool), np.isin(glob, hot))
+
+
+# --------------------------------------------------------------------------
+# flash attention
+# --------------------------------------------------------------------------
+
+@pytest.mark.parametrize("causal", [True, False])
+@pytest.mark.parametrize("B,Hq,Hkv,S,d", [
+    (1, 2, 2, 128, 32),
+    (2, 8, 2, 256, 64),     # GQA
+    (1, 4, 1, 384, 64),     # MQA, ragged block (384 = 3*128)
+    (2, 4, 4, 256, 128),
+])
+def test_flash_attention_sweep(B, Hq, Hkv, S, d, causal, rng):
+    q = _rand(rng, (B, Hq, S, d), jnp.float32)
+    k = _rand(rng, (B, Hkv, S, d), jnp.float32)
+    v = _rand(rng, (B, Hkv, S, d), jnp.float32)
+    out_k = ops.flash_attention(q, k, v, causal=causal, use_pallas=True)
+    out_r = ref.flash_attention_ref(q, k, v, causal=causal)
+    np.testing.assert_allclose(np.asarray(out_k), np.asarray(out_r),
+                               atol=2e-5, rtol=2e-5)
+
+
+def test_flash_attention_bf16(rng):
+    q = _rand(rng, (1, 2, 128, 64), jnp.bfloat16)
+    k = _rand(rng, (1, 2, 128, 64), jnp.bfloat16)
+    v = _rand(rng, (1, 2, 128, 64), jnp.bfloat16)
+    out_k = ops.flash_attention(q, k, v, causal=True, use_pallas=True)
+    out_r = ref.flash_attention_ref(q, k, v, causal=True)
+    np.testing.assert_allclose(np.asarray(out_k, np.float32),
+                               np.asarray(out_r, np.float32), atol=3e-2)
+
+
+@pytest.mark.parametrize("causal", [True, False])
+def test_chunked_attention_matches_full(causal, rng):
+    """The long-context XLA path (scan online-softmax) == full softmax, incl.
+    GQA and dv != dq (MLA shapes)."""
+    q = _rand(rng, (2, 6, 96, 48), jnp.float32)
+    k = _rand(rng, (2, 2, 96, 48), jnp.float32)
+    v = _rand(rng, (2, 2, 96, 32), jnp.float32)    # dv != dq
+    out_c = ref.chunked_attention(q, k, v, causal=causal, k_block=32)
+    # reference via repeat + full softmax
+    kf = jnp.repeat(k, 3, axis=1)
+    vf = jnp.repeat(v, 3, axis=1)
+    s = jnp.einsum("bhqd,bhkd->bhqk", q, kf) / np.sqrt(48)
+    if causal:
+        mask = jnp.tril(jnp.ones((96, 96), bool))
+        s = jnp.where(mask[None, None], s, -1e30)
+    out_f = jnp.einsum("bhqk,bhkd->bhqd", jax.nn.softmax(s, -1), vf)
+    np.testing.assert_allclose(np.asarray(out_c), np.asarray(out_f),
+                               atol=2e-5, rtol=2e-5)
+
+
+# --------------------------------------------------------------------------
+# mamba2 SSD
+# --------------------------------------------------------------------------
+
+@pytest.mark.parametrize("B,H,S,P,N,chunk", [
+    (1, 2, 64, 16, 32, 16),
+    (2, 4, 256, 32, 64, 64),
+    (1, 3, 128, 64, 128, 128),
+])
+def test_mamba2_ssd_sweep(B, H, S, P, N, chunk, rng):
+    x = _rand(rng, (B, H, S, P), jnp.float32) * 0.5
+    dt = jnp.asarray(rng.uniform(0.001, 0.1, size=(B, H, S)), jnp.float32)
+    A = -jnp.exp(_rand(rng, (H,), jnp.float32))
+    adt = A[None, :, None] * dt
+    Bm = _rand(rng, (B, S, N), jnp.float32) * 0.3
+    C = _rand(rng, (B, S, N), jnp.float32) * 0.3
+    yk = ops.mamba2_ssd(x, adt, dt, Bm, C, chunk=chunk, use_pallas=True)
+    yr = ref.mamba2_ssd_ref(x, adt, dt, Bm, C)
+    np.testing.assert_allclose(np.asarray(yk), np.asarray(yr),
+                               atol=2e-4, rtol=2e-3)
+
+
+def test_mamba2_final_state_matches_sequential(rng):
+    B, H, S, P, N = 2, 3, 96, 16, 32
+    x = _rand(rng, (B, H, S, P), jnp.float32) * 0.5
+    dt = jnp.asarray(rng.uniform(0.001, 0.1, size=(B, H, S)), jnp.float32)
+    A = -jnp.exp(_rand(rng, (H,), jnp.float32))
+    adt = A[None, :, None] * dt
+    Bm = _rand(rng, (B, S, N), jnp.float32) * 0.3
+
+    closed = ref.mamba2_final_state(x, adt, dt, Bm)
+    # sequential recurrence
+    state = np.zeros((B, H, P, N), np.float32)
+    xn, adtn, dtn, Bn = map(np.asarray, (x, adt, dt, Bm))
+    for t in range(S):
+        decay = np.exp(adtn[:, :, t])[..., None, None]
+        outer = dtn[:, :, t, None, None] * xn[:, :, t, :, None] * Bn[:, None, t, None, :]
+        state = decay * state + outer
+    np.testing.assert_allclose(np.asarray(closed), state, atol=1e-4, rtol=1e-3)

@@ -1,0 +1,130 @@
+"""Trace generation/translation properties + full-engine behaviour
+(lane-decomposition exactness, engine-vs-oracle counts, policy case study)."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import OnChipPolicy, dlrm_rmc2_small, simulate, tpuv6e
+from repro.core.engine import lane_geometry
+from repro.core.memory.cache import CacheGeometry, simulate_cache
+from repro.core.oracle import oracle_run
+from repro.core.trace import (
+    REUSE_LEVELS,
+    dominance_fraction,
+    expand_trace,
+    generate_zipf_trace,
+    reuse_trace,
+    translate,
+)
+from repro.core.workload import EmbeddingOpSpec
+
+
+def test_zipf_deterministic():
+    a = generate_zipf_trace(1000, 5000, 1.0, seed=7)
+    b = generate_zipf_trace(1000, 5000, 1.0, seed=7)
+    assert np.array_equal(a, b)
+    assert a.min() >= 0 and a.max() < 5000
+
+
+def test_reuse_levels_match_paper():
+    """Paper: Reuse High ~4% of vectors dominate, Low ~46%."""
+    n = 1_000_000
+    d_high = dominance_fraction(reuse_trace("reuse_high", n, n, 0), n)
+    d_mid = dominance_fraction(reuse_trace("reuse_mid", n, n, 0), n)
+    d_low = dominance_fraction(reuse_trace("reuse_low", n, n, 0), n)
+    assert 0.02 < d_high < 0.07
+    assert 0.12 < d_mid < 0.30
+    assert 0.40 < d_low < 0.55
+    assert d_high < d_mid < d_low
+
+
+@settings(max_examples=20, deadline=None)
+@given(
+    tables=st.integers(1, 6),
+    rows=st.integers(10, 500),
+    dim=st.sampled_from([16, 64, 128]),
+    lookups=st.integers(1, 10),
+    batch=st.integers(1, 8),
+)
+def test_expand_translate_properties(tables, rows, dim, lookups, batch):
+    spec = EmbeddingOpSpec(num_tables=tables, rows_per_table=rows, dim=dim,
+                           lookups_per_sample=lookups, dtype_bytes=4)
+    tr = generate_zipf_trace(batch * tables * lookups, rows, 0.9, seed=1)
+    full = expand_trace(tr, spec, batch)
+    assert len(full) == batch * tables * lookups
+    assert full.row_ids.min() >= 0 and full.row_ids.max() < rows
+    at = translate(full, spec, line_bytes=64)
+    lpv = -(-dim * 4 // 64)
+    assert len(at) == len(full) * lpv
+    # addresses land inside the table region they belong to
+    table_of_line = (at.lines * 64) // spec.table_bytes
+    assert np.array_equal(table_of_line, np.repeat(full.table_ids, lpv))
+
+
+def test_lane_decomposition_exact(rng):
+    """Vector-granular lane sim == line-level sim (engine fast path)."""
+    hw = tpuv6e().with_policy(OnChipPolicy.LRU, capacity_bytes=1 << 20)
+    spec = EmbeddingOpSpec(num_tables=4, rows_per_table=5000, dim=128,
+                           lookups_per_sample=20, dtype_bytes=4)
+    tr = generate_zipf_trace(4 * 20 * 64, 5000, 1.0, seed=3)
+    full = expand_trace(tr, spec, batch_size=64, seed=1)
+
+    at = translate(full, spec, hw.onchip.line_bytes)
+    geom = CacheGeometry.from_capacity(hw.onchip.capacity_bytes,
+                                       hw.onchip.line_bytes, hw.onchip.ways)
+    line_hits = simulate_cache(at.lines, geom, "lru").hits.reshape(len(full), -1)
+    assert np.array_equal(line_hits.all(1), line_hits.any(1))  # lines move together
+
+    lane = lane_geometry(hw, spec)
+    vec_ids = full.table_ids.astype(np.int64) * spec.rows_per_table + full.row_ids
+    vec_hits = simulate_cache(vec_ids, lane, "lru").hits
+    assert np.array_equal(vec_hits, line_hits.all(1))
+
+
+def test_engine_access_counts_match_oracle():
+    """SPM access counts are analytic — engine must match exactly (paper's
+    Fig. 3c metric)."""
+    hw = tpuv6e()
+    wl = dlrm_rmc2_small(num_tables=8, rows_per_table=50_000, batch_size=32)
+    res = simulate(wl, hw, seed=0)
+    orc = oracle_run(wl, hw)
+    assert res.onchip_accesses == orc.onchip_accesses
+    assert res.offchip_reads == orc.offchip_accesses
+
+
+def test_engine_timing_same_regime_as_oracle():
+    """Engine (detailed) vs independent closed-form oracle: same order of
+    magnitude, with the engine slower (it models bank hotspots the closed
+    form ignores). The tight quantitative validation is Fig. 3 (engine vs
+    event-granular reference, <1% — see benchmarks); the gap HERE is the
+    paper's motivating claim, reported as fig3_analytical_oracle_gap_pct."""
+    hw = tpuv6e()
+    wl = dlrm_rmc2_small(num_tables=8, rows_per_table=100_000, batch_size=32)
+    res = simulate(wl, hw, seed=0, zipf_s=0.6)   # low skew: closest to oracle's
+    orc = oracle_run(wl, hw)                     # uniform-access assumption
+    ratio = res.total_cycles / orc.total_cycles
+    assert 0.7 < ratio < 2.5, ratio
+
+
+def test_policy_ordering_case_study():
+    """Paper Fig. 4b ordering on a high-reuse trace:
+    profiling >= cache(LRU) > SPM (in speedup over SPM)."""
+    wl = dlrm_rmc2_small(num_tables=4, rows_per_table=100_000, batch_size=48)
+    base = simulate(wl, tpuv6e(), seed=0, zipf_s=REUSE_LEVELS["reuse_high"])
+    lru = simulate(wl, tpuv6e().with_policy(OnChipPolicy.LRU), seed=0,
+                   zipf_s=REUSE_LEVELS["reuse_high"])
+    pin = simulate(wl, tpuv6e().with_policy(OnChipPolicy.PINNING), seed=0,
+                   zipf_s=REUSE_LEVELS["reuse_high"])
+    assert lru.total_cycles < base.total_cycles
+    assert pin.total_cycles <= lru.total_cycles * 1.05
+    assert pin.onchip_ratio > base.onchip_ratio
+
+
+def test_per_batch_results_emitted():
+    wl = dlrm_rmc2_small(num_tables=4, rows_per_table=10_000, batch_size=16,
+                         num_batches=3)
+    res = simulate(wl, tpuv6e(), seed=0)
+    assert len(res.batches) == 3
+    assert all(b.total_cycles > 0 for b in res.batches)
+    js = res.to_json()
+    assert "batches" in js
