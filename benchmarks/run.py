@@ -20,6 +20,7 @@ def main() -> None:
     from benchmarks import (
         assoc_study,
         common,
+        dse_sweep,
         fig3_dlrm_validation,
         fig4_onchip_policies,
         interleave_study,
@@ -57,6 +58,17 @@ def main() -> None:
                   f"{r['speedup_vs_spm']:.3f}")
             _emit(f"fig4c_onchip_ratio_{r['dataset']}_{r['policy']}", 0,
                   f"{r['onchip_ratio']:.3f}")
+
+    t0 = time.time()
+    rows_sw = dse_sweep.run()
+    common.save_rows("BENCH_sweep", rows_sw)
+    for r in rows_sw:
+        if r["kind"] == "perf":
+            _emit("dse_sweep_per_config_ms", (time.time() - t0) * 1e6,
+                  f"{r['per_config_ms']:.1f}")
+            _emit("dse_sweep_speedup_vs_independent", 0,
+                  f"{r['speedup_vs_independent']:.2f}")
+            _emit("dse_sweep_configs", 0, str(r["configs"]))
 
     t0 = time.time()
     rowsk = kernel_bench.run()

@@ -19,7 +19,15 @@ from .workload import (
     dlrm_rmc2_small,
 )
 from .engine import simulate, simulate_embedding_op
+from .memory import (
+    MemoryPolicy,
+    MemorySystem,
+    available_policies,
+    get_policy,
+    register_policy,
+)
 from .results import BatchResult, SimResult
+from .sweep import SweepConfig, SweepEntry, SweepResult, sweep
 
 __all__ = [
     "Dataflow",
@@ -39,4 +47,13 @@ __all__ = [
     "simulate_embedding_op",
     "BatchResult",
     "SimResult",
+    "MemoryPolicy",
+    "MemorySystem",
+    "available_policies",
+    "get_policy",
+    "register_policy",
+    "SweepConfig",
+    "SweepEntry",
+    "SweepResult",
+    "sweep",
 ]

@@ -5,6 +5,9 @@ Pipeline per the paper:
   config)  ->  on-chip policy classification (hits / miss trace)  ->  DRAM
   timing for misses  ->  per-batch timing + access counts + energy.
 
+The embedding memory path (classification, lane transform, segmented DRAM
+timing, per-batch attribution) lives in ``memory.system.MemorySystem``; this
+module drives it, runs the analytical matrix model, and assembles results.
 Matrix ops run through the analytical model (matrix_model.py) and are summed
 with embedding time per batch (DLRM: embedding gather/pool feeds interaction
 and the top MLP — dependent stages, so times add).
@@ -13,79 +16,43 @@ On-chip state persists across inference batches: the policy simulation runs
 once over the concatenated multi-batch trace and timing/counts are attributed
 per batch afterwards.
 
-Performance note (the paper stresses *fast and accurate*): when the cache
-geometry satisfies ``num_sets % lines_per_vector == 0`` and vectors are
-line-aligned, the line-level set-associative cache decomposes into
-``lines_per_vector`` independent "lane" sub-caches that each observe the same
-vector-granular stream. Simulating ONE lane at vector granularity and scaling
-counts is then *bit-exact* vs line-level simulation (tests enforce this) and
-cuts scan length by lines_per_vector (8x for DLRM's 512 B vectors / 64 B
-lines).
+The trace-building / matrix-summary / result-assembly stages are exposed
+separately so the DSE sweep engine (``sweep.py``) can share generated traces
+and matrix results across many configurations while staying bit-exact with
+independent ``simulate()`` calls.
 """
 from __future__ import annotations
 
 import math
-from dataclasses import dataclass, field
+from dataclasses import dataclass
 from typing import List, Optional
 
 import numpy as np
 
 from .energy import EnergyTable, estimate_energy
-from .hardware import HardwareConfig, OnChipPolicy
+from .hardware import HardwareConfig
 from .matrix_model import simulate_matrix_op
-from .memory.cache import CacheGeometry, simulate_cache
-from .memory.dram import DramModel, dram_timing
-from .memory.policies import profile_hot_lines, run_policy
+from .memory.system import (  # re-exported for back-compat
+    EmbeddingBatchStats,
+    EmbeddingTrace,
+    MemorySystem,
+    lane_geometry,
+)
 from .results import BatchResult, SimResult
-from .trace import FullTrace, expand_trace, generate_zipf_trace, translate
+from .trace import FullTrace, expand_trace, generate_zipf_trace
 from .workload import EmbeddingOpSpec, Workload
 
-_CACHE_POLICIES = (OnChipPolicy.LRU, OnChipPolicy.SRRIP, OnChipPolicy.FIFO)
-
-
-# --------------------------------------------------------------------------
-# Lane-decomposition fast path
-# --------------------------------------------------------------------------
-
-def lane_geometry(hw: HardwareConfig, spec: EmbeddingOpSpec) -> Optional[CacheGeometry]:
-    """Vector-granular lane geometry when the decomposition is exact."""
-    line = hw.onchip.line_bytes
-    if spec.vector_bytes % line != 0:
-        return None
-    lpv = spec.vector_bytes // line
-    full_geom = CacheGeometry.from_capacity(hw.onchip.capacity_bytes, line, hw.onchip.ways)
-    if lpv <= 1 or full_geom.num_sets % lpv != 0:
-        return None
-    return CacheGeometry(
-        num_sets=full_geom.num_sets // lpv,
-        ways=full_geom.ways,
-        line_bytes=spec.vector_bytes,
-    )
-
-
-# --------------------------------------------------------------------------
-# Embedding-op simulation (multi-batch, persistent on-chip state)
-# --------------------------------------------------------------------------
-
-@dataclass
-class EmbeddingBatchStats:
-    cycles: float = 0.0
-    vector_cycles: float = 0.0
-    dram_cycles: float = 0.0
-    onchip_cycles: float = 0.0
-    onchip_reads: int = 0
-    onchip_writes: int = 0
-    offchip_reads: int = 0
-    cache_hits: int = 0          # line-granular
-    cache_misses: int = 0
-    dram_row_hits: int = 0
-    dram_row_misses: int = 0
-
-
-def _vector_compute_cycles(spec: EmbeddingOpSpec, batch_size: int, hw: HardwareConfig) -> float:
-    """Stage-3 vector arithmetic (Fig. 1): pooling on the VPU."""
-    flops = spec.reduction_flops(batch_size)
-    return flops / max(hw.vector_unit.throughput, 1)
+__all__ = [
+    "EmbeddingBatchStats",
+    "EmbeddingTrace",
+    "MatrixSummary",
+    "assemble_result",
+    "build_embedding_traces",
+    "lane_geometry",
+    "simulate",
+    "simulate_embedding_op",
+    "summarize_matrix_ops",
+]
 
 
 def simulate_embedding_op(
@@ -99,85 +66,119 @@ def simulate_embedding_op(
     Returns per-batch stats; on-chip state persists across batches (the
     policy runs once over the concatenated trace).
     """
+    ms = MemorySystem.from_hardware(hw)
+    return ms.simulate_embedding(EmbeddingTrace(spec, traces), pinned_lines=pinned_lines)
+
+
+# --------------------------------------------------------------------------
+# Matrix side (analytical, identical per batch)
+# --------------------------------------------------------------------------
+
+@dataclass(frozen=True)
+class MatrixSummary:
+    """Per-batch matrix-op aggregates (analytical model, batch-invariant)."""
+
+    cycles: float
+    onchip_reads: int
+    onchip_writes: int
+    dram_lines: int
+    macs_per_batch: float
+
+
+def summarize_matrix_ops(workload: Workload, hw: HardwareConfig) -> MatrixSummary:
+    results = [simulate_matrix_op(op, hw) for op in workload.matrix_ops]
+    return MatrixSummary(
+        cycles=sum(r.total_cycles for r in results),
+        onchip_reads=sum(r.onchip_reads for r in results),
+        onchip_writes=sum(r.onchip_writes for r in results),
+        dram_lines=sum(
+            math.ceil(r.dram_bytes / hw.onchip.line_bytes) for r in results
+        ),
+        macs_per_batch=sum(r.flops for r in results) / 2,
+    )
+
+
+# --------------------------------------------------------------------------
+# Trace building (hardware-independent; shared across sweep configs)
+# --------------------------------------------------------------------------
+
+def build_embedding_traces(
+    workload: Workload,
+    index_trace: Optional[np.ndarray] = None,
+    seed: int = 0,
+    zipf_s: float = 0.8,
+) -> List[EmbeddingTrace]:
+    """Build one multi-batch ``EmbeddingTrace`` per embedding op spec.
+
+    Deterministic in ``(workload, index_trace, seed, zipf_s)`` and independent
+    of the hardware config — the basis for trace sharing across a DSE sweep.
+    """
+    etraces: List[EmbeddingTrace] = []
+    for spec in workload.embedding_ops:
+        traces = []
+        for bi in range(workload.num_batches):
+            if index_trace is None:
+                n_acc = spec.lookups_per_batch(workload.batch_size)
+                it = generate_zipf_trace(n_acc, spec.rows_per_table, s=zipf_s, seed=seed + bi)
+            else:
+                it = index_trace
+            traces.append(expand_trace(it, spec, workload.batch_size, seed=seed + bi))
+        etraces.append(EmbeddingTrace(spec, traces))
+    return etraces
+
+
+# --------------------------------------------------------------------------
+# Result assembly
+# --------------------------------------------------------------------------
+
+def assemble_result(
+    workload: Workload,
+    hw: HardwareConfig,
+    matrix: MatrixSummary,
+    per_spec_stats: List[List[EmbeddingBatchStats]],
+    energy_table: EnergyTable = EnergyTable(),
+) -> SimResult:
+    result = SimResult(
+        workload=workload.name,
+        hardware=hw.name,
+        policy=hw.onchip.policy.value,
+        clock_ghz=hw.clock_ghz,
+    )
+    total_vec_ops = 0.0
+    for bi in range(workload.num_batches):
+        br = BatchResult(batch_index=bi)
+        br.matrix_cycles = matrix.cycles
+        br.onchip_reads = matrix.onchip_reads
+        br.onchip_writes = matrix.onchip_writes
+        br.offchip_reads = matrix.dram_lines
+        for spec, stats in zip(workload.embedding_ops, per_spec_stats):
+            s = stats[bi]
+            br.embedding_cycles += s.cycles
+            br.onchip_reads += s.onchip_reads
+            br.onchip_writes += s.onchip_writes
+            br.offchip_reads += s.offchip_reads
+            br.cache_hits += s.cache_hits
+            br.cache_misses += s.cache_misses
+            br.dram_row_hits += s.dram_row_hits
+            br.dram_row_misses += s.dram_row_misses
+            br.vector_ops += int(spec.reduction_flops(workload.batch_size))
+        br.total_cycles = br.embedding_cycles + matrix.cycles
+        total_vec_ops += br.vector_ops
+        result.batches.append(br)
+
     line = hw.onchip.line_bytes
-    policy = hw.onchip.policy
-    lpv = max(1, -(-spec.vector_bytes // line))
-    num_batches = len(traces)
-
-    n_per_batch = [len(t) for t in traces]
-    lookup_batch = np.repeat(np.arange(num_batches), n_per_batch)
-    table_ids = np.concatenate([t.table_ids for t in traces])
-    row_ids = np.concatenate([t.row_ids for t in traces])
-    n_lookups = row_ids.size
-
-    lane = lane_geometry(hw, spec)
-    use_lane = lane is not None and policy in _CACHE_POLICIES
-
-    if use_lane:
-        vec_ids = table_ids.astype(np.int64) * spec.rows_per_table + row_ids
-        res = simulate_cache(vec_ids, lane, policy=policy.value)
-        hits_lookup = res.hits
-        hit_lines = np.bincount(lookup_batch[hits_lookup], minlength=num_batches) * lpv
-        miss_lines_ct = np.bincount(lookup_batch[~hits_lookup], minlength=num_batches) * lpv
-        onchip_reads = np.bincount(lookup_batch, minlength=num_batches) * lpv
-        onchip_writes = miss_lines_ct.copy()
-        offchip_reads = miss_lines_ct.copy()
-        # expand vector misses back to line addresses for DRAM timing
-        base = (
-            table_ids.astype(np.int64)[~hits_lookup] * spec.table_bytes
-            + row_ids[~hits_lookup] * spec.vector_bytes
-        ) // line
-        miss_lines_all = (base[:, None] + np.arange(lpv)[None, :]).reshape(-1)
-        miss_line_batch = np.repeat(lookup_batch[~hits_lookup], lpv)
-        pinned_count = 0
-    else:
-        concat = FullTrace(
-            table_ids=table_ids,
-            row_ids=row_ids,
-            batch_size=n_lookups
-            // max(traces[0].num_tables * traces[0].lookups_per_sample, 1),
-            num_tables=traces[0].num_tables,
-            lookups_per_sample=traces[0].lookups_per_sample,
-        )
-        atrace = translate(concat, spec, line)
-        if policy == OnChipPolicy.PINNING and pinned_lines is None:
-            pinned_lines = profile_hot_lines(atrace.lines, hw.onchip.num_lines)
-        out = run_policy(atrace, hw, pinned_lines)
-        line_batch = np.repeat(lookup_batch, lpv)
-        hit_lines = np.bincount(line_batch[out.hits], minlength=num_batches)
-        miss_lines_ct = np.bincount(line_batch[~out.hits], minlength=num_batches)
-        onchip_reads = np.bincount(line_batch, minlength=num_batches)
-        onchip_writes = miss_lines_ct.copy()
-        offchip_reads = miss_lines_ct.copy()
-        miss_lines_all = out.miss_lines
-        miss_line_batch = line_batch[~out.hits]
-        pinned_count = len(pinned_lines) if (
-            policy == OnChipPolicy.PINNING and pinned_lines is not None
-        ) else 0
-
-    dram = DramModel.from_hardware(hw)
-    onchip_bw = max(hw.onchip.read_bw_bytes_per_cycle, 1)
-
-    stats: List[EmbeddingBatchStats] = []
-    for b in range(num_batches):
-        s = EmbeddingBatchStats()
-        miss_b = miss_lines_all[miss_line_batch == b]
-        d = dram_timing(miss_b, dram)
-        s.dram_cycles = d.finish_cycle
-        s.dram_row_hits = d.row_hits
-        s.dram_row_misses = d.row_misses
-        s.onchip_reads = int(onchip_reads[b])
-        s.onchip_writes = int(onchip_writes[b]) + (pinned_count if b == 0 else 0)
-        s.offchip_reads = int(offchip_reads[b])
-        s.cache_hits = int(hit_lines[b])
-        s.cache_misses = int(miss_lines_ct[b])
-        s.onchip_cycles = s.onchip_reads * line / onchip_bw + hw.onchip.latency_cycles
-        s.vector_cycles = _vector_compute_cycles(spec, traces[b].batch_size, hw)
-        # on-chip service, off-chip service and pooling overlap in a
-        # double-buffered stream; the slowest stage bounds the batch.
-        s.cycles = max(s.onchip_cycles, s.dram_cycles, s.vector_cycles)
-        stats.append(s)
-    return stats
+    energy = estimate_energy(
+        hw,
+        macs=matrix.macs_per_batch * workload.num_batches,
+        vector_ops=total_vec_ops,
+        onchip_read_bytes=result.onchip_reads * line,
+        onchip_write_bytes=result.onchip_writes * line,
+        offchip_bytes=result.offchip_reads * line,
+        total_cycles=result.total_cycles,
+        table=energy_table,
+    )
+    result.energy_pj = energy.total_pj
+    return result
 
 
 # --------------------------------------------------------------------------
@@ -193,69 +194,8 @@ def simulate(
     zipf_s: float = 0.8,
 ) -> SimResult:
     """Run a full EONSim simulation: all batches, matrix + embedding ops."""
-    result = SimResult(
-        workload=workload.name,
-        hardware=hw.name,
-        policy=hw.onchip.policy.value,
-        clock_ghz=hw.clock_ghz,
-    )
-
-    # Matrix side: analytical, identical per batch.
-    matrix_results = [simulate_matrix_op(op, hw) for op in workload.matrix_ops]
-    matrix_cycles = sum(r.total_cycles for r in matrix_results)
-    matrix_onchip_r = sum(r.onchip_reads for r in matrix_results)
-    matrix_onchip_w = sum(r.onchip_writes for r in matrix_results)
-    matrix_dram_lines = sum(
-        math.ceil(r.dram_bytes / hw.onchip.line_bytes) for r in matrix_results
-    )
-    macs_per_batch = sum(r.flops for r in matrix_results) / 2
-
-    # Embedding side: per spec, build per-batch traces then simulate with
-    # persistent on-chip state.
-    per_spec_stats: List[List[EmbeddingBatchStats]] = []
-    for spec in workload.embedding_ops:
-        traces = []
-        for bi in range(workload.num_batches):
-            if index_trace is None:
-                n_acc = spec.lookups_per_batch(workload.batch_size)
-                it = generate_zipf_trace(n_acc, spec.rows_per_table, s=zipf_s, seed=seed + bi)
-            else:
-                it = index_trace
-            traces.append(expand_trace(it, spec, workload.batch_size, seed=seed + bi))
-        per_spec_stats.append(simulate_embedding_op(spec, traces, hw))
-
-    total_vec_ops = 0.0
-    for bi in range(workload.num_batches):
-        br = BatchResult(batch_index=bi)
-        br.matrix_cycles = matrix_cycles
-        br.onchip_reads = matrix_onchip_r
-        br.onchip_writes = matrix_onchip_w
-        br.offchip_reads = matrix_dram_lines
-        for spec, stats in zip(workload.embedding_ops, per_spec_stats):
-            s = stats[bi]
-            br.embedding_cycles += s.cycles
-            br.onchip_reads += s.onchip_reads
-            br.onchip_writes += s.onchip_writes
-            br.offchip_reads += s.offchip_reads
-            br.cache_hits += s.cache_hits
-            br.cache_misses += s.cache_misses
-            br.dram_row_hits += s.dram_row_hits
-            br.dram_row_misses += s.dram_row_misses
-            br.vector_ops += int(spec.reduction_flops(workload.batch_size))
-        br.total_cycles = br.embedding_cycles + matrix_cycles
-        total_vec_ops += br.vector_ops
-        result.batches.append(br)
-
-    line = hw.onchip.line_bytes
-    energy = estimate_energy(
-        hw,
-        macs=macs_per_batch * workload.num_batches,
-        vector_ops=total_vec_ops,
-        onchip_read_bytes=result.onchip_reads * line,
-        onchip_write_bytes=result.onchip_writes * line,
-        offchip_bytes=result.offchip_reads * line,
-        total_cycles=result.total_cycles,
-        table=energy_table,
-    )
-    result.energy_pj = energy.total_pj
-    return result
+    matrix = summarize_matrix_ops(workload, hw)
+    etraces = build_embedding_traces(workload, index_trace, seed, zipf_s)
+    ms = MemorySystem.from_hardware(hw)
+    per_spec_stats = [ms.simulate_embedding(et) for et in etraces]
+    return assemble_result(workload, hw, matrix, per_spec_stats, energy_table)

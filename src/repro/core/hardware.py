@@ -123,9 +123,14 @@ class HardwareConfig:
     def replace(self, **kw) -> "HardwareConfig":
         return dataclasses.replace(self, **kw)
 
+    def with_onchip(self, **onchip_kw) -> "HardwareConfig":
+        """Replace on-chip memory parameters (capacity, ways, policy, ...)."""
+        return dataclasses.replace(
+            self, onchip=dataclasses.replace(self.onchip, **onchip_kw)
+        )
+
     def with_policy(self, policy: OnChipPolicy, **onchip_kw) -> "HardwareConfig":
-        onchip = dataclasses.replace(self.onchip, policy=policy, **onchip_kw)
-        return dataclasses.replace(self, onchip=onchip)
+        return self.with_onchip(policy=policy, **onchip_kw)
 
 
 def tpuv6e() -> HardwareConfig:

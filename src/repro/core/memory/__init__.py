@@ -1,7 +1,25 @@
 from .cache import CacheGeometry, simulate_cache, CacheResult
 from .golden import GoldenCache
-from .dram import DramModel, simulate_dram, estimate_dram_fast, dram_timing
-from .policies import run_policy, PolicyOutcome
+from .dram import (
+    DramModel,
+    DramResult,
+    dram_timing,
+    dram_timing_segmented,
+    estimate_dram_fast,
+    simulate_dram,
+    simulate_dram_segmented,
+)
+from .policies import (
+    MemoryPolicy,
+    PolicyContext,
+    PolicyOutcome,
+    available_policies,
+    get_policy,
+    profile_hot_lines,
+    register_policy,
+    run_policy,
+)
+from .system import EmbeddingBatchStats, EmbeddingTrace, MemorySystem, lane_geometry
 
 __all__ = [
     "CacheGeometry",
@@ -9,7 +27,22 @@ __all__ = [
     "CacheResult",
     "GoldenCache",
     "DramModel",
+    "DramResult",
     "simulate_dram",
-    "run_policy",
+    "simulate_dram_segmented",
+    "dram_timing",
+    "dram_timing_segmented",
+    "estimate_dram_fast",
+    "MemoryPolicy",
+    "PolicyContext",
     "PolicyOutcome",
+    "available_policies",
+    "get_policy",
+    "profile_hot_lines",
+    "register_policy",
+    "run_policy",
+    "EmbeddingBatchStats",
+    "EmbeddingTrace",
+    "MemorySystem",
+    "lane_geometry",
 ]

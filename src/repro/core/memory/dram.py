@@ -23,6 +23,7 @@ from __future__ import annotations
 
 import functools
 from dataclasses import dataclass
+from typing import List
 
 import jax
 import jax.numpy as jnp
@@ -108,16 +109,31 @@ def _per_key_rank(keys: np.ndarray) -> np.ndarray:
     return rank
 
 
-def _frfcfs_order(ch: np.ndarray, bk: np.ndarray, blk: np.ndarray, banks: int) -> np.ndarray:
+def _frfcfs_order(
+    ch: np.ndarray,
+    bk: np.ndarray,
+    blk: np.ndarray,
+    banks: int,
+    channels: int,
+    seg: np.ndarray | None = None,
+) -> np.ndarray:
     """FR-FCFS-style service order within each channel.
 
     Real controllers pick ready requests: banks are served round-robin at
     interleave-*block* granularity (one activate per block), while a block's
     lines stay consecutive so an open row streams at burst rate. Per-bank
     request order is preserved, keeping row-buffer locality exact.
+
+    ``seg`` (optional) qualifies every key with a segment id so one call
+    orders many independent sub-traces at once: within each segment the
+    resulting relative order is identical to an unsegmented call on that
+    segment alone (the segmented engine relies on this for bit-exactness).
     """
     n = ch.size
-    gb = ch.astype(np.int64) * banks + bk
+    chq = ch.astype(np.int64)                 # segment-qualified channel id
+    if seg is not None:
+        chq = seg.astype(np.int64) * channels + chq
+    gb = chq * banks + bk
     r = _per_key_rank(gb)                     # per-bank arrival rank
     order0 = np.lexsort((r, gb))              # per-bank streams, in order
     gb_s, blk_s = gb[order0], blk[order0]
@@ -130,7 +146,7 @@ def _frfcfs_order(ch: np.ndarray, bk: np.ndarray, blk: np.ndarray, banks: int) -
     inst_s = cs - 1 - base                    # block-instance index within bank
     inst = np.empty(n, dtype=np.int64)
     inst[order0] = inst_s
-    return np.lexsort((r, bk, inst, ch))
+    return np.lexsort((r, bk, inst, chq))
 
 
 @functools.partial(jax.jit, static_argnames=("banks",))
@@ -206,7 +222,7 @@ def simulate_dram(
     # block lines consecutive (see _frfcfs_order). In-order service would
     # head-of-line block on activating banks, which real controllers avoid.
     blk = lines // model.lines_per_block
-    order = _frfcfs_order(ch, bk, blk, model.banks_per_channel)
+    order = _frfcfs_order(ch, bk, blk, model.banks_per_channel, C)
     ch_s = ch[order]
     bounds = np.searchsorted(ch_s, np.arange(C + 1))
     max_len = int(np.max(bounds[1:] - bounds[:-1])) if n else 0
@@ -242,6 +258,95 @@ def simulate_dram(
         row_misses=n - row_hits,
         accesses=n,
     )
+
+
+_SEG_MIN_BUCKET = 256    # smallest padded per-(segment, channel) slot count
+
+
+def _seg_bucket_len(n: int) -> int:
+    """Power-of-two padding so sweeps reuse compiled scans across configs."""
+    b = _SEG_MIN_BUCKET
+    while b < n:
+        b *= 2
+    return b
+
+
+def simulate_dram_segmented(
+    lines: np.ndarray,
+    seg: np.ndarray,
+    num_segments: int,
+    model: DramModel,
+) -> List[DramResult]:
+    """One batched event scan over a concatenated multi-segment miss trace.
+
+    Each segment (e.g. one inference batch) is timed against *fresh* DRAM
+    state, exactly as if ``simulate_dram`` ran per segment — but all
+    (segment, channel) scans execute as a single vmapped JAX dispatch instead
+    of ``num_segments`` separate ones. Per-segment results are bit-exact vs
+    the per-segment loop (same FR-FCFS order, same f32 accumulation order per
+    scan; tests enforce this).
+    """
+    lines = np.asarray(lines, dtype=np.int64).reshape(-1)
+    seg = np.asarray(seg, dtype=np.int64).reshape(-1)
+    n = lines.size
+    C = model.channels
+    empty = DramResult(0.0, 0.0, 0, 0, 0)
+    if n == 0:
+        return [empty] * num_segments
+    n_seg = np.bincount(seg, minlength=num_segments)
+
+    ch, bk, row = model.decompose(lines)
+    blk = lines // model.lines_per_block
+    order = _frfcfs_order(ch, bk, blk, model.banks_per_channel, C, seg=seg)
+    chq_s = seg[order] * C + ch[order]
+
+    R = num_segments * C                       # one scan row per (segment, channel)
+    bounds = np.searchsorted(chq_s, np.arange(R + 1))
+    max_len = int(np.max(bounds[1:] - bounds[:-1]))
+    L = _seg_bucket_len(max(1, max_len))
+    bk_m = np.zeros((R, L), dtype=np.int32)
+    row_m = np.zeros((R, L), dtype=np.int32)
+    ar_m = np.zeros((R, L), dtype=np.float32)
+    va_m = np.zeros((R, L), dtype=bool)
+    for r_i in range(R):
+        lo, hi = bounds[r_i], bounds[r_i + 1]
+        if lo == hi:
+            continue
+        idx = order[lo:hi]
+        m = hi - lo
+        bk_m[r_i, :m] = bk[idx]
+        row_m[r_i, :m] = row[idx]
+        va_m[r_i, :m] = True
+
+    done, lat, hits = _scan_channel(
+        jnp.asarray(bk_m),
+        jnp.asarray(row_m),
+        jnp.asarray(ar_m),
+        jnp.asarray(va_m),
+        model.banks_per_channel,
+        float(model.t_cas),
+        float(model.t_rp + model.t_rcd),
+        float(model.line_bytes / model.chan_bytes_per_cycle),
+    )
+    done = np.asarray(done).reshape(num_segments, C)
+    lat = np.asarray(lat).reshape(num_segments, C)
+    hits = np.asarray(hits).reshape(num_segments, C)
+
+    results: List[DramResult] = []
+    for s in range(num_segments):
+        ns = int(n_seg[s])
+        if ns == 0:
+            results.append(empty)
+            continue
+        row_hits = int(hits[s].sum())
+        results.append(DramResult(
+            finish_cycle=float(done[s].max()) + model.base_latency,
+            total_latency_cycles=float(lat[s].sum()) + model.base_latency * ns,
+            row_hits=row_hits,
+            row_misses=ns - row_hits,
+            accesses=ns,
+        ))
+    return results
 
 
 def estimate_dram_fast(
@@ -298,6 +403,39 @@ def dram_timing(lines: np.ndarray, model: DramModel, **kw) -> DramResult:
     if np.asarray(lines).size > DETAILED_DRAM_MAX:
         return estimate_dram_fast(lines, model)
     return simulate_dram(lines, model, **kw)
+
+
+def dram_timing_segmented(
+    lines: np.ndarray,
+    seg: np.ndarray,
+    num_segments: int,
+    model: DramModel,
+) -> List[DramResult]:
+    """Segmented counterpart of ``dram_timing``.
+
+    Segments longer than ``DETAILED_DRAM_MAX`` use the closed-form estimate
+    (matching the per-segment switch in ``dram_timing``); the rest share one
+    batched event scan.
+    """
+    lines = np.asarray(lines, dtype=np.int64).reshape(-1)
+    seg = np.asarray(seg, dtype=np.int64).reshape(-1)
+    sizes = np.bincount(seg, minlength=num_segments)
+    big_ids = np.nonzero(sizes > DETAILED_DRAM_MAX)[0]
+    if big_ids.size == 0:
+        return simulate_dram_segmented(lines, seg, num_segments, model)
+    small_ids = np.nonzero(sizes <= DETAILED_DRAM_MAX)[0]
+    remap = np.full(num_segments, -1, dtype=np.int64)
+    remap[small_ids] = np.arange(small_ids.size)
+    keep = remap[seg] >= 0
+    small_res = simulate_dram_segmented(
+        lines[keep], remap[seg[keep]], int(small_ids.size), model
+    )
+    out: List[DramResult] = [None] * num_segments  # type: ignore[list-item]
+    for i, s in enumerate(small_ids):
+        out[s] = small_res[i]
+    for s in big_ids:
+        out[s] = estimate_dram_fast(lines[seg == s], model)
+    return out
 
 
 def bulk_transfer_cycles(data_bytes: float, hw: HardwareConfig) -> float:

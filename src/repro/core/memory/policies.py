@@ -1,4 +1,4 @@
-"""On-chip memory management policies (paper Sec. III/IV).
+"""On-chip memory management policies (paper Sec. III/IV) behind a registry.
 
 Four configurations evaluated in the paper's case study (Fig. 4):
   * SPM      — scratchpad staging as on TPUv6e: *every* vector lookup fetches
@@ -10,13 +10,26 @@ Four configurations evaluated in the paper's case study (Fig. 4):
                up to capacity; pinned hits stay on-chip, everything else is
                staged from off-chip like SPM.
 
-``run_policy`` classifies each line access of an address trace as on-chip hit
-or off-chip miss and returns the access counts the paper reports (Fig. 3c/4c)
-plus the miss trace for DRAM timing.
+Every policy is a ``MemoryPolicy`` subclass registered under its
+``OnChipPolicy`` name. Policies only *classify* accesses (hit / miss); the
+shared accounting contract lives in ``MemoryPolicy.run``:
+
+  * each line access = 1 on-chip read (the consumer always reads on-chip);
+  * each miss       = 1 off-chip read + 1 on-chip fill/stage write;
+  * ``setup_writes`` = one-time fills at load time (e.g. pinned-set preload),
+    attributed to the first batch by the MemorySystem.
+
+This single contract reproduces the per-policy counts the paper reports
+(Fig. 3c/4c). Adding a policy = subclass + ``@register_policy``; the
+MemorySystem, sweep engine, and benchmarks pick it up automatically (see
+docs/architecture.md).
 """
 from __future__ import annotations
 
+import abc
+import dataclasses
 from dataclasses import dataclass
+from typing import ClassVar, Dict, Optional, Tuple, Type
 
 import numpy as np
 
@@ -33,6 +46,7 @@ class PolicyOutcome:
     onchip_writes: int            # on-chip write accesses (fills/stages)
     offchip_reads: int            # off-chip line fetches
     policy: OnChipPolicy
+    setup_writes: int = 0         # one-time load-time fills (subset of writes)
 
     @property
     def onchip_accesses(self) -> int:
@@ -49,37 +63,159 @@ class PolicyOutcome:
         return float(self.hits.mean()) if self.hits.size else 0.0
 
 
-def _spm(atrace: AddressTrace) -> PolicyOutcome:
+@dataclass(frozen=True)
+class PolicyContext:
+    """Everything a policy may need to classify an access stream.
+
+    ``geometry`` describes the stream's granularity: the full line-granular
+    cache geometry normally, or the lane sub-cache geometry when the
+    MemorySystem applies the lane-decomposition transform (the policy itself
+    is agnostic — that is what makes the transform transparent).
+    """
+
+    geometry: CacheGeometry
+    capacity_units: int                       # capacity in stream-granularity units
+    pinned_lines: Optional[np.ndarray] = None
+
+    @staticmethod
+    def from_hardware(
+        hw: HardwareConfig, pinned_lines: Optional[np.ndarray] = None
+    ) -> "PolicyContext":
+        geom = CacheGeometry.from_capacity(
+            hw.onchip.capacity_bytes, hw.onchip.line_bytes, hw.onchip.ways
+        )
+        return PolicyContext(
+            geometry=geom,
+            capacity_units=hw.onchip.num_lines,
+            pinned_lines=pinned_lines,
+        )
+
+
+class MemoryPolicy(abc.ABC):
+    """A pluggable on-chip memory management policy."""
+
+    name: ClassVar[str]
+    enum: ClassVar[OnChipPolicy]
+    uses_cache_engine: ClassVar[bool] = False
+    # Swept on-chip parameters classification actually depends on. The DSE
+    # sweep engine memoizes embedding stats across grid points that agree on
+    # these values (e.g. SPM is invariant to both capacity and ways, PINNING
+    # only reads capacity), so declaring a narrower set makes sweeps cheaper
+    # — never different.
+    sensitive_params: ClassVar[Tuple[str, ...]] = ("capacity_bytes", "ways")
+    # Safe to classify at vector granularity through the lane decomposition
+    # (bit-exact only when classification is independent of line/vector
+    # granularity tie-breaking — true for stateless staging and for
+    # set-associative caches with an exact lane split; NOT for pinning,
+    # whose frequency top-K can split a vector at the capacity boundary).
+    supports_lane_transform: ClassVar[bool] = False
+
+    def prepare(self, lines: np.ndarray, ctx: PolicyContext) -> PolicyContext:
+        """Resolve any trace-derived state (e.g. the profiled pinned set)."""
+        return ctx
+
+    @abc.abstractmethod
+    def classify(self, lines: np.ndarray, ctx: PolicyContext) -> np.ndarray:
+        """Return a bool (N,) array: on-chip hit per access."""
+
+    def setup_writes(self, ctx: PolicyContext) -> int:
+        """One-time on-chip fills at load time (before the first batch)."""
+        return 0
+
+    def run(self, lines: np.ndarray, ctx: PolicyContext) -> PolicyOutcome:
+        """Classify + apply the shared accounting contract."""
+        lines = np.asarray(lines, dtype=np.int64).reshape(-1)
+        ctx = self.prepare(lines, ctx)
+        hits = self.classify(lines, ctx)
+        misses = int((~hits).sum())
+        setup = self.setup_writes(ctx)
+        return PolicyOutcome(
+            hits=hits,
+            miss_lines=lines[~hits],
+            onchip_reads=int(lines.size),
+            onchip_writes=misses + setup,
+            offchip_reads=misses,
+            policy=self.enum,
+            setup_writes=setup,
+        )
+
+
+# --------------------------------------------------------------------------
+# Registry
+# --------------------------------------------------------------------------
+
+_REGISTRY: Dict[str, MemoryPolicy] = {}
+
+
+def register_policy(cls: Type[MemoryPolicy]) -> Type[MemoryPolicy]:
+    """Class decorator: register a MemoryPolicy under ``cls.name``."""
+    inst = cls()
+    _REGISTRY[inst.name] = inst
+    return cls
+
+
+def get_policy(name) -> MemoryPolicy:
+    key = name.value if isinstance(name, OnChipPolicy) else str(name)
+    try:
+        return _REGISTRY[key]
+    except KeyError:
+        raise ValueError(
+            f"unknown policy {key!r}; registered: {sorted(_REGISTRY)}"
+        ) from None
+
+
+def available_policies() -> Tuple[str, ...]:
+    return tuple(sorted(_REGISTRY))
+
+
+# --------------------------------------------------------------------------
+# Built-in policies
+# --------------------------------------------------------------------------
+
+@register_policy
+class SpmPolicy(MemoryPolicy):
     """TPUv6e baseline: fetch every vector from off-chip regardless of hotness.
 
-    Each line access = 1 off-chip read + 1 on-chip write (stage into the
-    double buffer) + 1 on-chip read (consumed by the vector unit).
+    Each access = 1 off-chip read + 1 staging write + 1 on-chip read (contract
+    above) — no on-chip reuse, so classification is all-miss and granularity
+    independent (lane transform is trivially exact).
     """
-    n = len(atrace)
-    return PolicyOutcome(
-        hits=np.zeros(n, dtype=bool),
-        miss_lines=atrace.lines.copy(),
-        onchip_reads=n,
-        onchip_writes=n,
-        offchip_reads=n,
-        policy=OnChipPolicy.SPM,
-    )
+
+    name = "spm"
+    enum = OnChipPolicy.SPM
+    supports_lane_transform = True
+    sensitive_params = ()
+
+    def classify(self, lines: np.ndarray, ctx: PolicyContext) -> np.ndarray:
+        return np.zeros(lines.size, dtype=bool)
 
 
-def _cache(atrace: AddressTrace, hw: HardwareConfig, policy: str) -> PolicyOutcome:
-    geom = CacheGeometry.from_capacity(
-        hw.onchip.capacity_bytes, hw.onchip.line_bytes, hw.onchip.ways
-    )
-    res = simulate_cache(atrace.lines, geom, policy=policy)
-    miss_lines = atrace.lines[~res.hits]
-    return PolicyOutcome(
-        hits=res.hits,
-        miss_lines=miss_lines,
-        onchip_reads=len(atrace),           # every consumed line is read on-chip
-        onchip_writes=res.num_misses,       # fills on miss
-        offchip_reads=res.num_misses,
-        policy=OnChipPolicy(policy),
-    )
+class _CacheModePolicy(MemoryPolicy):
+    """Set-associative cache mode (MTIA LLC-like); replacement = ``name``."""
+
+    uses_cache_engine = True
+    supports_lane_transform = True
+
+    def classify(self, lines: np.ndarray, ctx: PolicyContext) -> np.ndarray:
+        return simulate_cache(lines, ctx.geometry, policy=self.name).hits
+
+
+@register_policy
+class LruPolicy(_CacheModePolicy):
+    name = "lru"
+    enum = OnChipPolicy.LRU
+
+
+@register_policy
+class SrripPolicy(_CacheModePolicy):
+    name = "srrip"
+    enum = OnChipPolicy.SRRIP
+
+
+@register_policy
+class FifoPolicy(_CacheModePolicy):
+    name = "fifo"
+    enum = OnChipPolicy.FIFO
 
 
 def profile_hot_lines(lines: np.ndarray, capacity_lines: int) -> np.ndarray:
@@ -93,46 +229,50 @@ def profile_hot_lines(lines: np.ndarray, capacity_lines: int) -> np.ndarray:
     return np.sort(uniq[order[:capacity_lines]])
 
 
-def _pinning(
-    atrace: AddressTrace,
-    hw: HardwareConfig,
-    pinned_lines: np.ndarray | None,
-    pin_fraction: float = 1.0,
-) -> PolicyOutcome:
-    cap_lines = int(hw.onchip.num_lines * pin_fraction)
-    if pinned_lines is None:
-        pinned_lines = profile_hot_lines(atrace.lines, cap_lines)
-    pinned_lines = np.sort(np.asarray(pinned_lines))
-    idx = np.searchsorted(pinned_lines, atrace.lines)
-    idx = np.clip(idx, 0, max(len(pinned_lines) - 1, 0))
-    hits = (
-        pinned_lines[idx] == atrace.lines
-        if len(pinned_lines)
-        else np.zeros(len(atrace), dtype=bool)
-    )
-    misses = int((~hits).sum())
-    return PolicyOutcome(
-        hits=hits,
-        miss_lines=atrace.lines[~hits],
-        onchip_reads=len(atrace),
-        # pinned fill happens once at load time: count one write per pinned
-        # line + per-miss staging writes (SPM path for cold vectors)
-        onchip_writes=misses + len(pinned_lines),
-        offchip_reads=misses,
-        policy=OnChipPolicy.PINNING,
-    )
+@register_policy
+class PinningPolicy(MemoryPolicy):
+    """Profiling: pin the hottest lines up to capacity; the rest stage as SPM.
 
+    Pinned fill happens once at load time (``setup_writes``). Lane transform
+    is disabled: a line-granular frequency top-K can split a vector at the
+    capacity boundary, so vector-granular classification would not be
+    bit-exact.
+    """
+
+    name = "pinning"
+    enum = OnChipPolicy.PINNING
+    sensitive_params = ("capacity_bytes",)
+
+    def prepare(self, lines: np.ndarray, ctx: PolicyContext) -> PolicyContext:
+        if ctx.pinned_lines is None:
+            ctx = dataclasses.replace(
+                ctx, pinned_lines=profile_hot_lines(lines, ctx.capacity_units)
+            )
+        return dataclasses.replace(
+            ctx, pinned_lines=np.sort(np.asarray(ctx.pinned_lines))
+        )
+
+    def classify(self, lines: np.ndarray, ctx: PolicyContext) -> np.ndarray:
+        pinned = ctx.pinned_lines
+        if pinned is None or not len(pinned):
+            return np.zeros(lines.size, dtype=bool)
+        idx = np.searchsorted(pinned, lines)
+        idx = np.clip(idx, 0, len(pinned) - 1)
+        return pinned[idx] == lines
+
+    def setup_writes(self, ctx: PolicyContext) -> int:
+        return 0 if ctx.pinned_lines is None else int(len(ctx.pinned_lines))
+
+
+# --------------------------------------------------------------------------
+# Back-compat functional entry point
+# --------------------------------------------------------------------------
 
 def run_policy(
     atrace: AddressTrace,
     hw: HardwareConfig,
     pinned_lines: np.ndarray | None = None,
 ) -> PolicyOutcome:
-    policy = hw.onchip.policy
-    if policy == OnChipPolicy.SPM:
-        return _spm(atrace)
-    if policy in (OnChipPolicy.LRU, OnChipPolicy.SRRIP, OnChipPolicy.FIFO):
-        return _cache(atrace, hw, policy.value)
-    if policy == OnChipPolicy.PINNING:
-        return _pinning(atrace, hw, pinned_lines)
-    raise ValueError(f"unknown policy {policy}")
+    """Classify each line access of ``atrace`` under ``hw``'s policy."""
+    policy = get_policy(hw.onchip.policy)
+    return policy.run(atrace.lines, PolicyContext.from_hardware(hw, pinned_lines))

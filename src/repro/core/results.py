@@ -122,6 +122,28 @@ class SimResult:
                 f.write(text)
         return text
 
+    def diff(self, other: "SimResult") -> Dict[str, tuple]:
+        """Field-by-field comparison of summaries + per-batch records.
+
+        Returns ``{field: (self_value, other_value)}`` for every mismatching
+        field — empty when the two results are bit-exact. Used by the DSE
+        sweep's parity tests against independent ``simulate()`` runs.
+        """
+        mismatches: Dict[str, tuple] = {}
+        a, b = self.summary(), other.summary()
+        for k in a:
+            if a[k] != b[k]:
+                mismatches[k] = (a[k], b[k])
+        if len(self.batches) != len(other.batches):
+            mismatches["num_batch_records"] = (len(self.batches), len(other.batches))
+            return mismatches
+        for i, (ba, bb) in enumerate(zip(self.batches, other.batches)):
+            da, db = dataclasses.asdict(ba), dataclasses.asdict(bb)
+            for k in da:
+                if da[k] != db[k]:
+                    mismatches[f"batch{i}.{k}"] = (da[k], db[k])
+        return mismatches
+
     @staticmethod
     def csv_header() -> str:
         return (

@@ -1,0 +1,219 @@
+"""Batched design-space-exploration (DSE) sweep engine.
+
+EONSim's stated purpose is "to enable flexible exploration and design of
+emerging NPU architectures". A DSE study evaluates a *grid* of memory-system
+configurations — on-chip policy x capacity x associativity x workload x reuse
+level — and calling ``simulate()`` per point repeats all the
+hardware-independent work N times. ``sweep()`` evaluates the whole grid in
+one pass while staying **bit-exact** with independent ``simulate()`` calls
+(tests enforce this per config):
+
+  * **Trace sharing** — index-trace generation + multi-table expansion +
+    concatenation (``EmbeddingTrace``) depend only on (workload, seed,
+    zipf_s), so they are built once per (workload, reuse level) and shared by
+    every (policy, capacity, ways) point. The derived vector-id stream and
+    line-address trace are cached inside the ``EmbeddingTrace`` too.
+  * **Matrix-model sharing** — the analytical matrix model is independent of
+    the swept on-chip parameters (policy/capacity/ways), so it runs once per
+    workload.
+  * **Compiled-scan reuse** — the cache engine buckets scan lengths to powers
+    of two and the segmented DRAM scan pads (segment, channel) slots the same
+    way, so JAX jit caches are shared across grid points with the same
+    (ways, policy) shape signature instead of recompiling per config.
+
+Typical use (the paper's Fig. 4 case study is one call — see
+``examples/fig4_sweep.py``)::
+
+    result = sweep(
+        workload,
+        base_hw=tpuv6e(),
+        policies=("spm", "lru", "srrip", "pinning"),
+        capacities=(1 << 20, 4 << 20, 16 << 20),
+        ways=(8, 16),
+    )
+    best = result.best("total_cycles")
+"""
+from __future__ import annotations
+
+import itertools
+import json
+import time
+from dataclasses import asdict, dataclass, field
+from typing import Dict, List, Optional, Sequence, Union
+
+import numpy as np
+
+from .energy import EnergyTable
+from .engine import (
+    assemble_result,
+    build_embedding_traces,
+    summarize_matrix_ops,
+)
+from .hardware import HardwareConfig, OnChipPolicy, tpuv6e
+from .memory.policies import available_policies
+from .memory.system import MemorySystem
+from .results import SimResult
+from .workload import Workload
+
+DEFAULT_POLICIES = ("spm", "lru", "srrip", "fifo", "pinning")
+
+
+@dataclass(frozen=True)
+class SweepConfig:
+    """One grid point of the design space."""
+
+    policy: str
+    capacity_bytes: int
+    ways: int
+    workload: str
+    zipf_s: float
+
+    @property
+    def label(self) -> str:
+        cap_mb = self.capacity_bytes / (1 << 20)
+        return f"{self.workload}/{self.policy}/{cap_mb:g}MB/{self.ways}w/z{self.zipf_s:g}"
+
+
+@dataclass
+class SweepEntry:
+    config: SweepConfig
+    result: SimResult
+
+    def row(self) -> Dict:
+        """Flat record: config fields + result summary (JSON/CSV friendly)."""
+        d = dict(asdict(self.config))
+        d.update(self.result.summary())
+        return d
+
+
+@dataclass
+class SweepResult:
+    entries: List[SweepEntry] = field(default_factory=list)
+    wall_seconds: float = 0.0
+
+    @property
+    def num_configs(self) -> int:
+        return len(self.entries)
+
+    def best(self, metric: str = "total_cycles", minimize: bool = True) -> SweepEntry:
+        """Grid point optimizing a ``SimResult`` summary metric."""
+        if not self.entries:
+            raise ValueError("empty sweep")
+        key = lambda e: e.result.summary()[metric]
+        return min(self.entries, key=key) if minimize else max(self.entries, key=key)
+
+    def rows(self) -> List[Dict]:
+        return [e.row() for e in self.entries]
+
+    def speedup_over(self, baseline_policy: str = "spm") -> List[Dict]:
+        """Per-config speedup vs the same-(workload, capacity, ways, zipf)
+        grid point under ``baseline_policy`` (the paper's Fig. 4b metric)."""
+        base: Dict[tuple, float] = {}
+        for e in self.entries:
+            c = e.config
+            if c.policy == baseline_policy:
+                base[(c.workload, c.capacity_bytes, c.ways, c.zipf_s)] = (
+                    e.result.total_cycles
+                )
+        out = []
+        for e in self.entries:
+            c = e.config
+            ref = base.get((c.workload, c.capacity_bytes, c.ways, c.zipf_s))
+            if ref is None:
+                continue
+            r = e.row()
+            r[f"speedup_vs_{baseline_policy}"] = ref / max(e.result.total_cycles, 1e-12)
+            out.append(r)
+        return out
+
+    def to_json(self, path: Optional[str] = None) -> str:
+        payload = {
+            "num_configs": self.num_configs,
+            "wall_seconds": self.wall_seconds,
+            "rows": self.rows(),
+        }
+        text = json.dumps(payload, indent=2)
+        if path:
+            with open(path, "w") as f:
+                f.write(text)
+        return text
+
+
+def _as_tuple(x, default):
+    if x is None:
+        return tuple(default)
+    if isinstance(x, (str, bytes)) or not isinstance(x, (list, tuple)):
+        return (x,)
+    return tuple(x)
+
+
+def sweep(
+    workloads: Union[Workload, Sequence[Workload]],
+    base_hw: Optional[HardwareConfig] = None,
+    policies: Sequence[Union[str, OnChipPolicy]] = DEFAULT_POLICIES,
+    capacities: Optional[Sequence[int]] = None,
+    ways: Optional[Sequence[int]] = None,
+    zipf_s: Union[float, Sequence[float]] = 0.8,
+    seed: int = 0,
+    index_trace: Optional[np.ndarray] = None,
+    energy_table: EnergyTable = EnergyTable(),
+) -> SweepResult:
+    """Evaluate the full (workload x zipf x policy x capacity x ways) grid.
+
+    Every grid point's ``SimResult`` is bit-exact against
+    ``simulate(workload, base_hw.with_policy(policy, capacity_bytes=...,
+    ways=...), seed=seed, zipf_s=z)`` — the sweep only removes redundant
+    work, never changes the model.
+    """
+    base_hw = base_hw or tpuv6e()
+    wls = _as_tuple(workloads, ())
+    if not wls:
+        raise ValueError("need at least one workload")
+    pol_names = tuple(
+        p.value if isinstance(p, OnChipPolicy) else str(p)
+        for p in _as_tuple(policies, DEFAULT_POLICIES)
+    )
+    unknown = set(pol_names) - set(available_policies())
+    if unknown:
+        raise ValueError(f"unregistered policies: {sorted(unknown)}")
+    caps = _as_tuple(capacities, (base_hw.onchip.capacity_bytes,))
+    ways_t = _as_tuple(ways, (base_hw.onchip.ways,))
+    zipfs = _as_tuple(zipf_s, (0.8,))
+
+    t0 = time.perf_counter()
+    out = SweepResult()
+    for wl in wls:
+        # Matrix side ignores the swept on-chip parameters — once per workload.
+        matrix = summarize_matrix_ops(wl, base_hw)
+        for z in zipfs:
+            # Traces depend only on (workload, seed, zipf) — shared across
+            # every (policy, capacity, ways) point below.
+            etraces = build_embedding_traces(wl, index_trace, seed, z)
+            # Grid points that agree on every parameter the policy actually
+            # reads (MemoryPolicy.sensitive_params) produce byte-identical
+            # embedding stats — e.g. SPM is capacity/ways-invariant, PINNING
+            # ways-invariant — so classification + DRAM run once per key.
+            stats_memo: Dict[tuple, list] = {}
+            for pol, cap, w in itertools.product(pol_names, caps, ways_t):
+                hw = base_hw.with_policy(OnChipPolicy(pol), capacity_bytes=cap, ways=w)
+                ms = MemorySystem.from_hardware(hw)
+                key = (pol,) + tuple(
+                    getattr(hw.onchip, p) for p in ms.policy.sensitive_params
+                )
+                per_spec_stats = stats_memo.get(key)
+                if per_spec_stats is None:
+                    per_spec_stats = [ms.simulate_embedding(et) for et in etraces]
+                    stats_memo[key] = per_spec_stats
+                res = assemble_result(wl, hw, matrix, per_spec_stats, energy_table)
+                out.entries.append(SweepEntry(
+                    config=SweepConfig(
+                        policy=pol,
+                        capacity_bytes=cap,
+                        ways=w,
+                        workload=wl.name,
+                        zipf_s=z,
+                    ),
+                    result=res,
+                ))
+    out.wall_seconds = time.perf_counter() - t0
+    return out

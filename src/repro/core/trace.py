@@ -13,7 +13,7 @@ reuse the paper describes (Reuse High ~4% of vectors dominate, Low ~46%).
 from __future__ import annotations
 
 from dataclasses import dataclass
-from typing import Optional
+from typing import Optional, Sequence, Tuple, Union
 
 import numpy as np
 
@@ -148,6 +148,59 @@ def expand_trace(
     )
 
 
+@dataclass(frozen=True)
+class ConcatTrace:
+    """Concatenation of per-batch FullTraces with *true* per-batch boundaries.
+
+    The on-chip policy simulation runs once over the concatenated multi-batch
+    stream (state persists across inference batches); timing and counts are
+    attributed per batch afterwards via ``boundaries`` — which carries the
+    real per-batch lookup offsets, so heterogeneous per-batch trace lengths
+    are attributed exactly (a derived uniform batch_size would be silently
+    wrong there).
+    """
+
+    table_ids: np.ndarray        # int32 (N,) over all batches, batch-major
+    row_ids: np.ndarray          # int64 (N,)
+    boundaries: np.ndarray       # int64 (num_batches + 1,) lookup offsets
+    batch_sizes: Tuple[int, ...]  # samples per batch (workload batching)
+    num_tables: int
+    lookups_per_sample: int
+
+    def __len__(self) -> int:
+        return self.row_ids.shape[0]
+
+    @property
+    def num_batches(self) -> int:
+        return len(self.boundaries) - 1
+
+    @property
+    def lookups_per_batch(self) -> np.ndarray:
+        return np.diff(self.boundaries)
+
+    @property
+    def lookup_batch(self) -> np.ndarray:
+        """int64 (N,) batch index of every lookup."""
+        return np.repeat(
+            np.arange(self.num_batches, dtype=np.int64), self.lookups_per_batch
+        )
+
+    @staticmethod
+    def from_traces(traces: Sequence[FullTrace]) -> "ConcatTrace":
+        if not traces:
+            raise ValueError("need at least one batch trace")
+        lens = np.array([len(t) for t in traces], dtype=np.int64)
+        boundaries = np.concatenate(([0], np.cumsum(lens)))
+        return ConcatTrace(
+            table_ids=np.concatenate([t.table_ids for t in traces]),
+            row_ids=np.concatenate([t.row_ids for t in traces]),
+            boundaries=boundaries,
+            batch_sizes=tuple(t.batch_size for t in traces),
+            num_tables=traces[0].num_tables,
+            lookups_per_sample=traces[0].lookups_per_sample,
+        )
+
+
 # --------------------------------------------------------------------------
 # Address translation: index trace -> line-address trace
 # --------------------------------------------------------------------------
@@ -166,7 +219,7 @@ class AddressTrace:
 
 
 def translate(
-    full: FullTrace,
+    full: Union[FullTrace, ConcatTrace],
     spec: EmbeddingOpSpec,
     line_bytes: int,
     base_address: int = 0,

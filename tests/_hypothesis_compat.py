@@ -1,0 +1,80 @@
+"""Graceful hypothesis fallback so the suite collects everywhere.
+
+Prefer the real ``hypothesis`` (pinned in requirements-dev.txt). When it is
+not installed, provide a minimal deterministic stand-in: ``@given`` runs
+``max_examples`` seeded pseudo-random draws of each strategy instead of
+hypothesis's adaptive search. Weaker shrinking/coverage, but the property
+tests still execute — import failure no longer takes down collection of the
+whole module (tier-1 requirement).
+
+Only the strategy surface the test-suite uses is implemented:
+``st.integers(lo, hi)`` and ``st.sampled_from(seq)``.
+"""
+from __future__ import annotations
+
+try:
+    from hypothesis import given, settings, strategies as st  # noqa: F401
+
+    HAVE_HYPOTHESIS = True
+except ImportError:
+    import inspect
+    import zlib
+
+    import numpy as np
+
+    HAVE_HYPOTHESIS = False
+
+    class _Strategy:
+        def example(self, rng):
+            raise NotImplementedError
+
+    class _Integers(_Strategy):
+        def __init__(self, lo, hi):
+            self.lo, self.hi = lo, hi
+
+        def example(self, rng):
+            return int(rng.integers(self.lo, self.hi + 1))
+
+    class _SampledFrom(_Strategy):
+        def __init__(self, options):
+            self.options = list(options)
+
+        def example(self, rng):
+            return self.options[int(rng.integers(len(self.options)))]
+
+    class st:  # noqa: N801 — mirrors `strategies as st`
+        @staticmethod
+        def integers(min_value, max_value):
+            return _Integers(min_value, max_value)
+
+        @staticmethod
+        def sampled_from(options):
+            return _SampledFrom(options)
+
+    def given(**strategies):
+        def deco(fn):
+            def wrapper():
+                n = getattr(wrapper, "_max_examples", 20)
+                # Stable per-test seed: same draws on every run/machine.
+                rng = np.random.default_rng(zlib.crc32(fn.__name__.encode()))
+                for _ in range(n):
+                    fn(**{k: s.example(rng) for k, s in strategies.items()})
+
+            wrapper.__name__ = fn.__name__
+            wrapper.__doc__ = fn.__doc__
+            wrapper.__module__ = fn.__module__
+            # Zero-arg signature so pytest doesn't treat the strategy
+            # parameters as fixtures.
+            wrapper.__signature__ = inspect.Signature()
+            wrapper._max_examples = 20
+            return wrapper
+
+        return deco
+
+    def settings(max_examples=20, **_ignored):
+        def deco(fn):
+            if hasattr(fn, "_max_examples"):
+                fn._max_examples = max_examples
+            return fn
+
+        return deco

@@ -3,7 +3,7 @@
 property tests on cache invariants."""
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from _hypothesis_compat import given, settings, st
 
 from repro.core.memory.cache import CacheGeometry, simulate_cache
 from repro.core.memory.golden import GoldenCache

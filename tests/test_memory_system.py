@@ -1,0 +1,209 @@
+"""MemorySystem layer: policy-registry golden parity, lane-transform
+parity, segmented DRAM attribution, ConcatTrace boundaries."""
+import dataclasses
+
+import numpy as np
+import pytest
+
+from repro.core import OnChipPolicy, available_policies, get_policy, tpuv6e
+from repro.core.memory.cache import CacheGeometry
+from repro.core.memory.dram import (
+    DramModel,
+    dram_timing,
+    dram_timing_segmented,
+    simulate_dram,
+    simulate_dram_segmented,
+)
+from repro.core.memory.golden import GoldenCache
+from repro.core.memory.policies import (
+    PolicyContext,
+    profile_hot_lines,
+    run_policy,
+)
+from repro.core.memory.system import EmbeddingTrace, MemorySystem, lane_geometry
+from repro.core.trace import ConcatTrace, expand_trace, generate_zipf_trace, translate
+from repro.core.workload import EmbeddingOpSpec
+
+
+# --------------------------------------------------------------------------
+# Registry + golden parity
+# --------------------------------------------------------------------------
+
+def test_registry_covers_all_hardware_policies():
+    assert set(available_policies()) == {p.value for p in OnChipPolicy}
+    for p in OnChipPolicy:
+        assert get_policy(p).enum == p
+        assert get_policy(p.value).name == p.value
+
+
+def test_policy_sensitivity_declarations():
+    """Sweep memoization contract: a policy may only omit a swept parameter
+    its classification truly never reads."""
+    assert get_policy("spm").sensitive_params == ()
+    assert get_policy("pinning").sensitive_params == ("capacity_bytes",)
+    for name in ("lru", "srrip", "fifo"):
+        assert get_policy(name).sensitive_params == ("capacity_bytes", "ways")
+
+
+def test_unknown_policy_raises():
+    with pytest.raises(ValueError, match="unknown policy"):
+        get_policy("mru")
+
+
+@pytest.mark.parametrize("name", ["lru", "srrip", "fifo"])
+def test_cache_policies_match_golden(name, rng):
+    """Every registered cache policy classifies bit-exactly like the
+    ChampSim-semantics golden model."""
+    lines = rng.integers(0, 4000, size=2500)
+    geom = CacheGeometry(num_sets=16, ways=4, line_bytes=64)
+    ctx = PolicyContext(geometry=geom, capacity_units=geom.num_sets * geom.ways)
+    out = get_policy(name).run(lines, ctx)
+    gold_hits = GoldenCache(geom, name).run(lines)
+    assert np.array_equal(out.hits, gold_hits)
+    # shared accounting contract
+    n, miss = lines.size, int((~gold_hits).sum())
+    assert out.onchip_reads == n
+    assert out.onchip_writes == miss
+    assert out.offchip_reads == miss
+    assert np.array_equal(out.miss_lines, lines[~gold_hits])
+
+
+def test_spm_policy_semantics(rng):
+    lines = rng.integers(0, 1000, size=500)
+    ctx = PolicyContext(geometry=CacheGeometry(8, 4, 64), capacity_units=32)
+    out = get_policy("spm").run(lines, ctx)
+    assert not out.hits.any()
+    assert out.onchip_reads == out.onchip_writes == out.offchip_reads == 500
+    assert out.setup_writes == 0
+    assert np.array_equal(out.miss_lines, lines)
+
+
+def test_pinning_policy_semantics(rng):
+    lines = rng.integers(0, 200, size=3000)
+    cap = 32
+    ctx = PolicyContext(geometry=CacheGeometry(8, 4, 64), capacity_units=cap)
+    out = get_policy("pinning").run(lines, ctx)
+    pinned = profile_hot_lines(lines, cap)
+    expect_hits = np.isin(lines, pinned)
+    assert np.array_equal(out.hits, expect_hits)
+    assert out.setup_writes == len(pinned)
+    miss = int((~expect_hits).sum())
+    assert out.onchip_writes == miss + len(pinned)
+    assert out.offchip_reads == miss
+
+
+def test_run_policy_backcompat_matches_registry(rng):
+    """Functional entry point is a thin wrapper over the registry."""
+    hw = tpuv6e().with_policy(OnChipPolicy.LRU, capacity_bytes=1 << 18)
+    spec = EmbeddingOpSpec(num_tables=2, rows_per_table=800, dim=64,
+                           lookups_per_sample=5, dtype_bytes=4)
+    tr = generate_zipf_trace(400, 800, 1.0, seed=2)
+    at = translate(expand_trace(tr, spec, 40, seed=1), spec, hw.onchip.line_bytes)
+    a = run_policy(at, hw)
+    b = MemorySystem.from_hardware(hw).classify(at)
+    assert np.array_equal(a.hits, b.hits)
+    assert (a.onchip_reads, a.onchip_writes, a.offchip_reads) == (
+        b.onchip_reads, b.onchip_writes, b.offchip_reads)
+
+
+# --------------------------------------------------------------------------
+# Lane transform parity
+# --------------------------------------------------------------------------
+
+def _etrace(spec, batch_sizes, seed=0):
+    traces = []
+    for bi, bsz in enumerate(batch_sizes):
+        it = generate_zipf_trace(
+            bsz * spec.num_tables * spec.lookups_per_sample,
+            spec.rows_per_table, 1.0, seed=seed + bi)
+        traces.append(expand_trace(it, spec, bsz, seed=seed + bi))
+    return EmbeddingTrace(spec, traces)
+
+
+@pytest.mark.parametrize("policy", [OnChipPolicy.SPM, OnChipPolicy.LRU,
+                                    OnChipPolicy.SRRIP, OnChipPolicy.FIFO])
+def test_lane_fastpath_matches_line_level(policy):
+    """Regression: lane transform and line-level path produce identical
+    per-batch hit/miss/read/write counts (and all other stats)."""
+    hw = tpuv6e().with_policy(policy, capacity_bytes=1 << 20)
+    spec = EmbeddingOpSpec(num_tables=3, rows_per_table=4000, dim=128,
+                           lookups_per_sample=10, dtype_bytes=4)
+    assert lane_geometry(hw, spec) is not None  # transform applies
+    et = _etrace(spec, [16, 16])
+    ms = MemorySystem.from_hardware(hw)
+    lane_stats = ms.simulate_embedding(et, allow_lane=True)
+    line_stats = ms.simulate_embedding(et, allow_lane=False)
+    assert len(lane_stats) == len(line_stats) == 2
+    for a, b in zip(lane_stats, line_stats):
+        assert dataclasses.asdict(a) == dataclasses.asdict(b)
+
+
+def test_pinning_never_uses_lane_transform():
+    assert not get_policy("pinning").supports_lane_transform
+
+
+# --------------------------------------------------------------------------
+# Segmented DRAM attribution
+# --------------------------------------------------------------------------
+
+def test_segmented_dram_matches_per_batch_loop(rng):
+    dm = DramModel.from_hardware(tpuv6e())
+    lines = rng.integers(0, 300_000, size=9000)
+    seg = np.sort(rng.integers(0, 4, size=9000))
+    got = dram_timing_segmented(lines, seg, 4, dm)
+    for s in range(4):
+        ref = dram_timing(lines[seg == s], dm)
+        assert got[s].finish_cycle == ref.finish_cycle
+        assert got[s].total_latency_cycles == ref.total_latency_cycles
+        assert got[s].row_hits == ref.row_hits
+        assert got[s].row_misses == ref.row_misses
+        assert got[s].accesses == ref.accesses
+
+
+def test_segmented_dram_empty_segments(rng):
+    dm = DramModel.from_hardware(tpuv6e())
+    lines = rng.integers(0, 10_000, size=500)
+    seg = np.full(500, 1, dtype=np.int64)   # segments 0 and 2 empty
+    got = simulate_dram_segmented(lines, seg, 3, dm)
+    assert got[0].accesses == 0 and got[0].finish_cycle == 0.0
+    assert got[2].accesses == 0 and got[2].finish_cycle == 0.0
+    ref = simulate_dram(lines, dm)
+    assert got[1].finish_cycle == ref.finish_cycle
+    assert got[1].row_hits == ref.row_hits
+
+
+# --------------------------------------------------------------------------
+# ConcatTrace boundaries (heterogeneous per-batch trace lengths)
+# --------------------------------------------------------------------------
+
+def test_concat_trace_true_boundaries():
+    spec = EmbeddingOpSpec(num_tables=2, rows_per_table=500, dim=64,
+                           lookups_per_sample=3, dtype_bytes=4)
+    batch_sizes = [5, 11, 2]
+    et = _etrace(spec, batch_sizes)
+    ct = et.concat
+    per_batch = [b * spec.num_tables * spec.lookups_per_sample for b in batch_sizes]
+    assert ct.num_batches == 3
+    assert ct.batch_sizes == tuple(batch_sizes)
+    assert np.array_equal(ct.boundaries, np.concatenate(([0], np.cumsum(per_batch))))
+    assert np.array_equal(ct.lookups_per_batch, per_batch)
+    assert len(ct) == sum(per_batch)
+    lb = ct.lookup_batch
+    assert np.array_equal(np.bincount(lb, minlength=3), per_batch)
+
+
+def test_heterogeneous_batches_attributed_exactly():
+    """Per-batch counts follow the true boundaries, not a derived uniform
+    batch size (the old concat computed batch_size by integer division)."""
+    spec = EmbeddingOpSpec(num_tables=2, rows_per_table=500, dim=128,
+                           lookups_per_sample=3, dtype_bytes=4)
+    batch_sizes = [5, 11, 2]
+    et = _etrace(spec, batch_sizes)
+    lpv = spec.vector_bytes // 64
+    hw = tpuv6e()  # SPM: per-batch counts are analytic
+    stats = MemorySystem.from_hardware(hw).simulate_embedding(et)
+    for s, bsz in zip(stats, batch_sizes):
+        n_lines = bsz * spec.num_tables * spec.lookups_per_sample * lpv
+        assert s.onchip_reads == n_lines
+        assert s.offchip_reads == n_lines
+        assert s.cache_misses == n_lines and s.cache_hits == 0

@@ -1,0 +1,90 @@
+"""DSE sweep engine: per-config bit-exactness vs independent simulate(),
+grid coverage, helpers."""
+import numpy as np
+import pytest
+
+from repro.core import (
+    OnChipPolicy,
+    dlrm_rmc2_small,
+    simulate,
+    sweep,
+    tpuv6e,
+)
+
+POLICIES = ("spm", "lru", "srrip", "pinning")
+CAPACITIES = (1 << 16, 1 << 17, 1 << 18)
+WAYS = (4, 8)
+
+
+@pytest.fixture(scope="module")
+def small_wl():
+    return dlrm_rmc2_small(num_tables=2, rows_per_table=2000, dim=128,
+                           lookups=4, batch_size=8, num_batches=2)
+
+
+@pytest.fixture(scope="module")
+def grid_result(small_wl):
+    return sweep(small_wl, tpuv6e(), policies=POLICIES, capacities=CAPACITIES,
+                 ways=WAYS, zipf_s=0.9, seed=0)
+
+
+def test_sweep_covers_full_grid(grid_result, small_wl):
+    assert grid_result.num_configs == len(POLICIES) * len(CAPACITIES) * len(WAYS)
+    seen = {(e.config.policy, e.config.capacity_bytes, e.config.ways)
+            for e in grid_result.entries}
+    assert len(seen) == grid_result.num_configs
+    assert all(e.config.workload == small_wl.name for e in grid_result.entries)
+
+
+def test_sweep_bitexact_vs_independent_simulate(grid_result, small_wl):
+    """Acceptance criterion: every one of the >=24 grid points is bit-exact
+    against an independent simulate() run with the same seed."""
+    assert grid_result.num_configs >= 24
+    for e in grid_result.entries:
+        c = e.config
+        hw = tpuv6e().with_policy(OnChipPolicy(c.policy),
+                                  capacity_bytes=c.capacity_bytes, ways=c.ways)
+        ref = simulate(small_wl, hw, seed=0, zipf_s=c.zipf_s)
+        assert not e.result.diff(ref), (c.label, e.result.diff(ref))
+
+
+def test_sweep_best_and_rows(grid_result):
+    best = grid_result.best("total_cycles")
+    assert all(best.result.total_cycles <= e.result.total_cycles
+               for e in grid_result.entries)
+    rows = grid_result.rows()
+    assert len(rows) == grid_result.num_configs
+    assert {"policy", "capacity_bytes", "ways", "total_cycles"} <= set(rows[0])
+
+
+def test_sweep_speedup_over_baseline(grid_result):
+    rows = grid_result.speedup_over("spm")
+    assert len(rows) == grid_result.num_configs  # spm present at every point
+    for r in rows:
+        if r["policy"] == "spm":
+            assert r["speedup_vs_spm"] == pytest.approx(1.0)
+
+
+def test_sweep_zipf_axis(small_wl):
+    sr = sweep(small_wl, tpuv6e(), policies=("spm", "lru"),
+               capacities=(1 << 17,), ways=(8,), zipf_s=(0.7, 1.1), seed=0)
+    assert sr.num_configs == 4
+    assert {e.config.zipf_s for e in sr.entries} == {0.7, 1.1}
+    # higher skew -> more reuse -> LRU hit rate improves
+    lru = {e.config.zipf_s: e.result for e in sr.entries if e.config.policy == "lru"}
+    hr = lambda r: r.cache_hits / max(r.cache_hits + r.cache_misses, 1)
+    assert hr(lru[1.1]) > hr(lru[0.7])
+
+
+def test_sweep_rejects_unknown_policy(small_wl):
+    with pytest.raises(ValueError, match="unregistered"):
+        sweep(small_wl, tpuv6e(), policies=("spm", "mru"))
+
+
+def test_sweep_json_roundtrip(grid_result, tmp_path):
+    import json
+    p = tmp_path / "sweep.json"
+    grid_result.to_json(str(p))
+    payload = json.loads(p.read_text())
+    assert payload["num_configs"] == grid_result.num_configs
+    assert len(payload["rows"]) == grid_result.num_configs

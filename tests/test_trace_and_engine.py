@@ -2,7 +2,7 @@
 (lane-decomposition exactness, engine-vs-oracle counts, policy case study)."""
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from _hypothesis_compat import given, settings, st
 
 from repro.core import OnChipPolicy, dlrm_rmc2_small, simulate, tpuv6e
 from repro.core.engine import lane_geometry
