@@ -2,9 +2,11 @@
 
 Runs a (policy x capacity x ways) grid through ``sweep()`` in one pass, then
 times a sample of the same configs as independent ``simulate()`` calls to
-measure the benefit of sharing traces / matrix results / compiled scans.
-Emits one ``kind=perf`` record (saved as BENCH_sweep.json by run.py) plus one
-row per grid point.
+measure the benefit of sharing traces / matrix results / compiled scans, and
+re-times the sweep with ``batch_scans=False`` to isolate the vmapped
+same-policy scan-batching win. Emits one ``kind=perf`` record (saved as
+BENCH_sweep.json by run.py, or by running this module directly) plus one row
+per grid point.
 """
 from __future__ import annotations
 
@@ -33,6 +35,13 @@ def run() -> List[Dict]:
     sr = sweep(wl, base_hw, policies=POLICIES, capacities=CAPACITIES, ways=WAYS,
                zipf_s=ZIPF, seed=0)
 
+    # Same grid with per-config scans (no vmapped batching): isolates the
+    # batched-classification speedup from trace/matrix sharing.
+    sweep(wl, base_hw, policies=POLICIES, capacities=CAPACITIES, ways=WAYS,
+          zipf_s=ZIPF, seed=0, batch_scans=False)
+    sr_nb = sweep(wl, base_hw, policies=POLICIES, capacities=CAPACITIES,
+                  ways=WAYS, zipf_s=ZIPF, seed=0, batch_scans=False)
+
     sample = sr.entries[:: max(1, len(sr.entries) // N_INDEPENDENT_SAMPLE)]
     t0 = time.perf_counter()
     for e in sample:
@@ -54,6 +63,8 @@ def run() -> List[Dict]:
         "per_config_ms": sr.wall_seconds / sr.num_configs * 1e3,
         "est_independent_s": est_independent_s,
         "speedup_vs_independent": est_independent_s / max(sr.wall_seconds, 1e-9),
+        "unbatched_sweep_s": sr_nb.wall_seconds,
+        "batched_scan_speedup": sr_nb.wall_seconds / max(sr.wall_seconds, 1e-9),
         "bitexact_sample": len(sample),
         "best_config": best.config.label,
         "best_total_cycles": best.result.total_cycles,
@@ -62,3 +73,15 @@ def run() -> List[Dict]:
         {"kind": "config", **r} for r in sr.speedup_over("spm")
     )
     return rows
+
+
+if __name__ == "__main__":
+    from benchmarks import common
+
+    bench_rows = run()
+    path = common.save_rows("BENCH_sweep", bench_rows)
+    perf = next(r for r in bench_rows if r["kind"] == "perf")
+    print(f"saved {path}")
+    print(f"configs={perf['configs']} sweep_s={perf['sweep_s']:.2f} "
+          f"speedup_vs_independent={perf['speedup_vs_independent']:.2f} "
+          f"batched_scan_speedup={perf['batched_scan_speedup']:.2f}")

@@ -15,9 +15,7 @@ from __future__ import annotations
 
 from typing import Dict, List
 
-import numpy as np
-
-from repro.core import OnChipPolicy, dlrm_rmc2_small, simulate, tpuv6e
+from repro.core import OnChipPolicy, dlrm_rmc2_small, sweep, tpuv6e
 from repro.core.memory.cache import CacheGeometry, simulate_cache
 from repro.core.memory.golden import GoldenCache
 from repro.core.trace import REUSE_LEVELS, reuse_trace
@@ -48,27 +46,43 @@ def run_fig4a() -> List[Dict]:
 
 
 def run_fig4bc() -> List[Dict]:
+    """Fig. 4b/4c as ONE ``sweep()`` over the (policy x reuse-level) grid.
+
+    Replaces the historical per-(policy, dataset) ``simulate()`` loop: traces
+    are generated once per reuse level and shared by every policy, and each
+    grid point stays bit-exact with an independent run (tests enforce the
+    sweep-level guarantee).
+    """
+    wl = dlrm_rmc2_small(num_tables=TABLES, rows_per_table=ROWS, batch_size=BATCH)
+    sr = sweep(
+        wl,
+        tpuv6e().with_policy(OnChipPolicy.SPM, capacity_bytes=CAPACITY),
+        policies=("spm", "lru", "srrip", "pinning"),
+        capacities=(CAPACITY,),
+        ways=(16,),
+        zipf_s=tuple(REUSE_LEVELS.values()),
+        seed=0,
+    )
+    level_of_z = {z: name for name, z in REUSE_LEVELS.items()}
+    spm = {
+        e.config.zipf_s: e.result
+        for e in sr.entries
+        if e.config.policy == "spm"
+    }
     rows = []
-    for level in ("reuse_high", "reuse_mid", "reuse_low"):
-        z = REUSE_LEVELS[level]
-        wl = dlrm_rmc2_small(num_tables=TABLES, rows_per_table=ROWS, batch_size=BATCH)
-        base = simulate(
-            wl, tpuv6e().with_policy(OnChipPolicy.SPM, capacity_bytes=CAPACITY),
-            seed=0, zipf_s=z,
-        )
-        for policy in (OnChipPolicy.LRU, OnChipPolicy.SRRIP, OnChipPolicy.PINNING):
-            res = simulate(
-                wl, tpuv6e().with_policy(policy, capacity_bytes=CAPACITY),
-                seed=0, zipf_s=z,
-            )
-            rows.append({
-                "figure": "4b/4c", "dataset": level, "policy": policy.value,
-                "speedup_vs_spm": base.total_cycles / res.total_cycles,
-                "onchip_ratio": res.onchip_ratio,
-                "spm_onchip_ratio": base.onchip_ratio,
-                "cache_hit_rate": res.cache_hits
-                / max(res.cache_hits + res.cache_misses, 1),
-            })
+    for e in sr.entries:
+        c, res = e.config, e.result
+        if c.policy == "spm":
+            continue
+        base = spm[c.zipf_s]
+        rows.append({
+            "figure": "4b/4c", "dataset": level_of_z[c.zipf_s], "policy": c.policy,
+            "speedup_vs_spm": base.total_cycles / res.total_cycles,
+            "onchip_ratio": res.onchip_ratio,
+            "spm_onchip_ratio": base.onchip_ratio,
+            "cache_hit_rate": res.cache_hits
+            / max(res.cache_hits + res.cache_misses, 1),
+        })
     return rows
 
 

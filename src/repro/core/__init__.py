@@ -4,10 +4,12 @@ matrix and embedding vector operations over a configurable memory hierarchy."""
 from .hardware import (
     Dataflow,
     HardwareConfig,
+    LookupSharding,
     MatrixUnit,
     OffChipMemory,
     OnChipMemory,
     OnChipPolicy,
+    Topology,
     VectorUnit,
     tpuv6e,
 )
@@ -22,8 +24,10 @@ from .engine import simulate, simulate_embedding_op
 from .memory import (
     MemoryPolicy,
     MemorySystem,
+    MultiCoreMemorySystem,
     available_policies,
     get_policy,
+    memory_system_for,
     register_policy,
 )
 from .results import BatchResult, SimResult
@@ -32,6 +36,8 @@ from .sweep import SweepConfig, SweepEntry, SweepResult, sweep
 __all__ = [
     "Dataflow",
     "HardwareConfig",
+    "LookupSharding",
+    "Topology",
     "MatrixUnit",
     "OffChipMemory",
     "OnChipMemory",
@@ -49,8 +55,10 @@ __all__ = [
     "SimResult",
     "MemoryPolicy",
     "MemorySystem",
+    "MultiCoreMemorySystem",
     "available_policies",
     "get_policy",
+    "memory_system_for",
     "register_policy",
     "SweepConfig",
     "SweepEntry",

@@ -36,7 +36,9 @@ from .memory.system import (  # re-exported for back-compat
     EmbeddingBatchStats,
     EmbeddingTrace,
     MemorySystem,
+    MultiCoreMemorySystem,
     lane_geometry,
+    memory_system_for,
 )
 from .results import BatchResult, SimResult
 from .trace import FullTrace, expand_trace, generate_zipf_trace
@@ -46,9 +48,11 @@ __all__ = [
     "EmbeddingBatchStats",
     "EmbeddingTrace",
     "MatrixSummary",
+    "MultiCoreMemorySystem",
     "assemble_result",
     "build_embedding_traces",
     "lane_geometry",
+    "memory_system_for",
     "simulate",
     "simulate_embedding_op",
     "summarize_matrix_ops",
@@ -64,9 +68,10 @@ def simulate_embedding_op(
     """Simulate one embedding op over ``len(traces)`` inference batches.
 
     Returns per-batch stats; on-chip state persists across batches (the
-    policy runs once over the concatenated trace).
+    policy runs once over the concatenated trace). Multi-core hardware
+    configurations route through the CoreCluster pipeline transparently.
     """
-    ms = MemorySystem.from_hardware(hw)
+    ms = memory_system_for(hw)
     return ms.simulate_embedding(EmbeddingTrace(spec, traces), pinned_lines=pinned_lines)
 
 
@@ -143,6 +148,8 @@ def assemble_result(
         hardware=hw.name,
         policy=hw.onchip.policy.value,
         clock_ghz=hw.clock_ghz,
+        num_cores=hw.num_cores,
+        topology=hw.topology.value,
     )
     total_vec_ops = 0.0
     for bi in range(workload.num_batches):
@@ -196,6 +203,6 @@ def simulate(
     """Run a full EONSim simulation: all batches, matrix + embedding ops."""
     matrix = summarize_matrix_ops(workload, hw)
     etraces = build_embedding_traces(workload, index_trace, seed, zipf_s)
-    ms = MemorySystem.from_hardware(hw)
+    ms = memory_system_for(hw)
     per_spec_stats = [ms.simulate_embedding(et) for et in etraces]
     return assemble_result(workload, hw, matrix, per_spec_stats, energy_table)

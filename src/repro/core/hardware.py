@@ -31,6 +31,26 @@ class Dataflow(str, enum.Enum):
     OS = "os"              # output stationary
 
 
+class Topology(str, enum.Enum):
+    """Multi-core on-chip memory topology.
+
+    PRIVATE — each core owns an ``OnChipMemory`` of the configured size and
+    classifies only its own lookup shard (ONNXim-style per-core scratchpad).
+    SHARED  — one last-level on-chip memory of the configured size serves the
+    interleaved lookup stream of every core (MTIA LLC-like).
+    """
+
+    PRIVATE = "private"
+    SHARED = "shared"
+
+
+class LookupSharding(str, enum.Enum):
+    """How embedding lookups are distributed across cores (trace.py)."""
+
+    BATCH = "batch"            # round-robin over batch samples (data parallel)
+    TABLE_HASH = "table_hash"  # hash table_id -> core (model parallel)
+
+
 @dataclass(frozen=True)
 class MatrixUnit:
     """Systolic array description (SCALE-Sim-compatible)."""
@@ -70,6 +90,11 @@ class OnChipMemory:
     read_bw_bytes_per_cycle: int = 8192
     write_bw_bytes_per_cycle: int = 8192
     policy: OnChipPolicy = OnChipPolicy.SPM
+    # Per-table policy mix: ((table_id, policy_name), ...) pairs; tables not
+    # listed fall back to ``policy``. Kept as a sorted tuple so the config
+    # stays hashable (sweep memoization keys include it). Build through
+    # ``HardwareConfig.with_policy_mix`` rather than by hand.
+    policy_mix: "tuple[tuple[int, str], ...] | None" = None
 
     @property
     def num_lines(self) -> int:
@@ -109,8 +134,12 @@ class HardwareConfig:
     name: str = "tpuv6e"
     clock_ghz: float = 0.94                   # TPUv6e core clock ~940 MHz
     num_cores: int = 1
+    topology: Topology = Topology.PRIVATE
+    lookup_sharding: LookupSharding = LookupSharding.BATCH
     matrix_unit: MatrixUnit = field(default_factory=MatrixUnit)
     vector_unit: VectorUnit = field(default_factory=VectorUnit)
+    # PRIVATE topology: ``onchip`` is each core's private memory.
+    # SHARED topology: ``onchip`` is the one shared last-level memory.
     onchip: OnChipMemory = field(default_factory=OnChipMemory)
     offchip: OffChipMemory = field(default_factory=OffChipMemory)
 
@@ -124,13 +153,63 @@ class HardwareConfig:
         return dataclasses.replace(self, **kw)
 
     def with_onchip(self, **onchip_kw) -> "HardwareConfig":
-        """Replace on-chip memory parameters (capacity, ways, policy, ...)."""
+        """Replace on-chip memory parameters (capacity, ways, policy, ...).
+
+        Unknown keys raise ``ValueError`` up front with the valid field list —
+        cluster-level knobs (``num_cores``, ``topology``, ...) live on
+        ``HardwareConfig`` itself, an easy mix-up once topology is in play.
+        """
+        valid = {f.name for f in dataclasses.fields(OnChipMemory)}
+        unknown = set(onchip_kw) - valid
+        if unknown:
+            top_level = {f.name for f in dataclasses.fields(HardwareConfig)}
+            hint = ""
+            misplaced = sorted(unknown & top_level)
+            if misplaced:
+                hint = (
+                    f"; {misplaced} are HardwareConfig fields — use"
+                    " .replace()/.with_cluster() instead"
+                )
+            raise ValueError(
+                f"unknown OnChipMemory parameter(s) {sorted(unknown)};"
+                f" valid: {sorted(valid)}{hint}"
+            )
         return dataclasses.replace(
             self, onchip=dataclasses.replace(self.onchip, **onchip_kw)
         )
 
     def with_policy(self, policy: OnChipPolicy, **onchip_kw) -> "HardwareConfig":
-        return self.with_onchip(policy=policy, **onchip_kw)
+        return self.with_onchip(policy=OnChipPolicy(policy), **onchip_kw)
+
+    def with_cluster(
+        self,
+        num_cores: int,
+        topology: "Topology | str" = None,
+        lookup_sharding: "LookupSharding | str" = None,
+    ) -> "HardwareConfig":
+        """Replace the core-cluster topology (count, on-chip sharing, sharding)."""
+        if num_cores < 1:
+            raise ValueError(f"num_cores must be >= 1, got {num_cores}")
+        kw = {"num_cores": int(num_cores)}
+        if topology is not None:
+            kw["topology"] = Topology(topology)
+        if lookup_sharding is not None:
+            kw["lookup_sharding"] = LookupSharding(lookup_sharding)
+        return dataclasses.replace(self, **kw)
+
+    def with_policy_mix(
+        self, mix: "dict[int, OnChipPolicy | str] | None"
+    ) -> "HardwareConfig":
+        """Assign on-chip policies per table id; unlisted tables keep
+        ``onchip.policy``. ``None`` clears the mix."""
+        if mix is None:
+            return self.with_onchip(policy_mix=None)
+        norm = tuple(
+            sorted((int(t), OnChipPolicy(p).value) for t, p in mix.items())
+        )
+        if len({t for t, _ in norm}) != len(norm):
+            raise ValueError("duplicate table ids in policy mix")
+        return self.with_onchip(policy_mix=norm)
 
 
 def tpuv6e() -> HardwareConfig:

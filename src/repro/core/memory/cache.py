@@ -133,9 +133,8 @@ def _step(policy_id: int, ways: int, carry, x):
     return (tags, meta, t + jnp.int32(1)), (jnp.logical_and(hit, valid), evict)
 
 
-@functools.partial(jax.jit, static_argnames=("num_sets", "ways", "policy"))
-def _simulate(sets: jax.Array, tags_in: jax.Array, valid: jax.Array,
-              num_sets: int, ways: int, policy: str):
+def _scan_trace(sets: jax.Array, tags_in: jax.Array, valid: jax.Array,
+                num_sets: int, ways: int, policy: str):
     tags0 = jnp.full((num_sets, ways), -1, dtype=ITYPE)
     if policy == "srrip":
         meta0 = jnp.full((num_sets, ways), MAX_RRPV, dtype=jnp.int32)
@@ -146,6 +145,20 @@ def _simulate(sets: jax.Array, tags_in: jax.Array, valid: jax.Array,
         step, (tags0, meta0, jnp.int32(0)), (sets, tags_in, valid)
     )
     return hits, evicts
+
+
+@functools.partial(jax.jit, static_argnames=("num_sets", "ways", "policy"))
+def _simulate_many(sets: jax.Array, tags_in: jax.Array, valid: jax.Array,
+                   num_sets: int, ways: int, policy: str):
+    """Vmapped ``_scan_trace`` over a leading batch axis of same-shape scans.
+
+    Per-row results are bit-exact with the unbatched scan (pure integer/bool
+    carry), so fusing many grid points' group scans into one dispatch never
+    changes classification — only dispatch count.
+    """
+    return jax.vmap(
+        lambda s, t, v: _scan_trace(s, t, v, num_sets, ways, policy)
+    )(sets, tags_in, valid)
 
 
 def _bucket_len(n: int) -> int:
@@ -160,58 +173,99 @@ def simulate_cache(
     geometry: CacheGeometry,
     policy: str = "lru",
 ) -> CacheResult:
-    """Run the trace through the cache; returns per-access hits + counts."""
+    """Run the trace through the cache; returns per-access hits + counts.
+
+    Thin wrapper over ``simulate_cache_many`` with a single pair, so the
+    single-config and batched paths are equivalent by construction.
+    """
+    return simulate_cache_many([lines], [geometry], policy)[0]
+
+
+def simulate_cache_many(
+    streams: "list[np.ndarray]",
+    geometries: "list[CacheGeometry]",
+    policy: str = "lru",
+) -> "list[CacheResult]":
+    """Run several independent (trace, geometry) pairs under one policy.
+
+    Semantically identical to ``[simulate_cache(s, g, policy) ...]`` (tests
+    enforce bit-exactness), but every set-group sub-scan across ALL pairs is
+    bucketed by its padded (length, sets, ways) shape and each bucket runs as
+    ONE vmapped dispatch (``_simulate_many``). A DSE sweep evaluating many
+    same-(ways, policy) capacities therefore pays per *shape*, not per config.
+    """
     if policy not in _POLICY_IDS:
         raise ValueError(f"unknown policy {policy!r}; options: {sorted(_POLICY_IDS)}")
-    lines_np = np.asarray(lines, dtype=np.int64).reshape(-1)
-    n = lines_np.size
-    if n == 0:
-        return CacheResult(np.zeros(0, dtype=bool), 0, 0, 0)
-    if int(lines_np.max()) >= np.iinfo(np.int32).max:
-        raise ValueError("line numbers exceed int32 range; rebase the trace")
+    lines_list = [np.asarray(s, dtype=np.int64).reshape(-1) for s in streams]
+    if len(lines_list) != len(geometries):
+        raise ValueError("streams and geometries length mismatch")
 
-    S, W = geometry.num_sets, geometry.ways
-    set_idx = (lines_np % S).astype(np.int32)
-    tag = lines_np.astype(np.int32)
+    hits_out = [np.zeros(l.size, dtype=bool) for l in lines_list]
+    evict_out = [0] * len(lines_list)
 
-    hits = np.zeros(n, dtype=bool)
-    evict_total = 0
+    # (cfg, idx-or-None, local_sets, tags, n_sets_g, ways) scan tasks, exactly
+    # mirroring simulate_cache's per-config set-group partitioning.
+    tasks = []
+    for cfg, (lines_np, geom) in enumerate(zip(lines_list, geometries)):
+        n = lines_np.size
+        if n == 0:
+            continue
+        if int(lines_np.max()) >= np.iinfo(np.int32).max:
+            raise ValueError("line numbers exceed int32 range; rebase the trace")
+        S, W = geom.num_sets, geom.ways
+        set_idx = (lines_np % S).astype(np.int32)
+        tag = lines_np.astype(np.int32)
+        if S <= _GROUP_SETS:
+            tasks.append((cfg, None, set_idx, tag, S, W))
+        else:
+            group = set_idx // _GROUP_SETS
+            order = np.argsort(group, kind="stable")
+            g_sorted = group[order]
+            bounds = np.searchsorted(g_sorted, np.arange(group.max() + 2))
+            for g in range(int(group.max()) + 1):
+                lo, hi = bounds[g], bounds[g + 1]
+                if lo == hi:
+                    continue
+                idx = order[lo:hi]
+                n_sets_g = min(_GROUP_SETS, S - g * _GROUP_SETS)
+                tasks.append(
+                    (cfg, idx, set_idx[idx] - g * _GROUP_SETS, tag[idx], n_sets_g, W)
+                )
 
-    if S <= _GROUP_SETS:
-        pad = _bucket_len(n) - n
-        s_p = np.pad(set_idx, (0, pad))
-        t_p = np.pad(tag, (0, pad), constant_values=-2)
-        v_p = np.pad(np.ones(n, dtype=bool), (0, pad))
-        h, e = _simulate(jnp.asarray(s_p), jnp.asarray(t_p), jnp.asarray(v_p), S, W, policy)
-        hits = np.asarray(h)[:n]
-        evict_total = int(np.asarray(e).sum())
-    else:
-        group = set_idx // _GROUP_SETS
-        order = np.argsort(group, kind="stable")  # time order kept within group
-        g_sorted = group[order]
-        bounds = np.searchsorted(g_sorted, np.arange(group.max() + 2))
-        for g in range(int(group.max()) + 1):
-            lo, hi = bounds[g], bounds[g + 1]
-            if lo == hi:
-                continue
-            idx = order[lo:hi]
-            m = hi - lo
-            pad = _bucket_len(m) - m
-            s_p = np.pad(set_idx[idx] - g * _GROUP_SETS, (0, pad))
-            t_p = np.pad(tag[idx], (0, pad), constant_values=-2)
-            v_p = np.pad(np.ones(m, dtype=bool), (0, pad))
-            n_sets_g = min(_GROUP_SETS, S - g * _GROUP_SETS)
-            h, e = _simulate(
-                jnp.asarray(s_p), jnp.asarray(t_p), jnp.asarray(v_p),
-                n_sets_g, W, policy,
-            )
-            hits[idx] = np.asarray(h)[:m]
-            evict_total += int(np.asarray(e).sum())
+    buckets: "dict[tuple, list]" = {}
+    for t in tasks:
+        m = t[2].size
+        buckets.setdefault((_bucket_len(m), t[4], t[5]), []).append(t)
 
-    n_hit = int(hits.sum())
-    return CacheResult(
-        hits=hits,
-        num_hits=n_hit,
-        num_misses=n - n_hit,
-        num_evictions=evict_total,
-    )
+    for (L, S_g, W), ts in buckets.items():
+        B = len(ts)
+        s_b = np.zeros((B, L), dtype=np.int32)
+        t_b = np.full((B, L), -2, dtype=np.int32)
+        v_b = np.zeros((B, L), dtype=bool)
+        for row, (_, _, s_loc, tags, _, _) in enumerate(ts):
+            m = s_loc.size
+            s_b[row, :m] = s_loc
+            t_b[row, :m] = tags
+            v_b[row, :m] = True
+        h, e = _simulate_many(
+            jnp.asarray(s_b), jnp.asarray(t_b), jnp.asarray(v_b), S_g, W, policy
+        )
+        h = np.asarray(h)
+        e = np.asarray(e)
+        for row, (cfg, idx, s_loc, _, _, _) in enumerate(ts):
+            m = s_loc.size
+            if idx is None:
+                hits_out[cfg] = h[row, :m].copy()
+            else:
+                hits_out[cfg][idx] = h[row, :m]
+            evict_out[cfg] += int(e[row].sum())  # padded slots never evict
+
+    return [
+        CacheResult(
+            hits=hits,
+            num_hits=int(hits.sum()),
+            num_misses=hits.size - int(hits.sum()),
+            num_evictions=ev,
+        )
+        for hits, ev in zip(hits_out, evict_out)
+    ]

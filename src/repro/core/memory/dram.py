@@ -160,16 +160,37 @@ def _scan_channel(
     t_row_act: float,
     bus_cycles_per_line: float,
 ):
-    """Per-channel event scan, vmapped over the channel axis."""
+    """Per-channel event scan, vmapped over the channel axis.
+
+    Reduced view of ``_scan_channel_full`` (one scan implementation): returns
+    per-channel (finish, total latency, row hits)."""
+    done, lat, hit = _scan_channel_full(
+        bk, row, arrive, valid, banks, t_cas, t_row_act, bus_cycles_per_line
+    )
+    return done.max(axis=-1), lat.sum(axis=-1), hit.sum(axis=-1)
+
+
+@functools.partial(jax.jit, static_argnames=("banks",))
+def _scan_channel_full(
+    bk: jax.Array,       # (R, L) bank index per slot
+    row: jax.Array,      # (R, L) row per slot
+    arrive: jax.Array,   # (R, L) arrival cycle
+    valid: jax.Array,    # (R, L) real access?
+    banks: int,
+    t_cas: float,
+    t_row_act: float,
+    bus_cycles_per_line: float,
+):
+    """``_scan_channel`` variant returning PER-ACCESS completion/latency/hit
+    arrays instead of per-channel reductions — same step function, identical
+    scanned values. The caller attributes completions back to request sources
+    (e.g. which core issued each miss) for per-core contention stats."""
 
     def one_channel(bk_c, row_c, arr_c, val_c):
         def step(carry, x):
             open_row, bank_free, bus_free = carry
             b, r, a, v = x
             row_hit = open_row[b] == r
-            # Bank occupancy: precharge+activate on a row miss; row hits
-            # stream at burst rate (CAS latency pipelines, it is not
-            # occupancy). Banks overlap; the channel bus serializes bursts.
             occ = jnp.where(row_hit, 0.0, t_row_act)
             bank_avail = jnp.maximum(a, bank_free[b]) + occ
             start_xfer = jnp.maximum(bank_avail, bus_free)
@@ -180,7 +201,7 @@ def _scan_channel(
             bank_free = jnp.where(v, new_bfree, bank_free)
             bus_free = jnp.where(v, done, bus_free)
             return (open_row, bank_free, bus_free), (
-                jnp.where(v, done + t_cas, 0.0),   # completion incl. CAS latency
+                jnp.where(v, done + t_cas, 0.0),
                 jnp.where(v, done + t_cas - a, 0.0),
                 jnp.logical_and(v, row_hit),
             )
@@ -193,7 +214,7 @@ def _scan_channel(
         (_, _, _), (done, lat, hit) = jax.lax.scan(
             step, init, (bk_c, row_c, arr_c, val_c)
         )
-        return done.max(), lat.sum(), hit.sum()
+        return done, lat, hit
 
     return jax.vmap(one_channel)(bk, row, arrive, valid)
 
@@ -285,14 +306,53 @@ def simulate_dram_segmented(
     of ``num_segments`` separate ones. Per-segment results are bit-exact vs
     the per-segment loop (same FR-FCFS order, same f32 accumulation order per
     scan; tests enforce this).
+
+    Implemented as the one-source reduction of the contended multi-core scan,
+    so the single-core and cluster DRAM paths cannot drift apart.
+    """
+    lines = np.asarray(lines, dtype=np.int64).reshape(-1)
+    results, _ = simulate_dram_contended(
+        lines,
+        seg,
+        np.zeros(lines.size, dtype=np.int64),
+        num_segments,
+        1,
+        model,
+    )
+    return results
+
+
+def simulate_dram_contended(
+    lines: np.ndarray,
+    seg: np.ndarray,
+    src: np.ndarray,
+    num_segments: int,
+    num_sources: int,
+    model: DramModel,
+):
+    """Shared-DRAM timing with cross-source contention within each segment.
+
+    The multi-core extension of ``simulate_dram_segmented``: a segment (one
+    inference batch) still starts from fresh DRAM state, but WITHIN a segment
+    all sources (cores) share one controller/bank/bus state — their
+    interleaved miss bursts contend for channels instead of each core seeing
+    an empty DRAM. ``src`` tags each access with its source; arrival order is
+    the given trace order (callers merge per-core streams deterministically).
+
+    Returns ``(results, finish)``: one ``DramResult`` per segment for the
+    shared stream, plus ``finish[num_segments, num_sources]`` — each source's
+    last completion cycle (0.0 where a source issued nothing), so per-core
+    DRAM stall under contention is directly observable.
     """
     lines = np.asarray(lines, dtype=np.int64).reshape(-1)
     seg = np.asarray(seg, dtype=np.int64).reshape(-1)
+    src = np.asarray(src, dtype=np.int64).reshape(-1)
     n = lines.size
     C = model.channels
     empty = DramResult(0.0, 0.0, 0, 0, 0)
+    finish = np.zeros((num_segments, num_sources), dtype=np.float64)
     if n == 0:
-        return [empty] * num_segments
+        return [empty] * num_segments, finish
     n_seg = np.bincount(seg, minlength=num_segments)
 
     ch, bk, row = model.decompose(lines)
@@ -300,7 +360,7 @@ def simulate_dram_segmented(
     order = _frfcfs_order(ch, bk, blk, model.banks_per_channel, C, seg=seg)
     chq_s = seg[order] * C + ch[order]
 
-    R = num_segments * C                       # one scan row per (segment, channel)
+    R = num_segments * C
     bounds = np.searchsorted(chq_s, np.arange(R + 1))
     max_len = int(np.max(bounds[1:] - bounds[:-1]))
     L = _seg_bucket_len(max(1, max_len))
@@ -308,6 +368,7 @@ def simulate_dram_segmented(
     row_m = np.zeros((R, L), dtype=np.int32)
     ar_m = np.zeros((R, L), dtype=np.float32)
     va_m = np.zeros((R, L), dtype=bool)
+    idx_m = np.full((R, L), -1, dtype=np.int64)   # slot -> original access
     for r_i in range(R):
         lo, hi = bounds[r_i], bounds[r_i + 1]
         if lo == hi:
@@ -317,8 +378,9 @@ def simulate_dram_segmented(
         bk_m[r_i, :m] = bk[idx]
         row_m[r_i, :m] = row[idx]
         va_m[r_i, :m] = True
+        idx_m[r_i, :m] = idx
 
-    done, lat, hits = _scan_channel(
+    done_j, lat_j, hit_j = _scan_channel_full(
         jnp.asarray(bk_m),
         jnp.asarray(row_m),
         jnp.asarray(ar_m),
@@ -328,25 +390,37 @@ def simulate_dram_segmented(
         float(model.t_rp + model.t_rcd),
         float(model.line_bytes / model.chan_bytes_per_cycle),
     )
-    done = np.asarray(done).reshape(num_segments, C)
-    lat = np.asarray(lat).reshape(num_segments, C)
-    hits = np.asarray(hits).reshape(num_segments, C)
+    done = np.asarray(done_j)
+    # Per-row reductions stay in XLA — the same ops `_scan_channel` applies —
+    # so per-segment aggregates keep the exact f32 accumulation order of the
+    # reduced scan (simulate_dram_segmented's bit-exactness contract).
+    lat_row = np.asarray(jnp.sum(lat_j, axis=-1)).reshape(num_segments, C)
+    hit_row = np.asarray(jnp.sum(hit_j, axis=-1)).reshape(num_segments, C)
 
+    # Per-source completion attribution (invalid slots carry done=0).
+    flat_idx = idx_m.reshape(-1)
+    flat_done = done.reshape(-1)
+    sel = flat_idx >= 0
+    key = seg[flat_idx[sel]] * num_sources + src[flat_idx[sel]]
+    np.maximum.at(finish.reshape(-1), key, flat_done[sel])
+    finish[finish > 0] += model.base_latency
+
+    done_s = done.reshape(num_segments, C, L)
     results: List[DramResult] = []
     for s in range(num_segments):
         ns = int(n_seg[s])
         if ns == 0:
             results.append(empty)
             continue
-        row_hits = int(hits[s].sum())
+        row_hits = int(hit_row[s].sum())
         results.append(DramResult(
-            finish_cycle=float(done[s].max()) + model.base_latency,
-            total_latency_cycles=float(lat[s].sum()) + model.base_latency * ns,
+            finish_cycle=float(done_s[s].max()) + model.base_latency,
+            total_latency_cycles=float(lat_row[s].sum()) + model.base_latency * ns,
             row_hits=row_hits,
             row_misses=ns - row_hits,
             accesses=ns,
         ))
-    return results
+    return results, finish
 
 
 def estimate_dram_fast(
@@ -415,27 +489,58 @@ def dram_timing_segmented(
 
     Segments longer than ``DETAILED_DRAM_MAX`` use the closed-form estimate
     (matching the per-segment switch in ``dram_timing``); the rest share one
-    batched event scan.
+    batched event scan. One-source reduction of ``dram_timing_contended``.
+    """
+    lines = np.asarray(lines, dtype=np.int64).reshape(-1)
+    out, _ = dram_timing_contended(
+        lines, seg, np.zeros(lines.size, dtype=np.int64), num_segments, 1, model
+    )
+    return out
+
+
+def dram_timing_contended(
+    lines: np.ndarray,
+    seg: np.ndarray,
+    src: np.ndarray,
+    num_segments: int,
+    num_sources: int,
+    model: DramModel,
+):
+    """``dram_timing``-style dispatch for the contended shared-DRAM path.
+
+    Segments longer than ``DETAILED_DRAM_MAX`` fall back to the closed-form
+    estimate over the merged stream (per-source finish approximated by the
+    segment finish — the shared bus bounds every core in that regime).
     """
     lines = np.asarray(lines, dtype=np.int64).reshape(-1)
     seg = np.asarray(seg, dtype=np.int64).reshape(-1)
+    src = np.asarray(src, dtype=np.int64).reshape(-1)
     sizes = np.bincount(seg, minlength=num_segments)
     big_ids = np.nonzero(sizes > DETAILED_DRAM_MAX)[0]
     if big_ids.size == 0:
-        return simulate_dram_segmented(lines, seg, num_segments, model)
+        return simulate_dram_contended(
+            lines, seg, src, num_segments, num_sources, model
+        )
     small_ids = np.nonzero(sizes <= DETAILED_DRAM_MAX)[0]
     remap = np.full(num_segments, -1, dtype=np.int64)
     remap[small_ids] = np.arange(small_ids.size)
     keep = remap[seg] >= 0
-    small_res = simulate_dram_segmented(
-        lines[keep], remap[seg[keep]], int(small_ids.size), model
+    small_res, small_fin = simulate_dram_contended(
+        lines[keep], remap[seg[keep]], src[keep],
+        int(small_ids.size), num_sources, model,
     )
     out: List[DramResult] = [None] * num_segments  # type: ignore[list-item]
+    finish = np.zeros((num_segments, num_sources), dtype=np.float64)
     for i, s in enumerate(small_ids):
         out[s] = small_res[i]
+        finish[s] = small_fin[i]
     for s in big_ids:
-        out[s] = estimate_dram_fast(lines[seg == s], model)
-    return out
+        mask = seg == s
+        res = estimate_dram_fast(lines[mask], model)
+        out[s] = res
+        present = np.bincount(src[mask], minlength=num_sources) > 0
+        finish[s][present] = res.finish_cycle
+    return out, finish
 
 
 def bulk_transfer_cycles(data_bytes: float, hw: HardwareConfig) -> float:

@@ -29,13 +29,13 @@ from __future__ import annotations
 import abc
 import dataclasses
 from dataclasses import dataclass
-from typing import ClassVar, Dict, Optional, Tuple, Type
+from typing import ClassVar, Dict, List, Optional, Sequence, Tuple, Type, Union
 
 import numpy as np
 
 from ..hardware import HardwareConfig, OnChipPolicy
 from ..trace import AddressTrace
-from .cache import CacheGeometry, simulate_cache
+from .cache import CacheGeometry, simulate_cache, simulate_cache_many
 
 
 @dataclass
@@ -90,6 +90,28 @@ class PolicyContext:
             pinned_lines=pinned_lines,
         )
 
+    def scaled(self, fraction: float) -> "PolicyContext":
+        """Context for a capacity partition (per-table policy mixes).
+
+        The on-chip memory is statically partitioned set-wise: a policy group
+        owning ``fraction`` of the tables gets ``fraction`` of the sets (and
+        capacity units), associativity unchanged. ``fraction=1`` is exact
+        identity, so a degenerate one-group mix classifies bit-exactly like
+        the unmixed path.
+        """
+        if fraction >= 1.0:
+            return self
+        g = self.geometry
+        return dataclasses.replace(
+            self,
+            geometry=CacheGeometry(
+                num_sets=max(1, int(g.num_sets * fraction)),
+                ways=g.ways,
+                line_bytes=g.line_bytes,
+            ),
+            capacity_units=max(1, int(self.capacity_units * fraction)),
+        )
+
 
 class MemoryPolicy(abc.ABC):
     """A pluggable on-chip memory management policy."""
@@ -122,11 +144,22 @@ class MemoryPolicy(abc.ABC):
         """One-time on-chip fills at load time (before the first batch)."""
         return 0
 
-    def run(self, lines: np.ndarray, ctx: PolicyContext) -> PolicyOutcome:
-        """Classify + apply the shared accounting contract."""
-        lines = np.asarray(lines, dtype=np.int64).reshape(-1)
-        ctx = self.prepare(lines, ctx)
-        hits = self.classify(lines, ctx)
+    def classify_many(
+        self, streams: Sequence[np.ndarray], ctxs: Sequence[PolicyContext]
+    ) -> List[np.ndarray]:
+        """Classify several independent (stream, ctx) pairs.
+
+        Default is a plain loop; policies backed by the JAX cache engine
+        override this to fuse same-shape scans into one vmapped dispatch
+        (the DSE sweep's batched-classification fast path). MUST be
+        bit-exact with per-pair ``classify`` — tests enforce it end to end.
+        """
+        return [self.classify(s, c) for s, c in zip(streams, ctxs)]
+
+    def _outcome(
+        self, lines: np.ndarray, ctx: PolicyContext, hits: np.ndarray
+    ) -> PolicyOutcome:
+        """The shared accounting contract applied to a classification."""
         misses = int((~hits).sum())
         setup = self.setup_writes(ctx)
         return PolicyOutcome(
@@ -138,6 +171,24 @@ class MemoryPolicy(abc.ABC):
             policy=self.enum,
             setup_writes=setup,
         )
+
+    def run(self, lines: np.ndarray, ctx: PolicyContext) -> PolicyOutcome:
+        """Classify + apply the shared accounting contract."""
+        lines = np.asarray(lines, dtype=np.int64).reshape(-1)
+        ctx = self.prepare(lines, ctx)
+        return self._outcome(lines, ctx, self.classify(lines, ctx))
+
+    def run_many(
+        self, streams: Sequence[np.ndarray], ctxs: Sequence[PolicyContext]
+    ) -> List[PolicyOutcome]:
+        """Batched ``run``: same contract, one ``classify_many`` dispatch."""
+        streams = [np.asarray(s, dtype=np.int64).reshape(-1) for s in streams]
+        ctxs = [self.prepare(s, c) for s, c in zip(streams, ctxs)]
+        hits_list = self.classify_many(streams, ctxs)
+        return [
+            self._outcome(s, c, h)
+            for s, c, h in zip(streams, ctxs, hits_list)
+        ]
 
 
 # --------------------------------------------------------------------------
@@ -198,6 +249,14 @@ class _CacheModePolicy(MemoryPolicy):
 
     def classify(self, lines: np.ndarray, ctx: PolicyContext) -> np.ndarray:
         return simulate_cache(lines, ctx.geometry, policy=self.name).hits
+
+    def classify_many(
+        self, streams: Sequence[np.ndarray], ctxs: Sequence[PolicyContext]
+    ) -> List[np.ndarray]:
+        results = simulate_cache_many(
+            streams, [c.geometry for c in ctxs], policy=self.name
+        )
+        return [r.hits for r in results]
 
 
 @register_policy
@@ -262,6 +321,58 @@ class PinningPolicy(MemoryPolicy):
 
     def setup_writes(self, ctx: PolicyContext) -> int:
         return 0 if ctx.pinned_lines is None else int(len(ctx.pinned_lines))
+
+
+# --------------------------------------------------------------------------
+# Per-table policy mixes
+# --------------------------------------------------------------------------
+
+@dataclass(frozen=True)
+class PolicyGroup:
+    """One partition of a per-table policy mix."""
+
+    policy: MemoryPolicy
+    table_ids: Tuple[int, ...]       # tables classified by this policy
+    fraction: float                  # share of tables -> share of capacity
+
+
+def resolve_policy_mix(
+    mix: Optional[Tuple[Tuple[int, str], ...]],
+    default_policy: Union[str, OnChipPolicy],
+    num_tables: int,
+) -> List[PolicyGroup]:
+    """Expand ``hw.onchip.policy_mix`` into policy groups over all tables.
+
+    Tables not named in the mix fall back to ``default_policy``. Capacity is
+    statically partitioned set-wise, proportional to each group's table count
+    (``PolicyContext.scaled``); a single-group result keeps fraction 1.0 and
+    is bit-exact with the unmixed path.
+    """
+    assign: Dict[int, str] = {}
+    default_name = (
+        default_policy.value
+        if isinstance(default_policy, OnChipPolicy)
+        else str(default_policy)
+    )
+    for t, p in mix or ():
+        if not 0 <= t < num_tables:
+            raise ValueError(
+                f"policy mix table id {t} out of range [0, {num_tables})"
+            )
+        if int(t) in assign:
+            raise ValueError(f"duplicate table id {t} in policy mix")
+        assign[int(t)] = p
+    by_policy: Dict[str, List[int]] = {}
+    for t in range(num_tables):
+        by_policy.setdefault(assign.get(t, default_name), []).append(t)
+    return [
+        PolicyGroup(
+            policy=get_policy(name),
+            table_ids=tuple(tables),
+            fraction=len(tables) / max(num_tables, 1),
+        )
+        for name, tables in sorted(by_policy.items())
+    ]
 
 
 # --------------------------------------------------------------------------

@@ -10,7 +10,7 @@ memory geometry goes through the same path:
       v
   MemoryPolicy.run  — pluggable registry (policies.py), shared accounting
       v
-  miss line trace + per-batch attribution
+  miss line trace + per-batch attribution     (ClassifiedStream)
       v
   dram_timing_segmented — ONE batched event scan for all batches
       v
@@ -31,24 +31,51 @@ Per-batch DRAM timing semantics match the historical engine: each batch's
 miss burst is timed against fresh DRAM state (double-buffered streaming, the
 memory-bound regime), but all batches now run as one segmented scan instead
 of a Python loop of independent JAX dispatches.
+
+Multi-core CoreCluster topology (``MultiCoreMemorySystem``): the same
+classify pipeline runs N times over deterministic per-core trace shards
+(PRIVATE topology — each core owns an on-chip memory) or once over the
+interleaved stream (SHARED last-level topology), and all cores' miss bursts
+are then timed against ONE shared DRAM with cross-core channel contention
+(``dram_timing_contended``) instead of fresh DRAM state per core. The
+degenerate ``num_cores=1, private`` configuration delegates to the
+single-core path and is bit-exact with it (test-enforced).
+
+Per-table policy mixes (``hw.onchip.policy_mix``): tables are partitioned
+into policy groups (hot tables pinned, cold tables cached, ...); each group
+classifies its sub-stream under a set-proportional slice of the on-chip
+capacity (``PolicyContext.scaled``), and the groups' miss streams merge back
+in global trace order for DRAM timing.
 """
 from __future__ import annotations
 
 from dataclasses import dataclass
-from typing import Dict, List, Optional, Sequence
+from typing import Dict, List, Optional, Sequence, Union
 
 import numpy as np
 
-from ..hardware import HardwareConfig
-from ..trace import AddressTrace, ConcatTrace, FullTrace, translate
+from ..hardware import HardwareConfig, Topology
+from ..trace import (
+    AddressTrace,
+    ConcatTrace,
+    FullTrace,
+    shard_lookup_cores,
+    shard_trace,
+    translate,
+)
 from ..workload import EmbeddingOpSpec
 from .cache import CacheGeometry
-from .dram import DramModel, dram_timing_segmented
+from .dram import (
+    DramModel,
+    dram_timing_contended,
+    dram_timing_segmented,
+)
 from .policies import (
     MemoryPolicy,
     PolicyContext,
     PolicyOutcome,
     get_policy,
+    resolve_policy_mix,
 )
 
 
@@ -77,6 +104,20 @@ def lane_geometry(hw: HardwareConfig, spec: EmbeddingOpSpec) -> Optional[CacheGe
 # --------------------------------------------------------------------------
 
 @dataclass
+class CoreBatchStats:
+    """Per-core detail for one batch under a multi-core topology."""
+
+    core_id: int
+    lookups: int = 0
+    onchip_reads: int = 0
+    cache_misses: int = 0
+    onchip_cycles: float = 0.0
+    vector_cycles: float = 0.0
+    dram_finish_cycles: float = 0.0   # this core's last miss completion
+                                      # under shared-DRAM contention
+
+
+@dataclass
 class EmbeddingBatchStats:
     cycles: float = 0.0
     vector_cycles: float = 0.0
@@ -89,6 +130,7 @@ class EmbeddingBatchStats:
     cache_misses: int = 0
     dram_row_hits: int = 0
     dram_row_misses: int = 0
+    per_core: Optional[List[CoreBatchStats]] = None   # multi-core detail
 
 
 def _vector_compute_cycles(spec: EmbeddingOpSpec, batch_size: int, hw: HardwareConfig) -> float:
@@ -116,6 +158,17 @@ class EmbeddingTrace:
         self._vec_ids: Optional[np.ndarray] = None
         self._lookup_batch: Optional[np.ndarray] = None
         self._atraces: Dict[int, AddressTrace] = {}
+
+    @classmethod
+    def from_concat(cls, spec: EmbeddingOpSpec, concat: ConcatTrace) -> "EmbeddingTrace":
+        """Wrap an existing ConcatTrace (e.g. one core's shard) directly."""
+        et = cls.__new__(cls)
+        et.spec = spec
+        et.concat = concat
+        et._vec_ids = None
+        et._lookup_batch = None
+        et._atraces = {}
+        return et
 
     @property
     def num_batches(self) -> int:
@@ -146,7 +199,100 @@ class EmbeddingTrace:
 
 
 # --------------------------------------------------------------------------
-# MemorySystem
+# Classification result (decoupled from DRAM timing for multi-core reuse)
+# --------------------------------------------------------------------------
+
+@dataclass
+class ClassifiedStream:
+    """Per-batch accounting + the miss line trace of one classify pipeline.
+
+    ``miss_pos`` (optional) is the global line-slot of each miss —
+    ``global_lookup * lines_per_vector + line_offset`` — unique per line
+    access, so independently classified sub-streams (per-core shards, policy
+    groups) merge back into ONE deterministic interleaved stream for
+    shared-DRAM timing by sorting on it.
+    """
+
+    num_batches: int
+    hit_lines: np.ndarray            # (B,) line-granular hits per batch
+    miss_count: np.ndarray           # (B,) line-granular misses per batch
+    reads: np.ndarray                # (B,) line-granular on-chip reads per batch
+    setup_writes: int
+    miss_lines: np.ndarray           # (M,) line addresses, stream order
+    miss_batch: np.ndarray           # (M,) batch of each miss line
+    miss_pos: Optional[np.ndarray] = None   # (M,) global line-slot
+
+
+def _lane_context(
+    hw: HardwareConfig,
+    lane: CacheGeometry,
+    lpv: int,
+    pinned_lines: Optional[np.ndarray],
+) -> PolicyContext:
+    """Policy context for the vector-granular lane sub-cache."""
+    return PolicyContext(
+        geometry=lane,
+        capacity_units=hw.onchip.num_lines // lpv,
+        pinned_lines=pinned_lines,
+    )
+
+
+def _expand_lane_misses(
+    concat: ConcatTrace,
+    spec: EmbeddingOpSpec,
+    mi: np.ndarray,
+    line: int,
+    lpv: int,
+    lookup_index: Optional[np.ndarray],
+):
+    """Expand vector-granular miss lookups ``mi`` to line addresses (+ global
+    line-slot positions when ``lookup_index`` is given) — the single owner of
+    the contiguous-layout address arithmetic for the lane path."""
+    miss_base = (
+        concat.table_ids.astype(np.int64)[mi] * spec.table_bytes
+        + concat.row_ids[mi] * spec.vector_bytes
+    ) // line
+    offs = np.arange(lpv, dtype=np.int64)
+    miss_lines = (miss_base[:, None] + offs[None, :]).reshape(-1)
+    miss_pos = None
+    if lookup_index is not None:
+        miss_pos = (lookup_index[mi][:, None] * lpv + offs[None, :]).reshape(-1)
+    return miss_lines, miss_pos
+
+
+def _merge_miss_streams(m_lines, m_batch, m_pos, m_src=None):
+    """Merge independently classified miss streams into global trace order.
+
+    Positions are unique line slots (``global_lookup * lpv + offset``), so a
+    stable argsort reconstructs the exact order the merged bursts reach the
+    shared memory controller. Returns ``(lines, batch, pos, src)``; ``src``
+    is ``None`` unless per-stream source tags were given.
+    """
+    empty = np.zeros(0, dtype=np.int64)
+    lines = np.concatenate(m_lines) if m_lines else empty
+    batch = np.concatenate(m_batch) if m_batch else empty
+    pos = np.concatenate(m_pos) if m_pos else empty
+    order = np.argsort(pos, kind="stable")
+    src = None
+    if m_src is not None:
+        src = (np.concatenate(m_src) if m_src else empty)[order]
+    return lines[order], batch[order], pos[order], src
+
+
+@dataclass
+class _PreparedStream:
+    """Stream + context resolved for one (etrace, hardware) pair."""
+
+    stream: np.ndarray
+    ctx: PolicyContext
+    unit: int                        # lines represented by one stream access
+    acc_batch: np.ndarray            # batch of each stream access
+    use_lane: bool
+    at: Optional[AddressTrace]       # line trace (line-granular path only)
+
+
+# --------------------------------------------------------------------------
+# MemorySystem (single core / shared-LLC pipeline)
 # --------------------------------------------------------------------------
 
 @dataclass(frozen=True)
@@ -175,6 +321,234 @@ class MemorySystem:
             atrace.lines, PolicyContext.from_hardware(self.hw, pinned_lines)
         )
 
+    # -- stream preparation -------------------------------------------------
+    def _prepare_stream(
+        self,
+        etrace: EmbeddingTrace,
+        pinned_lines: Optional[np.ndarray],
+        allow_lane: bool,
+    ) -> _PreparedStream:
+        spec = etrace.spec
+        hw = self.hw
+        line = hw.onchip.line_bytes
+        lpv = max(1, -(-spec.vector_bytes // line))
+        lookup_batch = etrace.lookup_batch
+
+        lane = lane_geometry(hw, spec) if allow_lane else None
+        use_lane = lane is not None and self.policy.supports_lane_transform
+
+        if use_lane:
+            # Transparent transform: hand the policy the vector-granular
+            # stream under the lane sub-cache geometry; every access stands
+            # for ``lpv`` line accesses.
+            return _PreparedStream(
+                stream=etrace.vec_ids,
+                ctx=_lane_context(hw, lane, lpv, pinned_lines),
+                unit=lpv,
+                acc_batch=lookup_batch,
+                use_lane=True,
+                at=None,
+            )
+        at = etrace.address_trace(line)
+        return _PreparedStream(
+            stream=at.lines,
+            ctx=PolicyContext.from_hardware(hw, pinned_lines),
+            unit=1,
+            acc_batch=np.repeat(lookup_batch, at.lines_per_vector),
+            use_lane=False,
+            at=at,
+        )
+
+    # -- per-batch accounting ------------------------------------------------
+    def _account(
+        self,
+        etrace: EmbeddingTrace,
+        prep: _PreparedStream,
+        out: PolicyOutcome,
+        lookup_index: Optional[np.ndarray],
+    ) -> ClassifiedStream:
+        """Shared accounting contract, per batch: reads = every consumed
+        line, writes = fills/stages (+ one-time setup on batch 0), offchip =
+        miss fetches. ``unit`` scales vector-granular counts back to lines."""
+        spec = etrace.spec
+        line = self.hw.onchip.line_bytes
+        lpv = max(1, -(-spec.vector_bytes // line))
+        num_batches = etrace.num_batches
+        unit, acc_batch = prep.unit, prep.acc_batch
+        hits = out.hits
+        misses = ~hits
+
+        hit_lines = np.bincount(acc_batch[hits], minlength=num_batches) * unit
+        miss_count = np.bincount(acc_batch[misses], minlength=num_batches) * unit
+        reads = np.bincount(acc_batch, minlength=num_batches) * unit
+
+        miss_pos = None
+        if prep.use_lane:
+            # Expand vector-granular misses to line addresses for DRAM timing.
+            mi = np.nonzero(misses)[0]
+            miss_lines, miss_pos = _expand_lane_misses(
+                etrace.concat, spec, mi, line, lpv, lookup_index
+            )
+            miss_batch = np.repeat(acc_batch[misses], unit)
+        else:
+            miss_lines = out.miss_lines
+            miss_batch = acc_batch[misses]
+            if lookup_index is not None:
+                midx = np.nonzero(misses)[0]
+                vec = prep.at.vector_of_line[midx]
+                miss_pos = lookup_index[vec] * lpv + midx % lpv
+
+        return ClassifiedStream(
+            num_batches=num_batches,
+            hit_lines=hit_lines,
+            miss_count=miss_count,
+            reads=reads,
+            setup_writes=out.setup_writes,
+            miss_lines=miss_lines,
+            miss_batch=miss_batch,
+            miss_pos=miss_pos,
+        )
+
+    # -- classification (mix-aware) -----------------------------------------
+    def classify_embedding(
+        self,
+        etrace: EmbeddingTrace,
+        pinned_lines: Optional[np.ndarray] = None,
+        allow_lane: bool = True,
+        lookup_index: Optional[np.ndarray] = None,
+    ) -> ClassifiedStream:
+        """Run the on-chip classification pipeline over all batches.
+
+        ``lookup_index`` maps this trace's lookups to global positions (per-
+        core shards); when given, the result carries ``miss_pos`` so several
+        classified streams can merge deterministically for shared-DRAM timing.
+        """
+        if self.hw.onchip.policy_mix:
+            return self._classify_mixed(etrace, pinned_lines, allow_lane, lookup_index)
+        prep = self._prepare_stream(etrace, pinned_lines, allow_lane)
+        out = self.policy.run(prep.stream, prep.ctx)
+        return self._account(etrace, prep, out, lookup_index)
+
+    def _classify_mixed(
+        self,
+        etrace: EmbeddingTrace,
+        pinned_lines: Optional[np.ndarray],
+        allow_lane: bool,
+        lookup_index: Optional[np.ndarray],
+    ) -> ClassifiedStream:
+        """Per-table policy mix: classify each policy group's sub-stream under
+        a capacity partition, then merge miss streams in global trace order."""
+        spec = etrace.spec
+        hw = self.hw
+        concat = etrace.concat
+        line = hw.onchip.line_bytes
+        lpv = max(1, -(-spec.vector_bytes // line))
+        num_batches = etrace.num_batches
+        lookup_batch = etrace.lookup_batch
+        if lookup_index is None:
+            # Positions are needed regardless: the merged miss stream must be
+            # in trace order for DRAM timing.
+            lookup_index = np.arange(len(concat), dtype=np.int64)
+
+        groups = resolve_policy_mix(
+            hw.onchip.policy_mix, hw.onchip.policy, spec.num_tables
+        )
+        gid_of_table = np.empty(spec.num_tables, dtype=np.int32)
+        for gi, g in enumerate(groups):
+            gid_of_table[list(g.table_ids)] = gi
+        gid = gid_of_table[concat.table_ids]
+
+        lane = lane_geometry(hw, spec) if allow_lane else None
+        hit_lines = np.zeros(num_batches, dtype=np.int64)
+        miss_count = np.zeros(num_batches, dtype=np.int64)
+        reads = np.zeros(num_batches, dtype=np.int64)
+        setup = 0
+        m_lines, m_batch, m_pos = [], [], []
+        at: Optional[AddressTrace] = None
+        offs = np.arange(lpv, dtype=np.int64)
+
+        for gi, g in enumerate(groups):
+            lidx = np.nonzero(gid == gi)[0].astype(np.int64)
+            if lidx.size == 0:
+                continue
+            use_lane = lane is not None and g.policy.supports_lane_transform
+            if use_lane:
+                stream = etrace.vec_ids[lidx]
+                ctx = _lane_context(hw, lane, lpv, pinned_lines).scaled(g.fraction)
+                unit = lpv
+                acc_batch = lookup_batch[lidx]
+            else:
+                if at is None:
+                    at = etrace.address_trace(line)
+                line_idx = (lidx[:, None] * lpv + offs[None, :]).reshape(-1)
+                stream = at.lines[line_idx]
+                ctx = PolicyContext.from_hardware(hw, pinned_lines).scaled(g.fraction)
+                unit = 1
+                acc_batch = np.repeat(lookup_batch[lidx], lpv)
+
+            out = g.policy.run(stream, ctx)
+            hits = out.hits
+            misses = ~hits
+            hit_lines += np.bincount(acc_batch[hits], minlength=num_batches) * unit
+            miss_count += np.bincount(acc_batch[misses], minlength=num_batches) * unit
+            reads += np.bincount(acc_batch, minlength=num_batches) * unit
+            setup += out.setup_writes
+
+            if use_lane:
+                mi = lidx[np.nonzero(misses)[0]]
+                g_lines, g_pos = _expand_lane_misses(
+                    concat, spec, mi, line, lpv, lookup_index
+                )
+                m_lines.append(g_lines)
+                m_batch.append(np.repeat(acc_batch[misses], unit))
+                m_pos.append(g_pos)
+            else:
+                midx = line_idx[np.nonzero(misses)[0]]
+                m_lines.append(at.lines[midx])
+                m_batch.append(acc_batch[misses])
+                m_pos.append(lookup_index[at.vector_of_line[midx]] * lpv + midx % lpv)
+
+        all_lines, all_batch, all_pos, _ = _merge_miss_streams(m_lines, m_batch, m_pos)
+        return ClassifiedStream(
+            num_batches=num_batches,
+            hit_lines=hit_lines,
+            miss_count=miss_count,
+            reads=reads,
+            setup_writes=setup,
+            miss_lines=all_lines,
+            miss_batch=all_batch,
+            miss_pos=all_pos,
+        )
+
+    # -- stats assembly -----------------------------------------------------
+    def _assemble_stats(
+        self, etrace: EmbeddingTrace, cs: ClassifiedStream, drams
+    ) -> List[EmbeddingBatchStats]:
+        hw = self.hw
+        line = hw.onchip.line_bytes
+        onchip_bw = max(hw.onchip.read_bw_bytes_per_cycle, 1)
+        stats: List[EmbeddingBatchStats] = []
+        for b in range(cs.num_batches):
+            s = EmbeddingBatchStats()
+            d = drams[b]
+            s.dram_cycles = d.finish_cycle
+            s.dram_row_hits = d.row_hits
+            s.dram_row_misses = d.row_misses
+            s.onchip_reads = int(cs.reads[b])
+            s.onchip_writes = int(cs.miss_count[b]) + (cs.setup_writes if b == 0 else 0)
+            s.offchip_reads = int(cs.miss_count[b])
+            s.cache_hits = int(cs.hit_lines[b])
+            s.cache_misses = int(cs.miss_count[b])
+            s.onchip_cycles = s.onchip_reads * line / onchip_bw + hw.onchip.latency_cycles
+            s.vector_cycles = _vector_compute_cycles(
+                etrace.spec, etrace.concat.batch_sizes[b], hw
+            )
+            # on-chip service, off-chip service and pooling overlap in a
+            # double-buffered stream; the slowest stage bounds the batch.
+            s.cycles = max(s.onchip_cycles, s.dram_cycles, s.vector_cycles)
+            stats.append(s)
+        return stats
+
     # -- multi-batch embedding-op pipeline ----------------------------------
     def simulate_embedding(
         self,
@@ -188,79 +562,200 @@ class MemorySystem:
         ``allow_lane=False`` forces the line-granular path (used by parity
         tests; results are identical when the lane transform applies).
         """
-        spec = etrace.spec
+        cs = self.classify_embedding(etrace, pinned_lines, allow_lane)
+        drams = dram_timing_segmented(
+            cs.miss_lines, cs.miss_batch, cs.num_batches, self.dram
+        )
+        return self._assemble_stats(etrace, cs, drams)
+
+
+def simulate_embedding_many(
+    systems: Sequence[MemorySystem],
+    etrace: EmbeddingTrace,
+    allow_lane: bool = True,
+) -> List[List[EmbeddingBatchStats]]:
+    """Batched ``simulate_embedding`` across configurations of ONE policy.
+
+    All systems must share the same registered policy (and carry no policy
+    mix); their classification scans run through ``MemoryPolicy.run_many``,
+    which fuses same-shape cache scans into single vmapped dispatches (the
+    DSE sweep fast path). Per-system results are bit-exact with independent
+    ``simulate_embedding`` calls — tests enforce this end to end.
+    """
+    if not systems:
+        return []
+    policy = systems[0].policy
+    if any(ms.policy is not policy for ms in systems):
+        raise ValueError("simulate_embedding_many requires one shared policy")
+    if any(ms.hw.onchip.policy_mix for ms in systems):
+        raise ValueError("policy-mix configs must use the unbatched path")
+    preps = [ms._prepare_stream(etrace, None, allow_lane) for ms in systems]
+    outs = policy.run_many([p.stream for p in preps], [p.ctx for p in preps])
+    results: List[List[EmbeddingBatchStats]] = []
+    for ms, prep, out in zip(systems, preps, outs):
+        cs = ms._account(etrace, prep, out, None)
+        drams = dram_timing_segmented(
+            cs.miss_lines, cs.miss_batch, cs.num_batches, ms.dram
+        )
+        results.append(ms._assemble_stats(etrace, cs, drams))
+    return results
+
+
+# --------------------------------------------------------------------------
+# MultiCoreMemorySystem (CoreCluster topology)
+# --------------------------------------------------------------------------
+
+@dataclass(frozen=True)
+class MultiCoreMemorySystem:
+    """N-core memory pipeline over one shared DRAM.
+
+    PRIVATE topology: the embedding trace is sharded deterministically across
+    cores (``hw.lookup_sharding``); each core's shard runs the standard
+    classify pipeline against that core's own on-chip memory (``hw.onchip``
+    describes ONE core's memory). SHARED topology: one last-level on-chip
+    memory observes the interleaved stream of every core, so classification
+    equals the single-core path while vector compute still shards per core.
+
+    Either way, all cores' miss bursts are merged in global trace order and
+    timed against ONE shared DRAM with cross-core channel contention
+    (``dram_timing_contended``) — per batch, DRAM state is fresh (double-
+    buffered streaming) but cores contend within the batch.
+    """
+
+    hw: HardwareConfig
+    core: MemorySystem
+
+    @staticmethod
+    def from_hardware(hw: HardwareConfig) -> "MultiCoreMemorySystem":
+        return MultiCoreMemorySystem(hw=hw, core=MemorySystem.from_hardware(hw))
+
+    @property
+    def policy(self) -> MemoryPolicy:
+        return self.core.policy
+
+    @property
+    def dram(self) -> DramModel:
+        return self.core.dram
+
+    def simulate_embedding(
+        self,
+        etrace: EmbeddingTrace,
+        pinned_lines: Optional[np.ndarray] = None,
+        allow_lane: bool = True,
+    ) -> List[EmbeddingBatchStats]:
         hw = self.hw
+        n = hw.num_cores
+        if n == 1 and hw.topology == Topology.PRIVATE:
+            # Degenerate cluster == today's single-core path, bit-exact.
+            return self.core.simulate_embedding(etrace, pinned_lines, allow_lane)
+
+        spec = etrace.spec
+        concat = etrace.concat
+        B = etrace.num_batches
         line = hw.onchip.line_bytes
         lpv = max(1, -(-spec.vector_bytes // line))
-        num_batches = etrace.num_batches
-        lookup_batch = etrace.lookup_batch
+        core_of = shard_lookup_cores(concat, n, hw.lookup_sharding.value)
+        lb = etrace.lookup_batch
+        core_lookups = np.bincount(
+            core_of.astype(np.int64) * B + lb, minlength=n * B
+        ).reshape(n, B)
+        total_lookups = np.maximum(core_lookups.sum(axis=0), 1)
 
-        lane = lane_geometry(hw, spec) if allow_lane else None
-        use_lane = lane is not None and self.policy.supports_lane_transform
-
-        if use_lane:
-            # Transparent transform: hand the policy the vector-granular
-            # stream under the lane sub-cache geometry; every access stands
-            # for ``lpv`` line accesses.
-            stream = etrace.vec_ids
-            ctx = PolicyContext(
-                geometry=lane,
-                capacity_units=hw.onchip.num_lines // lpv,
-                pinned_lines=pinned_lines,
+        if hw.topology == Topology.SHARED:
+            cs = self.core.classify_embedding(
+                etrace, pinned_lines, allow_lane,
+                lookup_index=np.arange(len(concat), dtype=np.int64),
             )
-            unit = lpv
-            acc_batch = lookup_batch
+            miss_core = core_of[cs.miss_pos // lpv].astype(np.int64)
+            merged = cs
+            core_reads = core_lookups * lpv
+            core_miss = np.bincount(
+                miss_core * B + cs.miss_batch, minlength=n * B
+            ).reshape(n, B)
         else:
-            at = etrace.address_trace(line)
-            stream = at.lines
-            ctx = PolicyContext.from_hardware(hw, pinned_lines)
-            unit = 1
-            acc_batch = np.repeat(lookup_batch, at.lines_per_vector)
+            shards = shard_trace(concat, n, hw.lookup_sharding.value, core_of=core_of)
+            core_reads = np.zeros((n, B), dtype=np.int64)
+            core_miss = np.zeros((n, B), dtype=np.int64)
+            hit_lines = np.zeros(B, dtype=np.int64)
+            miss_count = np.zeros(B, dtype=np.int64)
+            reads = np.zeros(B, dtype=np.int64)
+            setup = 0
+            m_lines, m_batch, m_pos, m_src = [], [], [], []
+            for shard in shards:
+                if len(shard) == 0:
+                    continue
+                et_c = EmbeddingTrace.from_concat(spec, shard.concat)
+                c_cs = self.core.classify_embedding(
+                    et_c, pinned_lines, allow_lane, lookup_index=shard.lookup_index
+                )
+                core_reads[shard.core_id] = c_cs.reads
+                core_miss[shard.core_id] = c_cs.miss_count
+                hit_lines += c_cs.hit_lines
+                miss_count += c_cs.miss_count
+                reads += c_cs.reads
+                setup += c_cs.setup_writes
+                m_lines.append(c_cs.miss_lines)
+                m_batch.append(c_cs.miss_batch)
+                m_pos.append(c_cs.miss_pos)
+                m_src.append(
+                    np.full(c_cs.miss_lines.size, shard.core_id, dtype=np.int64)
+                )
+            all_lines, all_batch, all_pos, miss_core = _merge_miss_streams(
+                m_lines, m_batch, m_pos, m_src
+            )
+            merged = ClassifiedStream(
+                num_batches=B,
+                hit_lines=hit_lines,
+                miss_count=miss_count,
+                reads=reads,
+                setup_writes=setup,
+                miss_lines=all_lines,
+                miss_batch=all_batch,
+                miss_pos=all_pos,
+            )
 
-        out = self.policy.run(stream, ctx)
-        hits = out.hits
-        misses = ~hits
+        drams, core_finish = dram_timing_contended(
+            merged.miss_lines, merged.miss_batch, miss_core, B, n, self.dram
+        )
 
-        # Shared accounting contract, per batch: reads = every consumed line,
-        # writes = fills/stages (+ one-time setup on batch 0), offchip = miss
-        # fetches. ``unit`` scales vector-granular counts back to lines.
-        hit_lines = np.bincount(acc_batch[hits], minlength=num_batches) * unit
-        miss_lines_ct = np.bincount(acc_batch[misses], minlength=num_batches) * unit
-        onchip_reads = np.bincount(acc_batch, minlength=num_batches) * unit
-
-        # Expand misses to line addresses for DRAM timing.
-        if use_lane:
-            miss_base = (
-                etrace.concat.table_ids.astype(np.int64)[misses] * spec.table_bytes
-                + etrace.concat.row_ids[misses] * spec.vector_bytes
-            ) // line
-            miss_lines = (miss_base[:, None] + np.arange(unit)[None, :]).reshape(-1)
-            miss_batch = np.repeat(acc_batch[misses], unit)
-        else:
-            miss_lines = out.miss_lines
-            miss_batch = acc_batch[misses]
-
-        drams = dram_timing_segmented(miss_lines, miss_batch, num_batches, self.dram)
-
+        # Counts/DRAM fields follow the single-core accounting contract
+        # verbatim; only the cycle model (slowest core bounds the batch) and
+        # the per-core detail are cluster-specific overrides below.
+        stats = self.core._assemble_stats(etrace, merged, drams)
         onchip_bw = max(hw.onchip.read_bw_bytes_per_cycle, 1)
-        stats: List[EmbeddingBatchStats] = []
-        for b in range(num_batches):
-            s = EmbeddingBatchStats()
-            d = drams[b]
-            s.dram_cycles = d.finish_cycle
-            s.dram_row_hits = d.row_hits
-            s.dram_row_misses = d.row_misses
-            s.onchip_reads = int(onchip_reads[b])
-            s.onchip_writes = int(miss_lines_ct[b]) + (out.setup_writes if b == 0 else 0)
-            s.offchip_reads = int(miss_lines_ct[b])
-            s.cache_hits = int(hit_lines[b])
-            s.cache_misses = int(miss_lines_ct[b])
-            s.onchip_cycles = s.onchip_reads * line / onchip_bw + hw.onchip.latency_cycles
-            s.vector_cycles = _vector_compute_cycles(
-                spec, etrace.concat.batch_sizes[b], hw
-            )
-            # on-chip service, off-chip service and pooling overlap in a
-            # double-buffered stream; the slowest stage bounds the batch.
+        lat = hw.onchip.latency_cycles
+        for b, s in enumerate(stats):
+            full_vector = s.vector_cycles
+            per_core: List[CoreBatchStats] = []
+            for c in range(n):
+                if hw.topology == Topology.SHARED:
+                    # One LLC port streams every core's lines.
+                    oc = int(merged.reads[b]) * line / onchip_bw + lat
+                else:
+                    oc = int(core_reads[c, b]) * line / onchip_bw + lat
+                vc = full_vector * core_lookups[c, b] / total_lookups[b]
+                per_core.append(CoreBatchStats(
+                    core_id=c,
+                    lookups=int(core_lookups[c, b]),
+                    onchip_reads=int(core_reads[c, b]),
+                    cache_misses=int(core_miss[c, b]),
+                    onchip_cycles=oc,
+                    vector_cycles=vc,
+                    dram_finish_cycles=float(core_finish[b, c]),
+                ))
+            s.onchip_cycles = max(pc.onchip_cycles for pc in per_core)
+            s.vector_cycles = max(pc.vector_cycles for pc in per_core)
+            s.per_core = per_core
             s.cycles = max(s.onchip_cycles, s.dram_cycles, s.vector_cycles)
-            stats.append(s)
         return stats
+
+
+def memory_system_for(
+    hw: HardwareConfig,
+) -> Union[MemorySystem, MultiCoreMemorySystem]:
+    """The memory pipeline for a hardware config: plain single-core
+    ``MemorySystem`` for the degenerate cluster, ``MultiCoreMemorySystem``
+    otherwise. Both expose the same ``simulate_embedding`` surface."""
+    if hw.num_cores == 1 and hw.topology == Topology.PRIVATE:
+        return MemorySystem.from_hardware(hw)
+    return MultiCoreMemorySystem.from_hardware(hw)

@@ -45,6 +45,8 @@ class SimResult:
     batches: List[BatchResult] = field(default_factory=list)
     energy_pj: float = 0.0
     clock_ghz: float = 1.0
+    num_cores: int = 1
+    topology: str = "private"
 
     # ---- aggregates -------------------------------------------------------
     @property
@@ -97,6 +99,8 @@ class SimResult:
             "workload": self.workload,
             "hardware": self.hardware,
             "policy": self.policy,
+            "num_cores": self.num_cores,
+            "topology": self.topology,
             "total_cycles": self.total_cycles,
             "total_seconds": self.total_seconds,
             "embedding_cycles": self.embedding_cycles,

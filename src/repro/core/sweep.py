@@ -20,6 +20,16 @@ one pass while staying **bit-exact** with independent ``simulate()`` calls
     of two and the segmented DRAM scan pads (segment, channel) slots the same
     way, so JAX jit caches are shared across grid points with the same
     (ways, policy) shape signature instead of recompiling per config.
+  * **Vmapped scan batching** — all distinct single-core grid points of one
+    cache-engine policy classify through ``simulate_embedding_many``: their
+    set-group sub-scans are bucketed by padded shape and each bucket runs as
+    ONE vmapped dispatch instead of one dispatch per (config, group)
+    (``batch_scans=False`` falls back to per-config scans; results are
+    bit-exact either way).
+
+The grid also spans the CoreCluster axes: ``num_cores`` and ``topologies``
+(private per-core on-chip vs shared LLC) sweep through the multi-core
+MemorySystem with shared-DRAM contention.
 
 Typical use (the paper's Fig. 4 case study is one call — see
 ``examples/fig4_sweep.py``)::
@@ -49,9 +59,13 @@ from .engine import (
     build_embedding_traces,
     summarize_matrix_ops,
 )
-from .hardware import HardwareConfig, OnChipPolicy, tpuv6e
+from .hardware import HardwareConfig, OnChipPolicy, Topology, tpuv6e
 from .memory.policies import available_policies
-from .memory.system import MemorySystem
+from .memory.system import (
+    MemorySystem,
+    memory_system_for,
+    simulate_embedding_many,
+)
 from .results import SimResult
 from .workload import Workload
 
@@ -67,11 +81,16 @@ class SweepConfig:
     ways: int
     workload: str
     zipf_s: float
+    num_cores: int = 1
+    topology: str = "private"
 
     @property
     def label(self) -> str:
         cap_mb = self.capacity_bytes / (1 << 20)
-        return f"{self.workload}/{self.policy}/{cap_mb:g}MB/{self.ways}w/z{self.zipf_s:g}"
+        base = f"{self.workload}/{self.policy}/{cap_mb:g}MB/{self.ways}w/z{self.zipf_s:g}"
+        if self.num_cores != 1 or self.topology != "private":
+            base += f"/{self.num_cores}c-{self.topology}"
+        return base
 
 
 @dataclass
@@ -112,13 +131,13 @@ class SweepResult:
         for e in self.entries:
             c = e.config
             if c.policy == baseline_policy:
-                base[(c.workload, c.capacity_bytes, c.ways, c.zipf_s)] = (
-                    e.result.total_cycles
-                )
+                base[(c.workload, c.capacity_bytes, c.ways, c.zipf_s,
+                      c.num_cores, c.topology)] = e.result.total_cycles
         out = []
         for e in self.entries:
             c = e.config
-            ref = base.get((c.workload, c.capacity_bytes, c.ways, c.zipf_s))
+            ref = base.get((c.workload, c.capacity_bytes, c.ways, c.zipf_s,
+                            c.num_cores, c.topology))
             if ref is None:
                 continue
             r = e.row()
@@ -157,13 +176,17 @@ def sweep(
     seed: int = 0,
     index_trace: Optional[np.ndarray] = None,
     energy_table: EnergyTable = EnergyTable(),
+    num_cores: Optional[Sequence[int]] = None,
+    topologies: Optional[Sequence[Union[str, Topology]]] = None,
+    batch_scans: bool = True,
 ) -> SweepResult:
-    """Evaluate the full (workload x zipf x policy x capacity x ways) grid.
+    """Evaluate the (workload x zipf x policy x capacity x ways x num_cores
+    x topology) grid.
 
     Every grid point's ``SimResult`` is bit-exact against
     ``simulate(workload, base_hw.with_policy(policy, capacity_bytes=...,
-    ways=...), seed=seed, zipf_s=z)`` — the sweep only removes redundant
-    work, never changes the model.
+    ways=...).with_cluster(num_cores, topology), seed=seed, zipf_s=z)`` — the
+    sweep only removes redundant work, never changes the model.
     """
     base_hw = base_hw or tpuv6e()
     wls = _as_tuple(workloads, ())
@@ -179,6 +202,10 @@ def sweep(
     caps = _as_tuple(capacities, (base_hw.onchip.capacity_bytes,))
     ways_t = _as_tuple(ways, (base_hw.onchip.ways,))
     zipfs = _as_tuple(zipf_s, (0.8,))
+    cores_t = tuple(int(c) for c in _as_tuple(num_cores, (base_hw.num_cores,)))
+    topo_t = tuple(
+        Topology(t).value for t in _as_tuple(topologies, (base_hw.topology.value,))
+    )
 
     t0 = time.perf_counter()
     out = SweepResult()
@@ -187,24 +214,66 @@ def sweep(
         matrix = summarize_matrix_ops(wl, base_hw)
         for z in zipfs:
             # Traces depend only on (workload, seed, zipf) — shared across
-            # every (policy, capacity, ways) point below.
+            # every grid point below.
             etraces = build_embedding_traces(wl, index_trace, seed, z)
             # Grid points that agree on every parameter the policy actually
-            # reads (MemoryPolicy.sensitive_params) produce byte-identical
-            # embedding stats — e.g. SPM is capacity/ways-invariant, PINNING
-            # ways-invariant — so classification + DRAM run once per key.
+            # reads (MemoryPolicy.sensitive_params) plus the cluster shape
+            # produce byte-identical embedding stats — e.g. single-core SPM
+            # is capacity/ways-invariant, PINNING ways-invariant — so
+            # classification + DRAM run once per key.
             stats_memo: Dict[tuple, list] = {}
-            for pol, cap, w in itertools.product(pol_names, caps, ways_t):
-                hw = base_hw.with_policy(OnChipPolicy(pol), capacity_bytes=cap, ways=w)
-                ms = MemorySystem.from_hardware(hw)
-                key = (pol,) + tuple(
-                    getattr(hw.onchip, p) for p in ms.policy.sensitive_params
+            grid = []
+            pending: Dict[tuple, object] = {}   # key -> memory system
+            for pol, cap, w, nc, topo in itertools.product(
+                pol_names, caps, ways_t, cores_t, topo_t
+            ):
+                hw = base_hw.with_policy(
+                    OnChipPolicy(pol), capacity_bytes=cap, ways=w
+                ).with_cluster(nc, topo)
+                ms = memory_system_for(hw)
+                key = (pol, nc, topo, hw.lookup_sharding.value, hw.onchip.policy_mix)
+                key += tuple(getattr(hw.onchip, p) for p in ms.policy.sensitive_params)
+                if hw.onchip.policy_mix:
+                    # Mix groups may read parameters the default policy does
+                    # not (e.g. pinned tables under an SPM default).
+                    key += (cap, w)
+                grid.append((pol, cap, w, nc, topo, hw, key))
+                if key not in stats_memo and key not in pending:
+                    pending[key] = ms
+
+            # Batched classification: distinct single-core cache-engine keys
+            # of ONE policy share a vmapped dispatch per scan shape
+            # (simulate_embedding_many); everything else runs per key.
+            by_policy: Dict[str, list] = {}
+            for key, ms in pending.items():
+                if (
+                    batch_scans
+                    and isinstance(ms, MemorySystem)
+                    and ms.policy.uses_cache_engine
+                    and not ms.hw.onchip.policy_mix
+                ):
+                    by_policy.setdefault(ms.policy.name, []).append((key, ms))
+            for batch in by_policy.values():
+                if len(batch) < 2:
+                    continue
+                keys = [k for k, _ in batch]
+                systems = [m for _, m in batch]
+                per_key = [[] for _ in systems]
+                for et in etraces:
+                    for i, stats in enumerate(
+                        simulate_embedding_many(systems, et)
+                    ):
+                        per_key[i].append(stats)
+                for k, stats in zip(keys, per_key):
+                    stats_memo[k] = stats
+                    del pending[k]
+            for key, ms in pending.items():
+                stats_memo[key] = [ms.simulate_embedding(et) for et in etraces]
+
+            for pol, cap, w, nc, topo, hw, key in grid:
+                res = assemble_result(
+                    wl, hw, matrix, stats_memo[key], energy_table
                 )
-                per_spec_stats = stats_memo.get(key)
-                if per_spec_stats is None:
-                    per_spec_stats = [ms.simulate_embedding(et) for et in etraces]
-                    stats_memo[key] = per_spec_stats
-                res = assemble_result(wl, hw, matrix, per_spec_stats, energy_table)
                 out.entries.append(SweepEntry(
                     config=SweepConfig(
                         policy=pol,
@@ -212,6 +281,8 @@ def sweep(
                         ways=w,
                         workload=wl.name,
                         zipf_s=z,
+                        num_cores=nc,
+                        topology=topo,
                     ),
                     result=res,
                 ))

@@ -202,6 +202,100 @@ class ConcatTrace:
 
 
 # --------------------------------------------------------------------------
+# Per-core trace sharding (multi-core CoreCluster topology)
+# --------------------------------------------------------------------------
+
+# Knuth multiplicative hash constant — decorrelates the table->core mapping
+# from table-id parity/stride patterns while staying fully deterministic.
+_TABLE_HASH_MULT = 2654435761
+
+
+def table_core_of(table_ids: np.ndarray, num_cores: int) -> np.ndarray:
+    """Deterministic table_id -> core hash (model-parallel table sharding)."""
+    t = np.asarray(table_ids, dtype=np.uint64)
+    return (((t * np.uint64(_TABLE_HASH_MULT)) >> np.uint64(16))
+            % np.uint64(num_cores)).astype(np.int32)
+
+
+def shard_lookup_cores(
+    concat: ConcatTrace, num_cores: int, mode: str = "batch"
+) -> np.ndarray:
+    """int32 (N,) core id per lookup — deterministic in (trace, num_cores, mode).
+
+    ``batch``       round-robin over batch *samples*: sample s of every batch
+                    runs on core ``s % num_cores`` (data-parallel inference,
+                    each core pools full samples).
+    ``table_hash``  hash of ``table_id`` -> core: each embedding table lives
+                    on exactly one core (model-parallel table sharding, the
+                    TensorDIMM/RecNMP placement for giant tables).
+    """
+    if num_cores < 1:
+        raise ValueError(f"num_cores must be >= 1, got {num_cores}")
+    n = len(concat)
+    if num_cores == 1:
+        return np.zeros(n, dtype=np.int32)
+    if mode == "batch":
+        per_sample = concat.num_tables * concat.lookups_per_sample
+        starts = np.repeat(concat.boundaries[:-1], concat.lookups_per_batch)
+        pos_in_batch = np.arange(n, dtype=np.int64) - starts
+        sample = pos_in_batch // max(per_sample, 1)
+        return (sample % num_cores).astype(np.int32)
+    if mode == "table_hash":
+        return table_core_of(concat.table_ids, num_cores)
+    raise ValueError(f"unknown sharding mode {mode!r}; options: batch, table_hash")
+
+
+@dataclass(frozen=True)
+class TraceShard:
+    """One core's slice of a ConcatTrace, with true per-batch boundaries.
+
+    ``lookup_index`` maps each shard lookup back to its global position in the
+    parent trace — the key to deterministic cross-core interleaving when the
+    cores' miss bursts are merged for shared-DRAM timing.
+    """
+
+    core_id: int
+    concat: ConcatTrace
+    lookup_index: np.ndarray     # int64 (n_i,) global lookup positions
+
+    def __len__(self) -> int:
+        return len(self.concat)
+
+
+def shard_trace(
+    concat: ConcatTrace,
+    num_cores: int,
+    mode: str = "batch",
+    core_of: Optional[np.ndarray] = None,
+) -> "list[TraceShard]":
+    """Partition a ConcatTrace into ``num_cores`` per-core shards.
+
+    Each shard preserves the parent's per-batch structure: shard batch b holds
+    exactly the core's lookups from parent batch b, in parent order, so
+    heterogeneous per-batch lengths survive sharding and per-core per-batch
+    attribution stays exact. Shards may be empty (e.g. table_hash with fewer
+    tables than cores). ``core_of`` lets a caller that already computed
+    ``shard_lookup_cores`` reuse it.
+    """
+    core = core_of if core_of is not None else shard_lookup_cores(concat, num_cores, mode)
+    lb = concat.lookup_batch
+    shards = []
+    for c in range(num_cores):
+        idx = np.nonzero(core == c)[0].astype(np.int64)
+        counts = np.bincount(lb[idx], minlength=concat.num_batches)
+        sub = ConcatTrace(
+            table_ids=concat.table_ids[idx],
+            row_ids=concat.row_ids[idx],
+            boundaries=np.concatenate(([0], np.cumsum(counts))),
+            batch_sizes=concat.batch_sizes,
+            num_tables=concat.num_tables,
+            lookups_per_sample=concat.lookups_per_sample,
+        )
+        shards.append(TraceShard(core_id=c, concat=sub, lookup_index=idx))
+    return shards
+
+
+# --------------------------------------------------------------------------
 # Address translation: index trace -> line-address trace
 # --------------------------------------------------------------------------
 

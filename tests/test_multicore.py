@@ -1,0 +1,318 @@
+"""Multi-core CoreCluster MemorySystem: degenerate bit-exactness, per-core
+trace-sharding conservation laws (property-tested), shared-DRAM contention,
+per-table policy mixes, sweep axes, and config validation."""
+import dataclasses
+
+import numpy as np
+import pytest
+
+from _hypothesis_compat import given, st
+from repro.core import (
+    LookupSharding,
+    MemorySystem,
+    MultiCoreMemorySystem,
+    OnChipPolicy,
+    Topology,
+    available_policies,
+    dlrm_rmc2_small,
+    memory_system_for,
+    simulate,
+    sweep,
+    tpuv6e,
+)
+from repro.core.engine import build_embedding_traces
+from repro.core.memory.dram import (
+    DramModel,
+    dram_timing_segmented,
+    simulate_dram_contended,
+)
+from repro.core.memory.system import EmbeddingTrace
+from repro.core.trace import (
+    expand_trace,
+    generate_zipf_trace,
+    shard_lookup_cores,
+    shard_trace,
+    table_core_of,
+)
+from repro.core.workload import EmbeddingOpSpec
+
+
+def _etrace(spec, batch_sizes, seed=0):
+    traces = []
+    for bi, bsz in enumerate(batch_sizes):
+        it = generate_zipf_trace(
+            bsz * spec.num_tables * spec.lookups_per_sample,
+            spec.rows_per_table, 1.0, seed=seed + bi)
+        traces.append(expand_trace(it, spec, bsz, seed=seed + bi))
+    return EmbeddingTrace(spec, traces)
+
+
+_SPEC = EmbeddingOpSpec(num_tables=3, rows_per_table=3000, dim=128,
+                        lookups_per_sample=6, dtype_bytes=4)
+
+
+# --------------------------------------------------------------------------
+# Acceptance: num_cores=1 / private is bit-exact vs the single-core path
+# --------------------------------------------------------------------------
+
+@pytest.mark.parametrize("policy", sorted(available_policies()))
+def test_degenerate_cluster_bitexact_per_policy(policy):
+    hw = tpuv6e().with_policy(OnChipPolicy(policy), capacity_bytes=1 << 18)
+    assert hw.num_cores == 1 and hw.topology == Topology.PRIVATE
+    et = _etrace(_SPEC, [8, 8])
+    single = MemorySystem.from_hardware(hw).simulate_embedding(et)
+    multi = MultiCoreMemorySystem.from_hardware(hw).simulate_embedding(et)
+    for a, b in zip(single, multi):
+        assert dataclasses.asdict(a) == dataclasses.asdict(b)
+    # and the factory picks the plain single-core pipeline
+    assert isinstance(memory_system_for(hw), MemorySystem)
+
+
+@pytest.mark.parametrize("policy", sorted(available_policies()))
+def test_degenerate_cluster_bitexact_full_simulate(policy):
+    wl = dlrm_rmc2_small(num_tables=2, rows_per_table=2000, dim=128,
+                         lookups=4, batch_size=8, num_batches=2)
+    hw = tpuv6e().with_policy(OnChipPolicy(policy), capacity_bytes=1 << 17)
+    ref = simulate(wl, hw, seed=0, zipf_s=1.0)
+    got = simulate(wl, hw.with_cluster(1, "private"), seed=0, zipf_s=1.0)
+    assert not got.diff(ref)
+
+
+# --------------------------------------------------------------------------
+# Sharding conservation laws (property tests, hypothesis-compatible)
+# --------------------------------------------------------------------------
+
+@given(num_cores=st.integers(1, 8), mode=st.sampled_from(["batch", "table_hash"]))
+def test_sharding_conserves_lookups_per_batch(num_cores, mode):
+    """Shard lookup counts sum to the parent's per-batch counts — for every
+    core count, sharding mode, and heterogeneous batch boundaries."""
+    et = _etrace(_SPEC, [5, 11, 2], seed=3)
+    concat = et.concat
+    shards = shard_trace(concat, num_cores, mode)
+    assert len(shards) == num_cores
+    per_batch = np.zeros(concat.num_batches, dtype=np.int64)
+    n_total = 0
+    for sh in shards:
+        assert sh.concat.num_batches == concat.num_batches
+        per_batch += sh.concat.lookups_per_batch
+        n_total += len(sh)
+        # shard boundaries are consistent with its own content
+        assert len(sh.concat) == sh.concat.boundaries[-1]
+        # global positions round-trip to the parent's lookups
+        assert np.array_equal(concat.table_ids[sh.lookup_index], sh.concat.table_ids)
+        assert np.array_equal(concat.row_ids[sh.lookup_index], sh.concat.row_ids)
+    assert n_total == len(concat)
+    assert np.array_equal(per_batch, concat.lookups_per_batch)
+
+
+@given(num_cores=st.integers(1, 8))
+def test_table_hash_sharding_is_table_exclusive(num_cores):
+    """table_hash mode places each table on exactly one core."""
+    et = _etrace(_SPEC, [7, 4], seed=5)
+    core = shard_lookup_cores(et.concat, num_cores, "table_hash")
+    expect = table_core_of(et.concat.table_ids, num_cores)
+    assert np.array_equal(core, expect)
+    for t in range(_SPEC.num_tables):
+        owners = np.unique(core[et.concat.table_ids == t])
+        assert owners.size <= 1
+
+
+@given(num_cores=st.integers(2, 6),
+       mode=st.sampled_from(["batch", "table_hash"]),
+       policy=st.sampled_from(["spm", "lru", "pinning"]))
+def test_multicore_conserves_accesses(num_cores, mode, policy):
+    """Total line accesses (hits + misses) are invariant under the core
+    count, topology, and sharding mode — sharding only partitions work."""
+    hw1 = tpuv6e().with_policy(OnChipPolicy(policy), capacity_bytes=1 << 17)
+    et = _etrace(_SPEC, [6, 9], seed=1)
+    ref = MemorySystem.from_hardware(hw1).simulate_embedding(et)
+    ref_acc = [s.cache_hits + s.cache_misses for s in ref]
+    for topo in ("private", "shared"):
+        hw = hw1.with_cluster(num_cores, topo, mode)
+        got = memory_system_for(hw).simulate_embedding(et)
+        assert [s.cache_hits + s.cache_misses for s in got] == ref_acc, (topo,)
+        assert [s.onchip_reads for s in got] == [s.onchip_reads for s in ref]
+
+
+def test_heterogeneous_batches_survive_sharding_in_stats():
+    """Per-core per-batch attribution follows the true (heterogeneous)
+    boundaries: aggregated SPM counts per batch stay analytic."""
+    batch_sizes = [5, 11, 2]
+    et = _etrace(_SPEC, batch_sizes)
+    lpv = _SPEC.vector_bytes // 64
+    hw = tpuv6e().with_cluster(3, "private", "batch")   # SPM default
+    stats = memory_system_for(hw).simulate_embedding(et)
+    for s, bsz in zip(stats, batch_sizes):
+        n_lines = bsz * _SPEC.num_tables * _SPEC.lookups_per_sample * lpv
+        assert s.onchip_reads == n_lines
+        assert s.offchip_reads == n_lines
+        assert s.cache_misses == n_lines and s.cache_hits == 0
+        assert sum(pc.lookups for pc in s.per_core) == (
+            bsz * _SPEC.num_tables * _SPEC.lookups_per_sample
+        )
+
+
+# --------------------------------------------------------------------------
+# Shared-DRAM contention
+# --------------------------------------------------------------------------
+
+def test_contended_dram_single_source_matches_segmented(rng):
+    dm = DramModel.from_hardware(tpuv6e())
+    lines = rng.integers(0, 200_000, size=6000)
+    seg = np.sort(rng.integers(0, 3, size=6000))
+    ref = dram_timing_segmented(lines, seg, 3, dm)
+    got, fin = simulate_dram_contended(
+        lines, seg, np.zeros(6000, dtype=np.int64), 3, 1, dm)
+    for s in range(3):
+        assert got[s].finish_cycle == ref[s].finish_cycle
+        assert got[s].row_hits == ref[s].row_hits
+        assert got[s].accesses == ref[s].accesses
+        assert fin[s, 0] == ref[s].finish_cycle
+
+
+def test_contention_delays_vs_private_dram(rng):
+    """A source sharing DRAM with another finishes no earlier than it would
+    alone, and the shared finish bounds every per-source finish."""
+    dm = DramModel.from_hardware(tpuv6e())
+    n = 8000
+    lines = rng.integers(0, 400_000, size=n)
+    seg = np.zeros(n, dtype=np.int64)
+    src = rng.integers(0, 2, size=n)
+    got, fin = simulate_dram_contended(lines, seg, src, 1, 2, dm)
+    for c in range(2):
+        alone = dram_timing_segmented(
+            lines[src == c], np.zeros(int((src == c).sum()), dtype=np.int64), 1, dm
+        )[0]
+        assert fin[0, c] >= alone.finish_cycle
+        assert fin[0, c] <= got[0].finish_cycle
+    assert got[0].finish_cycle == pytest.approx(fin[0].max())
+
+
+def test_multicore_dram_slower_than_fresh_per_core_sum():
+    """The cluster's per-batch DRAM time reflects contention: it is at least
+    the slowest core's stand-alone burst (fresh-state-per-core would be)."""
+    hw = tpuv6e().with_policy(OnChipPolicy.SPM).with_cluster(4, "private", "batch")
+    et = _etrace(_SPEC, [16])
+    stats = memory_system_for(hw).simulate_embedding(et)
+    s = stats[0]
+    slowest_core = max(pc.dram_finish_cycles for pc in s.per_core)
+    assert s.dram_cycles == pytest.approx(slowest_core)
+    # single-core run over the full stream == shared time for all-miss SPM
+    ref = MemorySystem.from_hardware(
+        tpuv6e().with_policy(OnChipPolicy.SPM)
+    ).simulate_embedding(et)
+    assert s.dram_cycles == ref[0].dram_cycles
+
+
+# --------------------------------------------------------------------------
+# Per-table policy mixes
+# --------------------------------------------------------------------------
+
+def test_degenerate_policy_mix_bitexact():
+    """A mix assigning every table the default policy classifies bit-exactly
+    like the unmixed path (fraction-1 partition is the identity)."""
+    for policy in ("lru", "spm", "pinning"):
+        hw = tpuv6e().with_policy(OnChipPolicy(policy), capacity_bytes=1 << 18)
+        hwm = hw.with_policy_mix({t: policy for t in range(_SPEC.num_tables)})
+        et = _etrace(_SPEC, [8, 8])
+        a = MemorySystem.from_hardware(hw).simulate_embedding(et)
+        b = MemorySystem.from_hardware(hwm).simulate_embedding(et)
+        for x, y in zip(a, b):
+            assert dataclasses.asdict(x) == dataclasses.asdict(y), policy
+
+
+def test_policy_mix_pinned_hot_cached_cold():
+    """Hot table pinned + cold tables cached: runs under both topologies,
+    conserves accesses, and the pinned table actually hits on-chip."""
+    hw = (
+        tpuv6e()
+        .with_policy(OnChipPolicy.LRU, capacity_bytes=1 << 18)
+        .with_policy_mix({0: "pinning"})
+    )
+    et = _etrace(_SPEC, [8, 8])
+    mixed = MemorySystem.from_hardware(hw).simulate_embedding(et)
+    plain = MemorySystem.from_hardware(
+        hw.with_policy_mix(None)
+    ).simulate_embedding(et)
+    tot = lambda stats: sum(s.cache_hits + s.cache_misses for s in stats)
+    assert tot(mixed) == tot(plain)
+    assert sum(s.cache_hits for s in mixed) > 0
+    # pinned preload shows up as batch-0 setup writes
+    assert mixed[0].onchip_writes > mixed[0].cache_misses
+    # multi-core: the mix rides along inside each core's pipeline
+    multi = memory_system_for(hw.with_cluster(2, "private")).simulate_embedding(et)
+    assert tot(multi) == tot(plain)
+
+
+def test_policy_mix_validation():
+    from repro.core.memory.policies import resolve_policy_mix
+
+    hw = tpuv6e()
+    with pytest.raises(ValueError, match="duplicate"):
+        # dict keys cannot collide, so exercise the normalized-tuple check
+        resolve_policy_mix(((0, "lru"), (0, "spm")), "spm", 2)
+    with pytest.raises(ValueError, match="out of range"):
+        simulate(
+            dlrm_rmc2_small(num_tables=2, rows_per_table=500, lookups=2,
+                            batch_size=4),
+            hw.with_policy_mix({7: "lru"}),
+        )
+
+
+# --------------------------------------------------------------------------
+# Sweepable cluster axes
+# --------------------------------------------------------------------------
+
+def test_sweep_cluster_axes_bitexact():
+    wl = dlrm_rmc2_small(num_tables=2, rows_per_table=1500, dim=128,
+                         lookups=3, batch_size=6, num_batches=2)
+    sr = sweep(wl, tpuv6e(), policies=("spm", "lru"), capacities=(1 << 16,),
+               ways=(4,), zipf_s=0.9, seed=0,
+               num_cores=(1, 2), topologies=("private", "shared"))
+    assert sr.num_configs == 2 * 1 * 1 * 2 * 2
+    assert {(e.config.num_cores, e.config.topology) for e in sr.entries} == {
+        (1, "private"), (1, "shared"), (2, "private"), (2, "shared")}
+    for e in sr.entries:
+        c = e.config
+        hw = tpuv6e().with_policy(
+            OnChipPolicy(c.policy), capacity_bytes=c.capacity_bytes, ways=c.ways
+        ).with_cluster(c.num_cores, c.topology)
+        ref = simulate(wl, hw, seed=0, zipf_s=c.zipf_s)
+        assert not e.result.diff(ref), (c.label, e.result.diff(ref))
+
+
+def test_sweep_batched_scans_bitexact_vs_unbatched():
+    wl = dlrm_rmc2_small(num_tables=2, rows_per_table=1500, dim=128,
+                         lookups=3, batch_size=6, num_batches=2)
+    kw = dict(policies=("lru", "srrip"), capacities=(1 << 16, 1 << 17, 1 << 18),
+              ways=(4, 8), zipf_s=0.9, seed=0)
+    a = sweep(wl, tpuv6e(), batch_scans=True, **kw)
+    b = sweep(wl, tpuv6e(), batch_scans=False, **kw)
+    assert a.num_configs == b.num_configs == 12
+    for ea, eb in zip(a.entries, b.entries):
+        assert ea.config == eb.config
+        assert not ea.result.diff(eb.result), ea.config.label
+
+
+# --------------------------------------------------------------------------
+# Config validation (with_onchip / with_policy / with_cluster)
+# --------------------------------------------------------------------------
+
+def test_with_onchip_rejects_unknown_kwargs():
+    with pytest.raises(ValueError, match="unknown OnChipMemory parameter"):
+        tpuv6e().with_onchip(capacty_bytes=1 << 20)   # typo'd key
+    with pytest.raises(ValueError, match="HardwareConfig fields"):
+        tpuv6e().with_onchip(num_cores=4)             # misplaced cluster knob
+    with pytest.raises(ValueError, match="unknown OnChipMemory parameter"):
+        tpuv6e().with_policy(OnChipPolicy.LRU, way=8)
+
+
+def test_with_cluster_validation():
+    hw = tpuv6e().with_cluster(4, "shared", "table_hash")
+    assert hw.num_cores == 4
+    assert hw.topology == Topology.SHARED
+    assert hw.lookup_sharding == LookupSharding.TABLE_HASH
+    with pytest.raises(ValueError):
+        tpuv6e().with_cluster(0)
+    with pytest.raises(ValueError):
+        tpuv6e().with_cluster(2, "ring")
