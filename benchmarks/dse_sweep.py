@@ -7,6 +7,11 @@ re-times the sweep with ``batch_scans=False`` to isolate the vmapped
 same-policy scan-batching win. Emits one ``kind=perf`` record (saved as
 BENCH_sweep.json by run.py, or by running this module directly) plus one row
 per grid point.
+
+``--profile`` re-times the sweep inside a stage-profiling session
+(``repro.core.profiling``) and adds a per-stage wall-time breakdown to the
+perf record — trace gen / classify / cache scan / DRAM / host sync — so the
+next perf PR starts from data instead of guesses.
 """
 from __future__ import annotations
 
@@ -14,6 +19,7 @@ import time
 from typing import Dict, List
 
 from repro.core import OnChipPolicy, dlrm_rmc2_small, simulate, sweep, tpuv6e
+from repro.core import profiling
 
 TABLES, ROWS, BATCH = 4, 100_000, 48
 POLICIES = ("spm", "lru", "srrip", "pinning")
@@ -23,7 +29,7 @@ ZIPF = 1.0
 N_INDEPENDENT_SAMPLE = 6
 
 
-def run() -> List[Dict]:
+def run(profile: bool = False) -> List[Dict]:
     wl = dlrm_rmc2_small(num_tables=TABLES, rows_per_table=ROWS, batch_size=BATCH,
                          num_batches=2)
     base_hw = tpuv6e()
@@ -32,8 +38,19 @@ def run() -> List[Dict]:
     # (the regime a DSE study with hundreds of points actually lives in).
     sweep(wl, base_hw, policies=POLICIES, capacities=CAPACITIES, ways=WAYS,
           zipf_s=ZIPF, seed=0)
-    sr = sweep(wl, base_hw, policies=POLICIES, capacities=CAPACITIES, ways=WAYS,
-               zipf_s=ZIPF, seed=0)
+    sr = sweep(wl, base_hw, policies=POLICIES, capacities=CAPACITIES,
+               ways=WAYS, zipf_s=ZIPF, seed=0)
+    prof = None
+    if profile:
+        # Separate profiled pass: an active session adds per-stage
+        # synchronization (block_until_ready inside the compute stages), so
+        # the headline per_config_ms above measures the production path and
+        # the breakdown below attributes a dedicated run.
+        with profiling.collect() as prof:
+            t_prof = time.perf_counter()
+            sweep(wl, base_hw, policies=POLICIES, capacities=CAPACITIES,
+                  ways=WAYS, zipf_s=ZIPF, seed=0)
+            profiled_wall = time.perf_counter() - t_prof
 
     # Same grid with per-config scans (no vmapped batching): isolates the
     # batched-classification speedup from trace/matrix sharing.
@@ -56,7 +73,7 @@ def run() -> List[Dict]:
     est_independent_s = t_indep / len(sample) * sr.num_configs
 
     best = sr.best("total_cycles")
-    rows: List[Dict] = [{
+    perf_row: Dict = {
         "kind": "perf",
         "configs": sr.num_configs,
         "sweep_s": sr.wall_seconds,
@@ -68,7 +85,14 @@ def run() -> List[Dict]:
         "bitexact_sample": len(sample),
         "best_config": best.config.label,
         "best_total_cycles": best.result.total_cycles,
-    }]
+    }
+    if profile:
+        breakdown = prof.breakdown(total_seconds=profiled_wall)
+        perf_row["stage_seconds"] = {k: round(v, 4) for k, v in breakdown.items()}
+        perf_row["stage_ms_per_config"] = {
+            k: round(v / sr.num_configs * 1e3, 3) for k, v in breakdown.items()
+        }
+    rows: List[Dict] = [perf_row]
     rows.extend(
         {"kind": "config", **r} for r in sr.speedup_over("spm")
     )
@@ -76,12 +100,23 @@ def run() -> List[Dict]:
 
 
 if __name__ == "__main__":
+    import argparse
+
     from benchmarks import common
 
-    bench_rows = run()
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--profile", action="store_true",
+                    help="add a per-stage wall-time breakdown to the perf row")
+    args = ap.parse_args()
+
+    bench_rows = run(profile=args.profile)
     path = common.save_rows("BENCH_sweep", bench_rows)
     perf = next(r for r in bench_rows if r["kind"] == "perf")
     print(f"saved {path}")
     print(f"configs={perf['configs']} sweep_s={perf['sweep_s']:.2f} "
+          f"per_config_ms={perf['per_config_ms']:.1f} "
           f"speedup_vs_independent={perf['speedup_vs_independent']:.2f} "
           f"batched_scan_speedup={perf['batched_scan_speedup']:.2f}")
+    if args.profile:
+        for k, v in perf["stage_ms_per_config"].items():
+            print(f"  stage {k:<12s} {v:8.2f} ms/config")

@@ -3,6 +3,12 @@
 Wall times on CPU interpret mode are NOT TPU projections — the deliverable is
 the op inventory + achieved-FLOP accounting; TPU-side performance is covered
 by the roofline analysis of the lowered programs.
+
+``run_cache_scan()`` benchmarks the simulator's own hot loop — the set-
+associative cache scan — across its three implementations (vmapped lax.scan
+engine, Pallas kernel in interpret mode, sequential GoldenCache) in
+accesses/second; saved as BENCH_cache_kernel.json and uploaded with the CI
+artifacts.
 """
 from __future__ import annotations
 
@@ -66,3 +72,74 @@ def run() -> List[Dict]:
     rows.append({"kernel": "mamba2_ssd", "variant": "pallas-interpret",
                  "us": _t(ops.mamba2_ssd, x, adt, dt, Bm, C, use_pallas=True, repeat=1)})
     return rows
+
+
+def run_cache_scan() -> List[Dict]:
+    """Cache-scan engine microbenchmark (acc/s): lax.scan vs Pallas vs golden.
+
+    The lax.scan variant is measured in the regime the DSE sweep actually
+    runs: a *batch* of independent streams whose set-group sub-scans fuse
+    into vmapped dispatches (``simulate_cache_many``). The Pallas variant
+    runs in interpret mode off-TPU (every access executes as Python), so its
+    acc/s is a correctness-path datapoint, not a TPU projection; the golden
+    Python model is the sequential reference everything must agree with.
+    """
+    from repro.core.memory.cache import CacheGeometry, simulate_cache_many
+    from repro.core.memory.golden import GoldenCache
+
+    rng = np.random.default_rng(0)
+    geom = CacheGeometry(num_sets=512, ways=8, line_bytes=64)
+    n_streams, n_scan = 8, 32768     # sweep-like: many configs, one dispatch
+    n_pallas = 2048                  # interpret mode walks accesses in Python
+    streams = [rng.integers(0, 40_000, size=n_scan).astype(np.int64)
+               for _ in range(n_streams)]
+    geoms = [geom] * n_streams
+
+    rows: List[Dict] = []
+    for policy in ("lru", "srrip", "fifo"):
+        simulate_cache_many(streams, geoms, policy, backend="scan")  # compile
+        t0 = time.time()
+        res_scan = simulate_cache_many(streams, geoms, policy, backend="scan")
+        dt_scan = time.time() - t0
+        total = n_streams * n_scan
+        rows.append({
+            "kernel": "cache_scan", "variant": "lax-scan-batched",
+            "policy": policy, "accesses": total, "us": dt_scan * 1e6,
+            "macc_per_s": total / dt_scan / 1e6,
+        })
+
+        sub = streams[0][:n_pallas]
+        t0 = time.time()
+        res_pal = simulate_cache_many([sub], [geom], policy, backend="pallas")
+        dt_pal = time.time() - t0
+        rows.append({
+            "kernel": "cache_scan", "variant": "pallas-interpret",
+            "policy": policy, "accesses": n_pallas, "us": dt_pal * 1e6,
+            "macc_per_s": n_pallas / dt_pal / 1e6,
+        })
+
+        t0 = time.time()
+        gold = GoldenCache(geom, policy)
+        gold_hits = gold.run(sub)
+        dt_gold = time.time() - t0
+        rows.append({
+            "kernel": "cache_scan", "variant": "golden-python",
+            "policy": policy, "accesses": n_pallas, "us": dt_gold * 1e6,
+            "macc_per_s": n_pallas / dt_gold / 1e6,
+        })
+
+        # the benchmark doubles as an end-to-end agreement check
+        assert np.array_equal(res_scan[0].hits[:n_pallas], gold_hits)
+        assert np.array_equal(np.asarray(res_pal[0].hits), gold_hits)
+    return rows
+
+
+if __name__ == "__main__":
+    from benchmarks import common
+
+    cache_rows = run_cache_scan()
+    path = common.save_rows("BENCH_cache_kernel", cache_rows)
+    print(f"saved {path}")
+    for r in cache_rows:
+        print(f"  {r['policy']:<6s} {r['variant']:<16s} "
+              f"{r['macc_per_s']:8.3f} Macc/s ({r['accesses']} accesses)")

@@ -76,6 +76,12 @@ def main() -> None:
     for r in rowsk:
         _emit(f"kernel_{r['kernel']}_{r['variant']}", r["us"], "us_per_call")
 
+    rowsc = kernel_bench.run_cache_scan()
+    common.save_rows("BENCH_cache_kernel", rowsc)
+    for r in rowsc:
+        _emit(f"cache_scan_{r['policy']}_{r['variant']}", r["us"],
+              f"{r['macc_per_s']:.3f}Macc/s")
+
     t0 = time.time()
     rowsl = lm_npu_study.run()
     common.save_rows("lm_npu_study", rowsl)

@@ -1,0 +1,103 @@
+"""CI perf smoke: guard the DSE sweep hot path against regressions.
+
+Runs the standard 24-config sweep grid (the same one ``benchmarks/dse_sweep``
+measures), compares steady-state ``per_config_ms`` against the checked-in
+baseline, and fails when it regresses more than the allowed factor (2x — wide
+enough to absorb runner variance, tight enough to catch a lost optimization).
+Also runs a small sweep with ``cache_backend="pallas"`` so the Pallas kernel
+path executes end to end (interpret mode on CPU) in the same job.
+
+Usage:  PYTHONPATH=src python scripts/perf_smoke.py [--update-baseline]
+Baseline: benchmarks/perf_baseline.json (checked in; results/ is gitignored).
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+import time
+
+_REPO_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+sys.path.insert(0, _REPO_ROOT)     # for the benchmarks package
+
+from benchmarks import dse_sweep as _bench          # noqa: E402
+from repro.core import dlrm_rmc2_small, sweep, tpuv6e  # noqa: E402
+
+BASELINE_PATH = os.path.join(_REPO_ROOT, "benchmarks", "perf_baseline.json")
+REGRESSION_FACTOR = 2.0
+
+# The guarded grid IS the dse_sweep benchmark grid — imported, not copied,
+# so the gate can never drift from what the benchmark measures.
+GRID = dict(
+    policies=_bench.POLICIES,
+    capacities=_bench.CAPACITIES,
+    ways=_bench.WAYS,
+    zipf_s=_bench.ZIPF,
+    seed=0,
+)
+
+
+def measure() -> "tuple[float, int]":
+    wl = dlrm_rmc2_small(num_tables=_bench.TABLES, rows_per_table=_bench.ROWS,
+                         batch_size=_bench.BATCH, num_batches=2)
+    hw = tpuv6e()
+    sweep(wl, hw, **GRID)                       # warm: compile every shape
+    t0 = time.perf_counter()
+    sr = sweep(wl, hw, **GRID)
+    wall = time.perf_counter() - t0
+    return wall / sr.num_configs * 1e3, sr.num_configs
+
+
+def pallas_smoke() -> None:
+    """The Pallas backend must run the sweep end to end (interpret on CPU)
+    and agree with the scan backend bit for bit."""
+    wl = dlrm_rmc2_small(num_tables=2, rows_per_table=300, batch_size=2,
+                         num_batches=2)
+    grids = dict(policies=("lru", "srrip"), capacities=(1 << 14,), ways=(4,),
+                 zipf_s=0.9, seed=0)
+    ref = sweep(wl, tpuv6e(), **grids)
+    got = sweep(wl, tpuv6e().with_cache_backend("pallas"), **grids)
+    for a, b in zip(ref.entries, got.entries):
+        mism = a.result.diff(b.result)
+        assert not mism, (a.config.label, mism)
+    print(f"pallas backend smoke: {got.num_configs} configs bit-exact vs scan")
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--update-baseline", action="store_true",
+                    help="write the measured per_config_ms as the new baseline")
+    args = ap.parse_args()
+
+    pallas_smoke()
+    per_config_ms, num_configs = measure()
+
+    if args.update_baseline or not os.path.exists(BASELINE_PATH):
+        with open(BASELINE_PATH, "w") as f:
+            json.dump({"per_config_ms": round(per_config_ms, 3),
+                       "grid_configs": num_configs}, f, indent=2)
+        print(f"baseline written: {per_config_ms:.1f} ms/config -> {BASELINE_PATH}")
+        return 0
+
+    with open(BASELINE_PATH) as f:
+        baseline_rec = json.load(f)
+    baseline = baseline_rec["per_config_ms"]
+    if baseline_rec.get("grid_configs") != num_configs:
+        print(f"STALE BASELINE: grid now has {num_configs} configs, baseline "
+              f"recorded {baseline_rec.get('grid_configs')} — rerun with "
+              "--update-baseline", file=sys.stderr)
+        return 1
+    limit = baseline * REGRESSION_FACTOR
+    print(f"per_config_ms={per_config_ms:.1f} baseline={baseline:.1f} "
+          f"limit={limit:.1f} ({REGRESSION_FACTOR}x)")
+    if per_config_ms > limit:
+        print("PERF REGRESSION: sweep per-config time exceeds the allowed "
+              "factor over the checked-in baseline", file=sys.stderr)
+        return 1
+    print("perf smoke OK")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

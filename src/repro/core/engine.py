@@ -32,6 +32,7 @@ import numpy as np
 from .energy import EnergyTable, estimate_energy
 from .hardware import HardwareConfig
 from .matrix_model import simulate_matrix_op
+from .profiling import stage
 from .memory.system import (  # re-exported for back-compat
     EmbeddingBatchStats,
     EmbeddingTrace,
@@ -118,18 +119,23 @@ def build_embedding_traces(
     Deterministic in ``(workload, index_trace, seed, zipf_s)`` and independent
     of the hardware config — the basis for trace sharing across a DSE sweep.
     """
-    etraces: List[EmbeddingTrace] = []
-    for spec in workload.embedding_ops:
-        traces = []
-        for bi in range(workload.num_batches):
-            if index_trace is None:
-                n_acc = spec.lookups_per_batch(workload.batch_size)
-                it = generate_zipf_trace(n_acc, spec.rows_per_table, s=zipf_s, seed=seed + bi)
-            else:
-                it = index_trace
-            traces.append(expand_trace(it, spec, workload.batch_size, seed=seed + bi))
-        etraces.append(EmbeddingTrace(spec, traces))
-    return etraces
+    with stage("trace_gen"):
+        etraces: List[EmbeddingTrace] = []
+        for spec in workload.embedding_ops:
+            traces = []
+            for bi in range(workload.num_batches):
+                if index_trace is None:
+                    n_acc = spec.lookups_per_batch(workload.batch_size)
+                    it = generate_zipf_trace(
+                        n_acc, spec.rows_per_table, s=zipf_s, seed=seed + bi
+                    )
+                else:
+                    it = index_trace
+                traces.append(
+                    expand_trace(it, spec, workload.batch_size, seed=seed + bi)
+                )
+            etraces.append(EmbeddingTrace(spec, traces))
+        return etraces
 
 
 # --------------------------------------------------------------------------

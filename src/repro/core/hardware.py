@@ -51,6 +51,14 @@ class LookupSharding(str, enum.Enum):
     TABLE_HASH = "table_hash"  # hash table_id -> core (model parallel)
 
 
+# Cache-engine backends for the simulator's set-associative scan
+# (memory/cache.py): "scan" = vmapped lax.scan engine, "pallas" = VMEM-
+# resident Pallas kernel (kernels/cache_scan.py; interpret mode off-TPU).
+# Both are bit-exact against the golden model — the knob trades dispatch
+# strategy, never results.
+CACHE_BACKENDS = ("scan", "pallas")
+
+
 @dataclass(frozen=True)
 class MatrixUnit:
     """Systolic array description (SCALE-Sim-compatible)."""
@@ -142,6 +150,9 @@ class HardwareConfig:
     # SHARED topology: ``onchip`` is the one shared last-level memory.
     onchip: OnChipMemory = field(default_factory=OnChipMemory)
     offchip: OffChipMemory = field(default_factory=OffChipMemory)
+    # Simulator-engine knob (not a hardware parameter): which cache-scan
+    # backend classifies set-associative accesses. See CACHE_BACKENDS.
+    cache_backend: str = "scan"
 
     def cycles_to_seconds(self, cycles: float) -> float:
         return cycles / (self.clock_ghz * 1e9)
@@ -196,6 +207,18 @@ class HardwareConfig:
         if lookup_sharding is not None:
             kw["lookup_sharding"] = LookupSharding(lookup_sharding)
         return dataclasses.replace(self, **kw)
+
+    def with_cache_backend(self, backend: str) -> "HardwareConfig":
+        """Select the cache-engine backend ("scan" | "pallas").
+
+        Results are bit-exact across backends (test-enforced); this only
+        chooses how the set-associative scan executes.
+        """
+        if backend not in CACHE_BACKENDS:
+            raise ValueError(
+                f"unknown cache backend {backend!r}; options: {CACHE_BACKENDS}"
+            )
+        return dataclasses.replace(self, cache_backend=backend)
 
     def with_policy_mix(
         self, mix: "dict[int, OnChipPolicy | str] | None"

@@ -14,10 +14,22 @@ optimizations keep it fast while remaining bit-exact (both tested):
      group's sub-trace runs through its own scan with a tiny carry
      (group_sets x ways). A monolithic carry (e.g. 16384x16) forces XLA to
      copy megabytes per scan step (~11 K acc/s measured); the grouped carry
-     runs at ~1.2 M acc/s.
+     runs ~100x faster, and the scan body is unrolled (``_SCAN_UNROLL``) to
+     amortize CPU loop overhead (BENCH_cache_kernel.json tracks acc/s).
   2. **Length-bucketed padding.** Group sub-traces are padded to power-of-two
      lengths with masked no-op accesses so only O(log N) distinct shapes are
-     ever compiled.
+     ever compiled. The floor is ``_MIN_BUCKET = 64``: small enough that a
+     short sub-trace (large-capacity configs split into many set groups)
+     wastes at most ~2x in padding, while the power-of-two rule keeps the
+     compiled-shape count logarithmic (test-enforced).
+
+Backends: the scan engine above (``cache_backend="scan"``, default) and a
+Pallas kernel (``cache_backend="pallas"``, ``kernels/cache_scan.py``) that
+keeps the (tags, meta) set-group state in VMEM and walks the padded
+sub-trace in-kernel. Both run through the same set-group partitioning and
+length bucketing and are bit-exact against ``golden.GoldenCache``
+(test-enforced); the Pallas path falls back to interpret mode off-TPU so
+CPU CI exercises it end to end.
 
 Replacement semantics (matching ChampSim):
   * LRU   — victim = first invalid way, else least-recently-used way.
@@ -36,6 +48,9 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from ..hardware import CACHE_BACKENDS
+from ..profiling import is_active as _profiling_active, stage
+
 MAX_RRPV = 3  # 2-bit SRRIP
 
 _POLICY_IDS = {"lru": 0, "srrip": 1, "fifo": 2}
@@ -45,7 +60,8 @@ _POLICY_IDS = {"lru": 0, "srrip": 1, "fifo": 2}
 ITYPE = jnp.int32
 
 _GROUP_SETS = 32        # sets per scan group (carry = 32 x ways ints x 2)
-_MIN_BUCKET = 1024      # smallest padded sub-trace length
+_MIN_BUCKET = 64        # smallest padded sub-trace length (<= ~2x padding)
+_SCAN_UNROLL = 8        # loop unroll for the tiny per-access scan body
 
 
 @dataclass(frozen=True)
@@ -142,7 +158,8 @@ def _scan_trace(sets: jax.Array, tags_in: jax.Array, valid: jax.Array,
         meta0 = jnp.full((num_sets, ways), -1, dtype=jnp.int32)
     step = functools.partial(_step, _POLICY_IDS[policy], ways)
     (_, _, _), (hits, evicts) = jax.lax.scan(
-        step, (tags0, meta0, jnp.int32(0)), (sets, tags_in, valid)
+        step, (tags0, meta0, jnp.int32(0)), (sets, tags_in, valid),
+        unroll=_SCAN_UNROLL,
     )
     return hits, evicts
 
@@ -172,39 +189,23 @@ def simulate_cache(
     lines: np.ndarray | jax.Array,
     geometry: CacheGeometry,
     policy: str = "lru",
+    backend: str = "scan",
 ) -> CacheResult:
     """Run the trace through the cache; returns per-access hits + counts.
 
     Thin wrapper over ``simulate_cache_many`` with a single pair, so the
     single-config and batched paths are equivalent by construction.
     """
-    return simulate_cache_many([lines], [geometry], policy)[0]
+    return simulate_cache_many([lines], [geometry], policy, backend=backend)[0]
 
 
-def simulate_cache_many(
-    streams: "list[np.ndarray]",
-    geometries: "list[CacheGeometry]",
-    policy: str = "lru",
-) -> "list[CacheResult]":
-    """Run several independent (trace, geometry) pairs under one policy.
+def _build_tasks(lines_list, geometries):
+    """Set-group scan tasks for independent (trace, geometry) pairs.
 
-    Semantically identical to ``[simulate_cache(s, g, policy) ...]`` (tests
-    enforce bit-exactness), but every set-group sub-scan across ALL pairs is
-    bucketed by its padded (length, sets, ways) shape and each bucket runs as
-    ONE vmapped dispatch (``_simulate_many``). A DSE sweep evaluating many
-    same-(ways, policy) capacities therefore pays per *shape*, not per config.
+    Each task is ``(cfg, idx-or-None, local_sets, tags, n_sets_g, ways)`` —
+    one sub-trace confined to a group of ``_GROUP_SETS`` sets, exactly
+    mirroring the per-config set-group partitioning of ``simulate_cache``.
     """
-    if policy not in _POLICY_IDS:
-        raise ValueError(f"unknown policy {policy!r}; options: {sorted(_POLICY_IDS)}")
-    lines_list = [np.asarray(s, dtype=np.int64).reshape(-1) for s in streams]
-    if len(lines_list) != len(geometries):
-        raise ValueError("streams and geometries length mismatch")
-
-    hits_out = [np.zeros(l.size, dtype=bool) for l in lines_list]
-    evict_out = [0] * len(lines_list)
-
-    # (cfg, idx-or-None, local_sets, tags, n_sets_g, ways) scan tasks, exactly
-    # mirroring simulate_cache's per-config set-group partitioning.
     tasks = []
     for cfg, (lines_np, geom) in enumerate(zip(lines_list, geometries)):
         n = lines_np.size
@@ -231,12 +232,30 @@ def simulate_cache_many(
                 tasks.append(
                     (cfg, idx, set_idx[idx] - g * _GROUP_SETS, tag[idx], n_sets_g, W)
                 )
+    return tasks
 
+
+def _run_buckets(lines_list, geometries, policy: str, backend: str):
+    """Bucket set-group tasks by padded shape and run each bucket as ONE
+    device dispatch of the selected backend.
+
+    Yields ``(tasks, hits, evicts)`` per bucket with hits/evicts still
+    DEVICE-resident ``(B, L)`` arrays — callers decide when to sync.
+    """
+    if policy not in _POLICY_IDS:
+        raise ValueError(f"unknown policy {policy!r}; options: {sorted(_POLICY_IDS)}")
+    if backend not in CACHE_BACKENDS:
+        raise ValueError(
+            f"unknown cache backend {backend!r}; options: {CACHE_BACKENDS}"
+        )
+
+    tasks = _build_tasks(lines_list, geometries)
     buckets: "dict[tuple, list]" = {}
     for t in tasks:
         m = t[2].size
         buckets.setdefault((_bucket_len(m), t[4], t[5]), []).append(t)
 
+    out = []
     for (L, S_g, W), ts in buckets.items():
         B = len(ts)
         s_b = np.zeros((B, L), dtype=np.int32)
@@ -247,11 +266,53 @@ def simulate_cache_many(
             s_b[row, :m] = s_loc
             t_b[row, :m] = tags
             v_b[row, :m] = True
-        h, e = _simulate_many(
-            jnp.asarray(s_b), jnp.asarray(t_b), jnp.asarray(v_b), S_g, W, policy
-        )
-        h = np.asarray(h)
-        e = np.asarray(e)
+        with stage("cache_scan"):
+            if backend == "pallas":
+                from ...kernels.cache_scan import cache_scan_groups
+
+                h, e = cache_scan_groups(
+                    jnp.asarray(s_b), jnp.asarray(t_b), jnp.asarray(v_b),
+                    S_g, W, policy,
+                )
+            else:
+                h, e = _simulate_many(
+                    jnp.asarray(s_b), jnp.asarray(t_b), jnp.asarray(v_b),
+                    S_g, W, policy,
+                )
+            if _profiling_active():
+                # Attribute async device compute to "cache_scan", not to the
+                # extraction in the caller (profiling sessions only).
+                jax.block_until_ready((h, e))
+        out.append((ts, h, e))
+    return out
+
+
+def simulate_cache_many(
+    streams: "list[np.ndarray]",
+    geometries: "list[CacheGeometry]",
+    policy: str = "lru",
+    backend: str = "scan",
+) -> "list[CacheResult]":
+    """Run several independent (trace, geometry) pairs under one policy.
+
+    Semantically identical to ``[simulate_cache(s, g, policy) ...]`` (tests
+    enforce bit-exactness), but every set-group sub-scan across ALL pairs is
+    bucketed by its padded (length, sets, ways) shape and each bucket runs as
+    ONE vmapped dispatch (``_simulate_many``, or the Pallas kernel under
+    ``backend="pallas"``). A DSE sweep evaluating many same-(ways, policy)
+    capacities therefore pays per *shape*, not per config.
+    """
+    lines_list = [np.asarray(s, dtype=np.int64).reshape(-1) for s in streams]
+    if len(lines_list) != len(geometries):
+        raise ValueError("streams and geometries length mismatch")
+
+    hits_out = [np.zeros(l.size, dtype=bool) for l in lines_list]
+    evict_out = [0] * len(lines_list)
+
+    for ts, h_d, e_d in _run_buckets(lines_list, geometries, policy, backend):
+        with stage("host_sync"):
+            h = np.asarray(h_d)
+            e = np.asarray(e_d)
         for row, (cfg, idx, s_loc, _, _, _) in enumerate(ts):
             m = s_loc.size
             if idx is None:
@@ -269,3 +330,32 @@ def simulate_cache_many(
         )
         for hits, ev in zip(hits_out, evict_out)
     ]
+
+
+def classify_streams(
+    streams: "list[np.ndarray]",
+    geometries: "list[CacheGeometry]",
+    policy: str = "lru",
+    backend: str = "scan",
+) -> "list[np.ndarray]":
+    """Per-access hit arrays for several (trace, geometry) pairs.
+
+    The classification-only surface the MemorySystem hot path consumes: the
+    same bucketed device dispatches as ``simulate_cache_many``, but skips
+    eviction accounting and performs exactly ONE blocking device->host
+    extraction per bucket — the single sync point of the classify stage.
+    """
+    lines_list = [np.asarray(s, dtype=np.int64).reshape(-1) for s in streams]
+    if len(lines_list) != len(geometries):
+        raise ValueError("streams and geometries length mismatch")
+    hits_out = [np.zeros(l.size, dtype=bool) for l in lines_list]
+    for ts, h_d, _ in _run_buckets(lines_list, geometries, policy, backend):
+        with stage("host_sync"):
+            h = np.asarray(h_d)
+        for row, (cfg, idx, s_loc, _, _, _) in enumerate(ts):
+            m = s_loc.size
+            if idx is None:
+                hits_out[cfg] = h[row, :m].copy()
+            else:
+                hits_out[cfg][idx] = h[row, :m]
+    return hits_out

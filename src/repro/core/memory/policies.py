@@ -31,11 +31,14 @@ import dataclasses
 from dataclasses import dataclass
 from typing import ClassVar, Dict, List, Optional, Sequence, Tuple, Type, Union
 
+import jax
+import jax.numpy as jnp
 import numpy as np
 
 from ..hardware import HardwareConfig, OnChipPolicy
+from ..profiling import stage
 from ..trace import AddressTrace
-from .cache import CacheGeometry, simulate_cache, simulate_cache_many
+from .cache import CacheGeometry, classify_streams
 
 
 @dataclass
@@ -76,6 +79,7 @@ class PolicyContext:
     geometry: CacheGeometry
     capacity_units: int                       # capacity in stream-granularity units
     pinned_lines: Optional[np.ndarray] = None
+    backend: str = "scan"                     # cache-engine backend (hw knob)
 
     @staticmethod
     def from_hardware(
@@ -88,6 +92,7 @@ class PolicyContext:
             geometry=geom,
             capacity_units=hw.onchip.num_lines,
             pinned_lines=pinned_lines,
+            backend=hw.cache_backend,
         )
 
     def scaled(self, fraction: float) -> "PolicyContext":
@@ -156,6 +161,15 @@ class MemoryPolicy(abc.ABC):
         """
         return [self.classify(s, c) for s, c in zip(streams, ctxs)]
 
+    def classify_jnp(self, lines: jax.Array, ctx: PolicyContext) -> jax.Array:
+        """Device-resident ``classify``: takes/returns JAX arrays.
+
+        Policies with a native jnp port (SPM, PINNING) override this; the
+        numpy ``classify`` stays the golden reference (equality is
+        test-enforced). The default round-trips through the host.
+        """
+        return jnp.asarray(self.classify(np.asarray(lines), ctx))
+
     def _outcome(
         self, lines: np.ndarray, ctx: PolicyContext, hits: np.ndarray
     ) -> PolicyOutcome:
@@ -174,21 +188,23 @@ class MemoryPolicy(abc.ABC):
 
     def run(self, lines: np.ndarray, ctx: PolicyContext) -> PolicyOutcome:
         """Classify + apply the shared accounting contract."""
-        lines = np.asarray(lines, dtype=np.int64).reshape(-1)
-        ctx = self.prepare(lines, ctx)
-        return self._outcome(lines, ctx, self.classify(lines, ctx))
+        with stage("classify"):
+            lines = np.asarray(lines, dtype=np.int64).reshape(-1)
+            ctx = self.prepare(lines, ctx)
+            return self._outcome(lines, ctx, self.classify(lines, ctx))
 
     def run_many(
         self, streams: Sequence[np.ndarray], ctxs: Sequence[PolicyContext]
     ) -> List[PolicyOutcome]:
         """Batched ``run``: same contract, one ``classify_many`` dispatch."""
-        streams = [np.asarray(s, dtype=np.int64).reshape(-1) for s in streams]
-        ctxs = [self.prepare(s, c) for s, c in zip(streams, ctxs)]
-        hits_list = self.classify_many(streams, ctxs)
-        return [
-            self._outcome(s, c, h)
-            for s, c, h in zip(streams, ctxs, hits_list)
-        ]
+        with stage("classify"):
+            streams = [np.asarray(s, dtype=np.int64).reshape(-1) for s in streams]
+            ctxs = [self.prepare(s, c) for s, c in zip(streams, ctxs)]
+            hits_list = self.classify_many(streams, ctxs)
+            return [
+                self._outcome(s, c, h)
+                for s, c, h in zip(streams, ctxs, hits_list)
+            ]
 
 
 # --------------------------------------------------------------------------
@@ -240,23 +256,45 @@ class SpmPolicy(MemoryPolicy):
     def classify(self, lines: np.ndarray, ctx: PolicyContext) -> np.ndarray:
         return np.zeros(lines.size, dtype=bool)
 
+    def classify_jnp(self, lines: jax.Array, ctx: PolicyContext) -> jax.Array:
+        """Device-resident port of ``classify`` (tests pin equality)."""
+        return jnp.zeros(lines.shape[0], dtype=bool)
+
 
 class _CacheModePolicy(MemoryPolicy):
-    """Set-associative cache mode (MTIA LLC-like); replacement = ``name``."""
+    """Set-associative cache mode (MTIA LLC-like); replacement = ``name``.
+
+    Classification runs on the cache engine selected by ``ctx.backend``
+    (lax.scan or the Pallas kernel) through the hits-only device surface
+    ``cache.classify_streams`` — the scan state and per-access results stay
+    on device until the one bulk extraction per shape bucket.
+    """
 
     uses_cache_engine = True
     supports_lane_transform = True
 
     def classify(self, lines: np.ndarray, ctx: PolicyContext) -> np.ndarray:
-        return simulate_cache(lines, ctx.geometry, policy=self.name).hits
+        return classify_streams(
+            [lines], [ctx.geometry], policy=self.name, backend=ctx.backend
+        )[0]
 
     def classify_many(
         self, streams: Sequence[np.ndarray], ctxs: Sequence[PolicyContext]
     ) -> List[np.ndarray]:
-        results = simulate_cache_many(
-            streams, [c.geometry for c in ctxs], policy=self.name
-        )
-        return [r.hits for r in results]
+        out: List[Optional[np.ndarray]] = [None] * len(ctxs)
+        by_backend: Dict[str, List[int]] = {}
+        for i, c in enumerate(ctxs):
+            by_backend.setdefault(c.backend, []).append(i)
+        for backend, idxs in by_backend.items():
+            hits = classify_streams(
+                [streams[i] for i in idxs],
+                [ctxs[i].geometry for i in idxs],
+                policy=self.name,
+                backend=backend,
+            )
+            for i, h in zip(idxs, hits):
+                out[i] = h
+        return out  # type: ignore[return-value]
 
 
 @register_policy
@@ -318,6 +356,21 @@ class PinningPolicy(MemoryPolicy):
         idx = np.searchsorted(pinned, lines)
         idx = np.clip(idx, 0, len(pinned) - 1)
         return pinned[idx] == lines
+
+    def classify_jnp(self, lines: jax.Array, ctx: PolicyContext) -> jax.Array:
+        """Device-resident port of ``classify`` (tests pin equality).
+
+        Same sorted-membership test as the numpy golden, expressed with
+        ``jnp.searchsorted`` so a device-resident caller (TPU pipeline) can
+        keep the lookup stream on device.
+        """
+        pinned = ctx.pinned_lines
+        if pinned is None or not len(pinned):
+            return jnp.zeros(lines.shape[0], dtype=bool)
+        pinned_d = jnp.asarray(np.asarray(pinned))
+        idx = jnp.searchsorted(pinned_d, lines)
+        idx = jnp.clip(idx, 0, len(pinned) - 1)
+        return pinned_d[idx] == lines
 
     def setup_writes(self, ctx: PolicyContext) -> int:
         return 0 if ctx.pinned_lines is None else int(len(ctx.pinned_lines))

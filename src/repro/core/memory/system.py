@@ -55,6 +55,7 @@ from typing import Dict, List, Optional, Sequence, Union
 import numpy as np
 
 from ..hardware import HardwareConfig, Topology
+from ..profiling import stage
 from ..trace import (
     AddressTrace,
     ConcatTrace,
@@ -184,16 +185,18 @@ class EmbeddingTrace:
     def vec_ids(self) -> np.ndarray:
         """Globally unique vector id per lookup (lane-transform stream)."""
         if self._vec_ids is None:
-            self._vec_ids = (
-                self.concat.table_ids.astype(np.int64) * self.spec.rows_per_table
-                + self.concat.row_ids
-            )
+            with stage("trace_gen"):
+                self._vec_ids = (
+                    self.concat.table_ids.astype(np.int64) * self.spec.rows_per_table
+                    + self.concat.row_ids
+                )
         return self._vec_ids
 
     def address_trace(self, line_bytes: int) -> AddressTrace:
         at = self._atraces.get(line_bytes)
         if at is None:
-            at = translate(self.concat, self.spec, line_bytes)
+            with stage("trace_gen"):
+                at = translate(self.concat, self.spec, line_bytes)
             self._atraces[line_bytes] = at
         return at
 
@@ -234,6 +237,7 @@ def _lane_context(
         geometry=lane,
         capacity_units=hw.onchip.num_lines // lpv,
         pinned_lines=pinned_lines,
+        backend=hw.cache_backend,
     )
 
 

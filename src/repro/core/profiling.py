@@ -1,0 +1,95 @@
+"""Lightweight per-stage wall-time accounting for the simulation hot path.
+
+The DSE sweep's perf work needs to know where a config's milliseconds go:
+trace generation, on-chip classification, the cache scan itself, DRAM
+timing, or host<->device synchronization. This module is the single owner
+of that attribution: hot-path stages wrap themselves in ``stage(name)`` and
+a profiling session (``collect()``) accumulates exclusive wall time per
+stage. When no session is active the wrappers cost one global read and a
+``None`` check — nothing is timed, so ``simulate()``/``sweep()`` keep their
+normal performance.
+
+Stages nest: time spent inside an inner ``stage`` is attributed to the
+inner stage only (exclusive accounting), so ``classify`` does not
+double-count the ``cache_scan`` dispatch it contains, and ``host_sync``
+blocks (device-result extraction) subtract cleanly from whichever stage
+they interrupt.
+
+Canonical stage names used by the memory pipeline:
+
+  * ``trace_gen``   — index-trace generation + expansion + translation
+  * ``classify``    — policy classification driver (stream prep, accounting)
+  * ``cache_scan``  — set-associative cache engine dispatch (scan or Pallas)
+  * ``dram``        — DRAM timing (FR-FCFS ordering + event scan)
+  * ``host_sync``   — blocking device->host result extraction (np.asarray
+                      of JAX arrays; the cost the device-resident pipeline
+                      is designed to keep out of the inner loop)
+"""
+from __future__ import annotations
+
+import time
+from contextlib import contextmanager
+from typing import Dict, Iterator, List, Optional
+
+__all__ = ["stage", "collect", "is_active", "StageProfile"]
+
+
+class StageProfile:
+    """Accumulated exclusive seconds per stage for one profiling session."""
+
+    def __init__(self) -> None:
+        self.seconds: Dict[str, float] = {}
+        self._stack: List[list] = []  # [name, started_at, child_seconds]
+
+    def breakdown(self, total_seconds: Optional[float] = None) -> Dict[str, float]:
+        """Stage -> seconds, with ``other`` filling up to ``total_seconds``."""
+        out = dict(sorted(self.seconds.items(), key=lambda kv: -kv[1]))
+        if total_seconds is not None:
+            out["other"] = max(0.0, total_seconds - sum(self.seconds.values()))
+        return out
+
+
+_active: Optional[StageProfile] = None
+
+
+def is_active() -> bool:
+    """True while a ``collect()`` session is open.
+
+    Hot-path code uses this to force device computations to complete inside
+    their own stage (``jax.block_until_ready``) so that asynchronous-dispatch
+    wait time is attributed to the compute stage, not to the ``host_sync``
+    extraction that would otherwise absorb it. Never true in production, so
+    the extra synchronization only exists while profiling.
+    """
+    return _active is not None
+
+
+@contextmanager
+def stage(name: str) -> Iterator[None]:
+    """Attribute the enclosed wall time to ``name`` (exclusive of children)."""
+    prof = _active
+    if prof is None:
+        yield
+        return
+    prof._stack.append([name, time.perf_counter(), 0.0])
+    try:
+        yield
+    finally:
+        frame = prof._stack.pop()
+        elapsed = time.perf_counter() - frame[1]
+        prof.seconds[name] = prof.seconds.get(name, 0.0) + elapsed - frame[2]
+        if prof._stack:
+            prof._stack[-1][2] += elapsed
+
+
+@contextmanager
+def collect() -> Iterator[StageProfile]:
+    """Open a profiling session; hot-path ``stage`` blocks report into it."""
+    global _active
+    prev = _active
+    prof = StageProfile()
+    _active = prof
+    try:
+        yield prof
+    finally:
+        _active = prev

@@ -233,6 +233,11 @@ def sweep(
                 ms = memory_system_for(hw)
                 key = (pol, nc, topo, hw.lookup_sharding.value, hw.onchip.policy_mix)
                 key += tuple(getattr(hw.onchip, p) for p in ms.policy.sensitive_params)
+                if ms.policy.uses_cache_engine:
+                    # Backends are bit-exact, but memoization must not hand a
+                    # "pallas" grid point stats computed by "scan" — the knob
+                    # is part of what the config requests.
+                    key += (hw.cache_backend,)
                 if hw.onchip.policy_mix:
                     # Mix groups may read parameters the default policy does
                     # not (e.g. pinned tables under an SPM default).

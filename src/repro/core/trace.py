@@ -15,6 +15,8 @@ from __future__ import annotations
 from dataclasses import dataclass
 from typing import Optional, Sequence, Tuple, Union
 
+import jax
+import jax.numpy as jnp
 import numpy as np
 
 from .workload import EmbeddingOpSpec
@@ -262,6 +264,45 @@ class TraceShard:
         return len(self.concat)
 
 
+def shard_lookup_cores_jnp(
+    concat: ConcatTrace, num_cores: int, mode: str = "batch"
+) -> jax.Array:
+    """Device-resident port of ``shard_lookup_cores`` (numpy stays golden).
+
+    Same deterministic lookup->core mapping expressed in jnp so a device-
+    resident pipeline can shard without leaving the accelerator; equality
+    with the numpy version is test-enforced. ``table_hash`` reproduces the
+    64-bit Knuth hash with 32-bit arithmetic (split multiplier), exact for
+    ``table_id < 2**15`` — beyond that it falls back to the host mapping.
+    """
+    if num_cores < 1:
+        raise ValueError(f"num_cores must be >= 1, got {num_cores}")
+    n = len(concat)
+    if num_cores == 1:
+        return jnp.zeros(n, dtype=jnp.int32)
+    if mode == "batch":
+        per_sample = concat.num_tables * concat.lookups_per_sample
+        starts = jnp.repeat(
+            jnp.asarray(concat.boundaries[:-1].astype(np.int32)),
+            jnp.asarray(concat.lookups_per_batch.astype(np.int32)),
+            total_repeat_length=n,
+        )
+        pos_in_batch = jnp.arange(n, dtype=jnp.int32) - starts
+        sample = pos_in_batch // max(per_sample, 1)
+        return (sample % num_cores).astype(jnp.int32)
+    if mode == "table_hash":
+        if concat.num_tables >= (1 << 15):
+            return jnp.asarray(table_core_of(concat.table_ids, num_cores))
+        t = jnp.asarray(concat.table_ids).astype(jnp.int32)
+        m_hi = _TABLE_HASH_MULT >> 16
+        m_lo = _TABLE_HASH_MULT & 0xFFFF
+        # (t * M) >> 16 == t * m_hi + ((t * m_lo) >> 16), exact in 32 bits
+        # for t < 2**15 (t * m_hi < 2**31).
+        h = t * m_hi + ((t * m_lo) >> 16)
+        return (h % num_cores).astype(jnp.int32)
+    raise ValueError(f"unknown sharding mode {mode!r}; options: batch, table_hash")
+
+
 def shard_trace(
     concat: ConcatTrace,
     num_cores: int,
@@ -342,6 +383,41 @@ def translate(
         lines_per_vector=lines_per_vec,
         vector_of_line=vector_of_line,
     )
+
+
+def translate_jnp(
+    table_ids: jax.Array,
+    row_ids: jax.Array,
+    spec: EmbeddingOpSpec,
+    line_bytes: int,
+    base_address: int = 0,
+) -> jax.Array:
+    """Device-resident port of ``translate``'s address arithmetic.
+
+    Returns the flattened ``(N * lines_per_vector,)`` line-number stream for
+    the given lookups (the ``AddressTrace.lines`` layout); the numpy
+    ``translate`` stays the golden reference (equality test-enforced).
+    Integer arithmetic is int32 (jnp default without x64), which covers byte
+    addresses up to 2 GB of embedding state; larger address spaces keep the
+    int64 host path (the cache engine itself is int32-bounded on *line*
+    numbers, a far looser limit).
+    """
+    vb = spec.vector_bytes
+    lines_per_vec = -(-vb // line_bytes)
+    max_addr = base_address + spec.num_tables * spec.table_bytes
+    if max_addr >= np.iinfo(np.int32).max:
+        raise ValueError(
+            f"translate_jnp covers int32 byte addresses only; this spec spans "
+            f"{max_addr} bytes — use the int64 host `translate` instead"
+        )
+    start = (
+        base_address
+        + table_ids.astype(jnp.int32) * spec.table_bytes
+        + row_ids.astype(jnp.int32) * vb
+    )
+    start_line = start // line_bytes
+    offsets = jnp.arange(lines_per_vec, dtype=jnp.int32)
+    return (start_line[:, None] + offsets[None, :]).reshape(-1)
 
 
 def load_index_trace(path: str) -> np.ndarray:

@@ -21,6 +21,19 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import Mesh, PartitionSpec as P
 
+# jax >= 0.6 exposes shard_map at the top level (replication check spelled
+# `check_vma`); older releases keep it in jax.experimental with `check_rep`.
+if hasattr(jax, "shard_map"):
+    def _shard_map(body, mesh, in_specs, out_specs):
+        return jax.shard_map(body, mesh=mesh, in_specs=in_specs,
+                             out_specs=out_specs, check_vma=False)
+else:
+    from jax.experimental.shard_map import shard_map as _experimental_shard_map
+
+    def _shard_map(body, mesh, in_specs, out_specs):
+        return _experimental_shard_map(body, mesh=mesh, in_specs=in_specs,
+                                       out_specs=out_specs, check_rep=False)
+
 
 def _own_chunk(x_loc, w_loc, c, n_chunks):
     nc = w_loc.shape[-1] // n_chunks
@@ -53,12 +66,12 @@ def ring_matmul(
         gathered = jnp.take(gathered, order, axis=0)
         return jnp.concatenate(jnp.split(gathered, n, axis=0), axis=-1)[0]
 
-    return jax.shard_map(
+    # replication is established by the final gather (check disabled in shim)
+    return _shard_map(
         body,
         mesh=mesh,
         in_specs=(P(*(None,) * (x.ndim - 1), axis), P(axis, None)),
         out_specs=P(*(None,) * (x.ndim - 1), None),
-        check_vma=False,   # replication is established by the final gather
     )(x, w)
 
 
@@ -68,10 +81,10 @@ def psum_matmul(x, w, mesh, axis="model"):
     def body(x_loc, w_loc):
         return jax.lax.psum(x_loc @ w_loc, axis)
 
-    return jax.shard_map(
+    # psum output is replicated by construction (check disabled in shim)
+    return _shard_map(
         body,
         mesh=mesh,
         in_specs=(P(*(None,) * (x.ndim - 1), axis), P(axis, None)),
         out_specs=P(*(None,) * (x.ndim - 1), None),
-        check_vma=False,   # psum output is replicated by construction
     )(x, w)

@@ -1,0 +1,175 @@
+"""Pallas set-associative cache-scan kernel (the simulator's hot loop).
+
+``cache.py`` simulates the paper's on-chip cache by scanning the address
+trace with a ``(tags, meta)`` carry. This module is the Pallas realization of
+that loop (``HardwareConfig.cache_backend="pallas"``): one kernel instance
+per set-group sub-trace keeps the whole ``(group_sets, ways)`` tag + metadata
+state in VMEM scratch and walks the padded sub-trace in-kernel, so the state
+never round-trips through HBM between accesses and the grid dimension
+processes the length-bucketed sub-traces of many configs in one launch.
+
+Replacement semantics are copied access-for-access from ``cache._step``
+(ChampSim LRU / SRRIP / FIFO) with one mechanical difference: way selection
+uses first-match masks (``cumsum == 1``) instead of argmax/argmin, which tie-
+break identically (lowest way index). Integer state only, so the kernel is
+bit-exact against ``golden.GoldenCache`` — enforced by the differential fuzz
+tests in ``tests/test_cache_pallas.py``.
+
+Off-TPU the kernel runs in interpret mode (default automatically selected),
+so CPU CI exercises the exact kernel program end to end. VMEM scratch is
+``(group_sets, ways)`` int32; with the default 32-set groups and 16 ways the
+state is 4 KB — far under the VMEM budget, the point of set-group
+partitioning. (On real TPU hardware the ``ways`` axis sits below the 128-lane
+tile width; interpret mode does not care, and the compiled path pads lanes.)
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+MAX_RRPV = 3  # 2-bit SRRIP (mirrors cache.MAX_RRPV)
+
+_POLICY_IDS = {"lru": 0, "srrip": 1, "fifo": 2}
+
+
+def _first_true(mask: jax.Array) -> jax.Array:
+    """Mask selecting the first True along the last axis (argmax tie-break)."""
+    return mask & (jnp.cumsum(mask.astype(jnp.int32), axis=-1) == 1)
+
+
+def _cache_scan_kernel(
+    policy_id: int,
+    num_sets: int,
+    ways: int,
+    s_ref,        # (1, L) int32 local set index per access
+    t_ref,        # (1, L) int32 tag per access
+    v_ref,        # (1, L) int32 1 = real access, 0 = padding
+    hit_ref,      # (1, L) int32 out: on-chip hit
+    evict_ref,    # (1, L) int32 out: eviction performed
+    tags_ref,     # VMEM (num_sets, ways) int32 scratch: line tags, -1 invalid
+    meta_ref,     # VMEM (num_sets, ways) int32 scratch: LRU/FIFO ts or RRPV
+):
+    L = s_ref.shape[1]
+    tags_ref[...] = jnp.full((num_sets, ways), -1, dtype=jnp.int32)
+    if policy_id == _POLICY_IDS["srrip"]:
+        meta_ref[...] = jnp.full((num_sets, ways), MAX_RRPV, dtype=jnp.int32)
+    else:
+        meta_ref[...] = jnp.full((num_sets, ways), -1, dtype=jnp.int32)
+
+    def body(i, t):
+        s = s_ref[0, i]
+        tag = t_ref[0, i]
+        valid = v_ref[0, i] != 0
+
+        row_tags = pl.load(tags_ref, (pl.dslice(s, 1), slice(None)))  # (1, W)
+        row_meta = pl.load(meta_ref, (pl.dslice(s, 1), slice(None)))
+
+        hit_vec = row_tags == tag
+        hit = jnp.any(hit_vec)
+        hit_mask = _first_true(hit_vec)
+        invalid_vec = row_tags < 0
+
+        if policy_id == _POLICY_IDS["srrip"]:
+            # Age the set until some way reaches MAX_RRPV (persists).
+            inc = jnp.maximum(0, MAX_RRPV - jnp.max(row_meta))
+            aged = row_meta + inc
+            victim_mask = _first_true(aged == MAX_RRPV)
+            new_meta_hit = jnp.where(hit_mask, 0, row_meta)
+            new_meta_miss = jnp.where(victim_mask, MAX_RRPV - 1, aged)
+        else:
+            # Invalid ways carry -1 < any timestamp, so the first minimum is
+            # the first invalid way when one exists (ChampSim behaviour).
+            masked = jnp.where(invalid_vec, -1, row_meta)
+            victim_mask = _first_true(masked == jnp.min(masked))
+            if policy_id == _POLICY_IDS["lru"]:
+                new_meta_hit = jnp.where(hit_mask, t, row_meta)
+            else:  # fifo: hits do not touch metadata
+                new_meta_hit = row_meta
+            new_meta_miss = jnp.where(victim_mask, t, row_meta)
+
+        evict = valid & ~hit & jnp.any(victim_mask & (row_tags >= 0))
+        new_meta = jnp.where(hit, new_meta_hit, new_meta_miss)
+        new_tags = jnp.where(hit, row_tags, jnp.where(victim_mask, tag, row_tags))
+
+        # Padding accesses leave the state untouched and report miss.
+        new_tags = jnp.where(valid, new_tags, row_tags)
+        new_meta = jnp.where(valid, new_meta, row_meta)
+        pl.store(tags_ref, (pl.dslice(s, 1), slice(None)), new_tags)
+        pl.store(meta_ref, (pl.dslice(s, 1), slice(None)), new_meta)
+
+        pl.store(
+            hit_ref, (slice(0, 1), pl.dslice(i, 1)),
+            (hit & valid).astype(jnp.int32).reshape(1, 1),
+        )
+        pl.store(
+            evict_ref, (slice(0, 1), pl.dslice(i, 1)),
+            evict.astype(jnp.int32).reshape(1, 1),
+        )
+        return t + jnp.int32(1)
+
+    jax.lax.fori_loop(0, L, body, jnp.int32(0))
+
+
+@functools.lru_cache(maxsize=None)
+def _build_cache_scan(
+    policy: str, num_sets: int, ways: int, B: int, L: int, interpret: bool
+):
+    """Memoized pallas_call for one (policy, geometry, batch shape).
+
+    The bucketed sweep re-dispatches identical shapes many times; building
+    the kernel closure once per shape keeps tracing (and on TPU,
+    compilation) out of the steady-state path, matching the jitted scan
+    backend's cost profile.
+    """
+    kernel = functools.partial(
+        _cache_scan_kernel, _POLICY_IDS[policy], num_sets, ways
+    )
+    row = pl.BlockSpec((1, L), lambda b: (b, 0))
+    return pl.pallas_call(
+        kernel,
+        grid=(B,),
+        in_specs=[row, row, row],
+        out_specs=[row, row],
+        out_shape=[
+            jax.ShapeDtypeStruct((B, L), jnp.int32),
+            jax.ShapeDtypeStruct((B, L), jnp.int32),
+        ],
+        scratch_shapes=[
+            pltpu.VMEM((num_sets, ways), jnp.int32),
+            pltpu.VMEM((num_sets, ways), jnp.int32),
+        ],
+        interpret=interpret,
+    )
+
+
+def cache_scan_groups(
+    sets: jax.Array,      # (B, L) int32 local set index
+    tags: jax.Array,      # (B, L) int32 tag
+    valid: jax.Array,     # (B, L) bool
+    num_sets: int,
+    ways: int,
+    policy: str = "lru",
+    interpret: "bool | None" = None,
+):
+    """Run B padded set-group sub-traces through the Pallas cache kernel.
+
+    Same contract as ``cache._simulate_many`` (per-access hit/evict arrays,
+    device-resident); grid dimension = sub-trace batch. ``interpret=None``
+    auto-selects interpret mode off-TPU so the kernel runs everywhere.
+    """
+    if policy not in _POLICY_IDS:
+        raise ValueError(f"unknown policy {policy!r}; options: {sorted(_POLICY_IDS)}")
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
+    B, L = sets.shape
+    call = _build_cache_scan(
+        policy, int(num_sets), int(ways), int(B), int(L), bool(interpret)
+    )
+    hits, evicts = call(
+        sets.astype(jnp.int32), tags.astype(jnp.int32), valid.astype(jnp.int32)
+    )
+    return hits.astype(bool), evicts.astype(bool)

@@ -123,11 +123,13 @@ def test_hlo_analyzer_trip_counts():
 
 
 def test_hlo_analyzer_collectives():
+    from repro.distributed.collective_matmul import _shard_map
+
     mesh = jax.make_mesh((1,), ("data",))
 
     def f(x):
-        return jax.shard_map(lambda a: jax.lax.psum(a @ a.T, "data"), mesh=mesh,
-                             in_specs=P("data", None), out_specs=P(None, None))(x)
+        return _shard_map(lambda a: jax.lax.psum(a @ a.T, "data"), mesh=mesh,
+                          in_specs=P("data", None), out_specs=P(None, None))(x)
 
     c = analyze(jax.jit(f).lower(jnp.ones((8, 64))).compile().as_text())
     assert c.collectives.get("all-reduce", 0) == 8 * 8 * 4
