@@ -7,13 +7,24 @@ import time
 from typing import Callable, Dict, List
 
 RESULTS_DIR = os.path.join(os.path.dirname(__file__), "..", "results", "bench")
+REPO_ROOT = os.path.abspath(os.path.join(os.path.dirname(__file__), ".."))
 
 
-def save_rows(name: str, rows: List[Dict]) -> str:
+def save_rows(name: str, rows: List[Dict], repo_root: bool = False) -> str:
+    """Save benchmark rows under results/bench/ (gitignored).
+
+    ``repo_root=True`` additionally writes ``<repo>/<name>.json`` — the
+    checked-in copy that tracks the perf trajectory across PRs (and that CI
+    uploads per run).
+    """
     os.makedirs(RESULTS_DIR, exist_ok=True)
     path = os.path.join(RESULTS_DIR, f"{name}.json")
+    text = json.dumps(rows, indent=2)
     with open(path, "w") as f:
-        json.dump(rows, f, indent=2)
+        f.write(text)
+    if repo_root:
+        with open(os.path.join(REPO_ROOT, f"{name}.json"), "w") as f:
+            f.write(text)
     return path
 
 

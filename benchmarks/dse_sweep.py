@@ -4,9 +4,10 @@ Runs a (policy x capacity x ways) grid through ``sweep()`` in one pass, then
 times a sample of the same configs as independent ``simulate()`` calls to
 measure the benefit of sharing traces / matrix results / compiled scans, and
 re-times the sweep with ``batch_scans=False`` to isolate the vmapped
-same-policy scan-batching win. Emits one ``kind=perf`` record (saved as
-BENCH_sweep.json by run.py, or by running this module directly) plus one row
-per grid point.
+same-policy scan-batching win. Emits one ``kind=perf`` record plus one row
+per grid point, saved BOTH under results/bench/ and as BENCH_sweep.json at
+the repo root — the root copy is checked in (and uploaded by CI every run)
+so the per-config perf trajectory is tracked across PRs.
 
 ``--profile`` re-times the sweep inside a stage-profiling session
 (``repro.core.profiling``) and adds a per-stage wall-time breakdown to the
@@ -38,8 +39,12 @@ def run(profile: bool = False) -> List[Dict]:
     # (the regime a DSE study with hundreds of points actually lives in).
     sweep(wl, base_hw, policies=POLICIES, capacities=CAPACITIES, ways=WAYS,
           zipf_s=ZIPF, seed=0)
+    from repro.core.memory import stack as _stack
+
+    dp0 = _stack.distance_pass_count()
     sr = sweep(wl, base_hw, policies=POLICIES, capacities=CAPACITIES,
                ways=WAYS, zipf_s=ZIPF, seed=0)
+    stack_passes = _stack.distance_pass_count() - dp0
     prof = None
     if profile:
         # Separate profiled pass: an active session adds per-stage
@@ -82,6 +87,8 @@ def run(profile: bool = False) -> List[Dict]:
         "speedup_vs_independent": est_independent_s / max(sr.wall_seconds, 1e-9),
         "unbatched_sweep_s": sr_nb.wall_seconds,
         "batched_scan_speedup": sr_nb.wall_seconds / max(sr.wall_seconds, 1e-9),
+        "cache_backend": base_hw.cache_backend,
+        "stack_distance_passes": stack_passes,
         "bitexact_sample": len(sample),
         "best_config": best.config.label,
         "best_total_cycles": best.result.total_cycles,
@@ -110,7 +117,7 @@ if __name__ == "__main__":
     args = ap.parse_args()
 
     bench_rows = run(profile=args.profile)
-    path = common.save_rows("BENCH_sweep", bench_rows)
+    path = common.save_rows("BENCH_sweep", bench_rows, repo_root=True)
     perf = next(r for r in bench_rows if r["kind"] == "perf")
     print(f"saved {path}")
     print(f"configs={perf['configs']} sweep_s={perf['sweep_s']:.2f} "

@@ -7,8 +7,11 @@ by the roofline analysis of the lowered programs.
 ``run_cache_scan()`` benchmarks the simulator's own hot loop — the set-
 associative cache scan — across its three implementations (vmapped lax.scan
 engine, Pallas kernel in interpret mode, sequential GoldenCache) in
-accesses/second; saved as BENCH_cache_kernel.json and uploaded with the CI
-artifacts.
+accesses/second. ``run_stack_distance()`` benchmarks the analytic LRU
+stack-distance engine (numpy host twin, device-resident jnp pass, Pallas
+distance kernel) against the scan backend across trace lengths and set
+counts, asserting bit-exact agreement in-line. Both save into
+BENCH_cache_kernel.json, uploaded with the CI artifacts.
 """
 from __future__ import annotations
 
@@ -134,12 +137,75 @@ def run_cache_scan() -> List[Dict]:
     return rows
 
 
+def run_stack_distance() -> List[Dict]:
+    """Stack-distance engine microbench (acc/s) vs the scan/pallas backends.
+
+    Sweeps trace length x set count for LRU — the regime where the analytic
+    stack pass replaces the sequential scan — measuring classification of a
+    4-point ways axis per backend so the stack engine's one-pass-per-
+    (stream, num_sets) sharing shows up as throughput rather than a special
+    case. The numpy and jnp engines are both timed; the Pallas distance
+    kernel runs interpret mode off-TPU (correctness datapoint, small sizes).
+    Every variant is asserted equal to the scan backend in-line.
+    """
+    from repro.core.memory import stack as stack_mod
+    from repro.core.memory.cache import CacheGeometry, simulate_cache_many
+    from repro.core.memory.stack import classify_lru_stack_many
+
+    rng = np.random.default_rng(0)
+    ways_axis = (2, 4, 8, 16)
+    rows: List[Dict] = []
+    for n, sets in ((8192, 64), (8192, 512), (32768, 512), (32768, 2048)):
+        stream = rng.integers(0, n, size=n).astype(np.int64)
+        geoms = [CacheGeometry(num_sets=sets, ways=w, line_bytes=64)
+                 for w in ways_axis]
+        streams = [stream] * len(geoms)
+        total = n * len(geoms)
+
+        ref = simulate_cache_many(streams, geoms, "lru", backend="scan")
+        t0 = time.time()
+        simulate_cache_many(streams, geoms, "lru", backend="scan")
+        dt_scan = time.time() - t0
+        rows.append({"kernel": "stack_distance", "variant": "scan-backend",
+                     "n": n, "sets": sets, "us": dt_scan * 1e6,
+                     "macc_per_s": total / dt_scan / 1e6})
+
+        for engine in ("np", "jnp"):
+            classify_lru_stack_many(streams, geoms, engine=engine)  # warm
+            dp0 = stack_mod.distance_pass_count()
+            t0 = time.time()
+            got = classify_lru_stack_many(streams, geoms, engine=engine)
+            dt = time.time() - t0
+            assert stack_mod.distance_pass_count() - dp0 == 1  # shared pass
+            for r, (h, ev) in zip(ref, got):
+                assert np.array_equal(r.hits, h) and r.num_evictions == ev
+            rows.append({"kernel": "stack_distance", "variant": f"stack-{engine}",
+                         "n": n, "sets": sets, "us": dt * 1e6,
+                         "macc_per_s": total / dt / 1e6})
+
+    # Pallas distance kernel: interpret mode walks accesses in Python — keep
+    # the size small; this is the exactness datapoint, not a TPU projection.
+    n_pal, sets_pal = 2048, 16
+    stream = rng.integers(0, 3000, size=n_pal).astype(np.int64)
+    geom = CacheGeometry(num_sets=sets_pal, ways=8, line_bytes=64)
+    ref = simulate_cache_many([stream], [geom], "lru", backend="scan")
+    t0 = time.time()
+    got = simulate_cache_many([stream], [geom], "lru", backend="stack_pallas")
+    dt = time.time() - t0
+    assert np.array_equal(ref[0].hits, got[0].hits)
+    rows.append({"kernel": "stack_distance", "variant": "stack-pallas-interpret",
+                 "n": n_pal, "sets": sets_pal, "us": dt * 1e6,
+                 "macc_per_s": n_pal / dt / 1e6})
+    return rows
+
+
 if __name__ == "__main__":
     from benchmarks import common
 
-    cache_rows = run_cache_scan()
+    cache_rows = run_cache_scan() + run_stack_distance()
     path = common.save_rows("BENCH_cache_kernel", cache_rows)
     print(f"saved {path}")
     for r in cache_rows:
-        print(f"  {r['policy']:<6s} {r['variant']:<16s} "
-              f"{r['macc_per_s']:8.3f} Macc/s ({r['accesses']} accesses)")
+        label = r.get("policy") or f"{r['n']}x{r['sets']}s"
+        print(f"  {label:<12s} {r['variant']:<22s} "
+              f"{r['macc_per_s']:8.3f} Macc/s ({r.get('accesses', r.get('n'))} accesses)")

@@ -61,7 +61,7 @@ def main() -> None:
 
     t0 = time.time()
     rows_sw = dse_sweep.run()
-    common.save_rows("BENCH_sweep", rows_sw)
+    common.save_rows("BENCH_sweep", rows_sw, repo_root=True)
     for r in rows_sw:
         if r["kind"] == "perf":
             _emit("dse_sweep_per_config_ms", (time.time() - t0) * 1e6,
@@ -76,10 +76,11 @@ def main() -> None:
     for r in rowsk:
         _emit(f"kernel_{r['kernel']}_{r['variant']}", r["us"], "us_per_call")
 
-    rowsc = kernel_bench.run_cache_scan()
+    rowsc = kernel_bench.run_cache_scan() + kernel_bench.run_stack_distance()
     common.save_rows("BENCH_cache_kernel", rowsc)
     for r in rowsc:
-        _emit(f"cache_scan_{r['policy']}_{r['variant']}", r["us"],
+        label = r.get("policy") or f"{r['n']}x{r['sets']}s"
+        _emit(f"{r['kernel']}_{label}_{r['variant']}", r["us"],
               f"{r['macc_per_s']:.3f}Macc/s")
 
     t0 = time.time()

@@ -51,12 +51,22 @@ class LookupSharding(str, enum.Enum):
     TABLE_HASH = "table_hash"  # hash table_id -> core (model parallel)
 
 
-# Cache-engine backends for the simulator's set-associative scan
-# (memory/cache.py): "scan" = vmapped lax.scan engine, "pallas" = VMEM-
-# resident Pallas kernel (kernels/cache_scan.py; interpret mode off-TPU).
-# Both are bit-exact against the golden model — the knob trades dispatch
+# Cache-engine backends for the simulator's set-associative classification
+# (memory/cache.py):
+#   "scan"         — vmapped lax.scan engine (the sequential reference).
+#   "pallas"       — VMEM-resident Pallas scan kernel (kernels/cache_scan.py;
+#                    interpret mode off-TPU).
+#   "stack"        — analytic LRU stack-distance engine (memory/stack.py):
+#                    one sort-based distance pass per (stream, num_sets)
+#                    classifies EVERY associativity, no sequential scan.
+#                    The default: fastest for DSE sweeps over LRU grids.
+#   "stack_pallas" — the Pallas kernel variant of the distance pass
+#                    (kernels/stack_distance.py), VMEM recency state.
+# The stack variants apply to LRU (the stack algorithm); non-stack policies
+# (srrip, fifo) transparently fall back to scan / pallas respectively. Every
+# backend is bit-exact against the golden model — the knob trades execution
 # strategy, never results.
-CACHE_BACKENDS = ("scan", "pallas")
+CACHE_BACKENDS = ("scan", "pallas", "stack", "stack_pallas")
 
 
 @dataclass(frozen=True)
@@ -150,9 +160,12 @@ class HardwareConfig:
     # SHARED topology: ``onchip`` is the one shared last-level memory.
     onchip: OnChipMemory = field(default_factory=OnChipMemory)
     offchip: OffChipMemory = field(default_factory=OffChipMemory)
-    # Simulator-engine knob (not a hardware parameter): which cache-scan
-    # backend classifies set-associative accesses. See CACHE_BACKENDS.
-    cache_backend: str = "scan"
+    # Simulator-engine knob (not a hardware parameter): which cache-engine
+    # backend classifies set-associative accesses. See CACHE_BACKENDS. The
+    # default "stack" classifies LRU analytically (one stack-distance pass
+    # covers every associativity) and falls back to "scan" for non-stack
+    # replacement policies — results are bit-exact across all backends.
+    cache_backend: str = "stack"
 
     def cycles_to_seconds(self, cycles: float) -> float:
         return cycles / (self.clock_ghz * 1e9)
@@ -209,10 +222,12 @@ class HardwareConfig:
         return dataclasses.replace(self, **kw)
 
     def with_cache_backend(self, backend: str) -> "HardwareConfig":
-        """Select the cache-engine backend ("scan" | "pallas").
+        """Select the cache-engine backend (see ``CACHE_BACKENDS``).
 
         Results are bit-exact across backends (test-enforced); this only
-        chooses how the set-associative scan executes.
+        chooses how set-associative classification executes. The "stack"
+        variants apply to LRU and transparently fall back to scan/pallas for
+        non-stack policies.
         """
         if backend not in CACHE_BACKENDS:
             raise ValueError(

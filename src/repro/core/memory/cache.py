@@ -23,13 +23,19 @@ optimizations keep it fast while remaining bit-exact (both tested):
      wastes at most ~2x in padding, while the power-of-two rule keeps the
      compiled-shape count logarithmic (test-enforced).
 
-Backends: the scan engine above (``cache_backend="scan"``, default) and a
-Pallas kernel (``cache_backend="pallas"``, ``kernels/cache_scan.py``) that
-keeps the (tags, meta) set-group state in VMEM and walks the padded
-sub-trace in-kernel. Both run through the same set-group partitioning and
-length bucketing and are bit-exact against ``golden.GoldenCache``
-(test-enforced); the Pallas path falls back to interpret mode off-TPU so
-CPU CI exercises it end to end.
+Backends: the scan engine above (``cache_backend="scan"``), a Pallas kernel
+(``cache_backend="pallas"``, ``kernels/cache_scan.py``) that keeps the
+(tags, meta) set-group state in VMEM and walks the padded sub-trace
+in-kernel, and the analytic stack-distance engine for LRU
+(``cache_backend="stack"``, the default — ``memory/stack.py``; LRU is a
+stack algorithm, so one sort-based distance pass per (stream, num_sets)
+classifies every associativity with no sequential scan, plus a Pallas
+distance-kernel variant ``"stack_pallas"``, ``kernels/stack_distance.py``).
+Non-stack policies (srrip, fifo) transparently fall back from the stack
+variants to scan/pallas. Scan and pallas run through the same set-group
+partitioning and length bucketing; ALL backends are bit-exact against
+``golden.GoldenCache`` (test-enforced); the Pallas paths fall back to
+interpret mode off-TPU so CPU CI exercises them end to end.
 
 Replacement semantics (matching ChampSim):
   * LRU   — victim = first invalid way, else least-recently-used way.
@@ -59,7 +65,11 @@ _POLICY_IDS = {"lru": 0, "srrip": 1, "fifo": 2}
 # 128 GB); guarded in simulate_cache. Avoids requiring jax_enable_x64.
 ITYPE = jnp.int32
 
-_GROUP_SETS = 32        # sets per scan group (carry = 32 x ways ints x 2)
+_GROUP_SETS = 16        # sets per scan group (carry = 16 x ways ints x 2).
+                        # Halving from 32 halves the sequential step count per
+                        # bucket (sub-traces split finer) at the cost of twice
+                        # the vmapped rows — a measured ~25% win on CPU where
+                        # per-step overhead dominates (BENCH_cache_kernel).
 _MIN_BUCKET = 64        # smallest padded sub-trace length (<= ~2x padding)
 _SCAN_UNROLL = 8        # loop unroll for the tiny per-access scan body
 
@@ -185,6 +195,29 @@ def _bucket_len(n: int) -> int:
     return b
 
 
+def _validate(policy: str, backend: str) -> None:
+    if policy not in _POLICY_IDS:
+        raise ValueError(f"unknown policy {policy!r}; options: {sorted(_POLICY_IDS)}")
+    if backend not in CACHE_BACKENDS:
+        raise ValueError(
+            f"unknown cache backend {backend!r}; options: {CACHE_BACKENDS}"
+        )
+
+
+def _effective_backend(policy: str, backend: str) -> str:
+    """Resolve the stack variants per policy.
+
+    Only LRU is a stack algorithm; under ``"stack"``/``"stack_pallas"`` the
+    non-stack policies (srrip, fifo) transparently fall back to the
+    corresponding scan engine — the backend knob can never change results.
+    """
+    if backend == "stack":
+        return "stack" if policy == "lru" else "scan"
+    if backend == "stack_pallas":
+        return "stack_pallas" if policy == "lru" else "pallas"
+    return backend
+
+
 def simulate_cache(
     lines: np.ndarray | jax.Array,
     geometry: CacheGeometry,
@@ -241,14 +274,8 @@ def _run_buckets(lines_list, geometries, policy: str, backend: str):
 
     Yields ``(tasks, hits, evicts)`` per bucket with hits/evicts still
     DEVICE-resident ``(B, L)`` arrays — callers decide when to sync.
+    ``backend`` must already be resolved (scan | pallas | stack_pallas).
     """
-    if policy not in _POLICY_IDS:
-        raise ValueError(f"unknown policy {policy!r}; options: {sorted(_POLICY_IDS)}")
-    if backend not in CACHE_BACKENDS:
-        raise ValueError(
-            f"unknown cache backend {backend!r}; options: {CACHE_BACKENDS}"
-        )
-
     tasks = _build_tasks(lines_list, geometries)
     buckets: "dict[tuple, list]" = {}
     for t in tasks:
@@ -274,6 +301,14 @@ def _run_buckets(lines_list, geometries, policy: str, backend: str):
                     jnp.asarray(s_b), jnp.asarray(t_b), jnp.asarray(v_b),
                     S_g, W, policy,
                 )
+            elif backend == "stack_pallas":
+                from ...kernels.stack_distance import stack_distance_groups
+
+                d, e = stack_distance_groups(
+                    jnp.asarray(s_b), jnp.asarray(t_b), jnp.asarray(v_b),
+                    S_g, W,
+                )
+                h = d < W
             else:
                 h, e = _simulate_many(
                     jnp.asarray(s_b), jnp.asarray(t_b), jnp.asarray(v_b),
@@ -302,9 +337,23 @@ def simulate_cache_many(
     ``backend="pallas"``). A DSE sweep evaluating many same-(ways, policy)
     capacities therefore pays per *shape*, not per config.
     """
+    _validate(policy, backend)
     lines_list = [np.asarray(s, dtype=np.int64).reshape(-1) for s in streams]
     if len(lines_list) != len(geometries):
         raise ValueError("streams and geometries length mismatch")
+    backend = _effective_backend(policy, backend)
+    if backend == "stack":
+        from .stack import classify_lru_stack_many
+
+        return [
+            CacheResult(
+                hits=h,
+                num_hits=int(h.sum()),
+                num_misses=h.size - int(h.sum()),
+                num_evictions=ev,
+            )
+            for h, ev in classify_lru_stack_many(lines_list, geometries)
+        ]
 
     hits_out = [np.zeros(l.size, dtype=bool) for l in lines_list]
     evict_out = [0] * len(lines_list)
@@ -344,10 +393,18 @@ def classify_streams(
     same bucketed device dispatches as ``simulate_cache_many``, but skips
     eviction accounting and performs exactly ONE blocking device->host
     extraction per bucket — the single sync point of the classify stage.
+    Under the ``stack`` backend LRU classifies through shared analytic
+    stack-distance passes instead (one per (stream, num_sets)).
     """
+    _validate(policy, backend)
     lines_list = [np.asarray(s, dtype=np.int64).reshape(-1) for s in streams]
     if len(lines_list) != len(geometries):
         raise ValueError("streams and geometries length mismatch")
+    backend = _effective_backend(policy, backend)
+    if backend == "stack":
+        from .stack import classify_lru_stack_many
+
+        return [h for h, _ in classify_lru_stack_many(lines_list, geometries)]
     hits_out = [np.zeros(l.size, dtype=bool) for l in lines_list]
     for ts, h_d, _ in _run_buckets(lines_list, geometries, policy, backend):
         with stage("host_sync"):

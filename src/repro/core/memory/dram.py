@@ -23,10 +23,15 @@ in the memory-bound regime). The scan therefore steps over *chunks* — runs
 of up to ``lines_per_block`` same-(bank, block) accesses — carrying the
 identical f32 state chain, which cuts the sequential step count ~8x for
 vector-granular miss bursts while remaining bit-exact with the per-access
-scan (the in-chunk completions are reconstructed by the same sequence of f32
-adds). Per-access completions/row-hits are extracted once per dispatch
-(single host sync), and per-segment aggregates are reduced on the host in
-original access order, so they are independent of padding layout.
+scan. Everything around the scan is run/chunk-granular too: FR-FCFS
+ordering argsorts block *runs* (~8x fewer elements) and expands back —
+bitwise identical to line-level ordering — and the single host sync per
+dispatch extracts per-CHUNK first completions, with in-chunk completions
+replayed on the host via the same sequence of IEEE f32 adds. Per-segment
+aggregates are reduced on the host in original access order, so they are
+independent of padding layout and of which other segments share a dispatch
+— which is what makes cross-configuration batching (``DramRequest`` /
+``dram_timing_many``) a pure dispatch-count optimization.
 
 ``estimate_dram_fast`` is a closed-form vectorized estimate (per-channel bus
 occupancy vs per-bank row-op serialization) used by the engine for very long
@@ -100,7 +105,11 @@ class DramModel:
         (one activate per vector), fine interleave spreads it across channels
         (activate per line) — a first-class EONSim config knob.
         """
-        blk = lines // self.lines_per_block
+        return self.decompose_blocks(lines // self.lines_per_block)
+
+    def decompose_blocks(self, blk: np.ndarray):
+        """block -> (channel, bank, row); every line of a block shares these,
+        so run-compressed paths decompose once per block run, not per line."""
         ch = (blk % self.channels).astype(np.int32)
         in_ch = blk // self.channels
         bk = (in_ch % self.banks_per_channel).astype(np.int32)
@@ -332,35 +341,6 @@ def _scan_channel_chunked(
     return jax.vmap(one_row)(bkc, rowc, kc, valid)
 
 
-@functools.partial(jax.jit, static_argnames=("k_max",))
-def _expand_chunks(
-    done0: jax.Array,    # (R, Lc) first-access completion per chunk (no CAS)
-    hit0: jax.Array,     # (R, Lc) first-access row hit per chunk
-    kc: jax.Array,       # (R, Lc)
-    valid: jax.Array,    # (R, Lc)
-    k_max: int,
-    t_cas: float,
-    bus_cycles_per_line: float,
-):
-    """Per-access completions (incl. CAS) and row hits from chunk results.
-
-    Position j of a chunk completes at ``done0 + j sequential f32 adds`` of
-    the bus occupancy — the same op chain the per-access scan applies — and
-    every in-chunk access after the first is a row hit by construction.
-    Invalid positions report 0 / False (matching the padded per-access scan).
-    """
-    ds = [done0]
-    for _ in range(1, k_max):
-        ds.append(ds[-1] + bus_cycles_per_line)
-    d = jnp.stack(ds, axis=-1)                              # (R, Lc, K)
-    pos = jax.lax.iota(jnp.int32, k_max)[None, None, :]
-    posv = (pos < kc[..., None]) & valid[..., None]
-    done = jnp.where(posv, d + t_cas, 0.0)
-    hit = posv & ((pos > 0) | hit0[..., None])
-    R = done.shape[0]
-    return done.reshape(R, -1), hit.reshape(R, -1)
-
-
 def _chunk_bucket_len(n: int) -> int:
     """Power-of-two padding for chunk rows (compiled-shape reuse)."""
     b = 64
@@ -499,11 +479,13 @@ def simulate_dram_contended(
     last completion cycle (0.0 where a source issued nothing), so per-core
     DRAM stall under contention is directly observable.
 
-    Engine: FR-FCFS ordering on the host, then ONE chunked device scan over
-    all (segment, channel) rows (``_scan_channel_chunked``), then a single
-    device->host extraction of per-access completions/row-hits. Per-segment
-    aggregates are reduced on the host in original access order, so they are
-    identical whether a segment is timed alone or inside a larger dispatch.
+    Engine: run-compressed FR-FCFS ordering on the host, then ONE chunked
+    device scan over all (segment, channel) rows (``_scan_channel_chunked``),
+    then a single chunk-granular device->host extraction; in-chunk
+    completions are replayed on the host with the identical f32 op chain.
+    Per-segment aggregates are reduced on the host in original access order,
+    so they are identical whether a segment is timed alone or inside a
+    larger dispatch.
 
     Exactness: every per-access completion (hence ``finish_cycle``, the
     per-source ``finish`` attribution, and all row-hit counts) is bitwise
@@ -525,34 +507,53 @@ def simulate_dram_contended(
     n_seg = np.bincount(seg, minlength=num_segments)
 
     with stage("dram"):
-        ch, bk, row = model.decompose(lines)
         blk = lines // model.lines_per_block
-        order = _frfcfs_order(ch, bk, blk, model.banks_per_channel, C, seg=seg)
+        # Run compression: maximal stretches of same-(segment, block) lines
+        # in arrival order share one (channel, bank, row) and identical
+        # FR-FCFS keys, so ordering operates on RUNS (~8x fewer elements for
+        # vector-expanded miss bursts — the argsorts were the host hot spot)
+        # and expands back. Stability keeps a run's lines consecutive and
+        # per-bank arrival order intact, and block-instance counting over
+        # runs merges adjacent same-block runs exactly like the per-line
+        # derivation, so the expanded service order is bitwise identical to
+        # line-level ordering (test-enforced vs the golden DRAM model).
+        new_run0 = np.ones(n, dtype=bool)
+        new_run0[1:] = (seg[1:] != seg[:-1]) | (blk[1:] != blk[:-1])
+        rstart = np.nonzero(new_run0)[0]
+        nr = rstart.size
+        rlen = np.diff(np.append(rstart, n))
+        rblk = blk[rstart]
+        rseg = seg[rstart]
+        rch, rbk, rrow = model.decompose_blocks(rblk)
+        order_r = _frfcfs_order(
+            rch, rbk, rblk, model.banks_per_channel, C, seg=rseg
+        )
 
-        # Chunking: runs of same-(bank, block) accesses are consecutive in
-        # FR-FCFS order; cap them at the interleave-block size so the chunk
-        # length is a compile-time constant. Splitting a longer run is exact
-        # (the split point sees bank_free == bus_free == previous done).
-        chq_s = (seg * C + ch)[order]
-        bk_s = bk[order]
-        blk_s = blk[order]
+        # Expand the run order to the per-line service order.
+        rlen_o = rlen[order_r]
+        off_o = np.cumsum(rlen_o) - rlen_o       # line offset of each run
+        run_of_line = np.repeat(np.arange(nr), rlen_o)
+        within = np.arange(n) - off_o[run_of_line]
+        order = rstart[order_r][run_of_line] + within
+
+        # Chunking: FR-FCFS keeps a block's accesses consecutive; adjacent
+        # ordered runs with the same (segment-qualified channel, block) are
+        # one service run. Cap chunks at the interleave-block size so the
+        # chunk length is a compile-time constant — splitting a longer run
+        # is exact (the split point sees bank_free == bus_free == prev done).
+        chq_o = rseg[order_r] * C + rch[order_r]
+        blk_o = rblk[order_r]
+        new_merged = np.ones(nr, dtype=bool)
+        new_merged[1:] = (chq_o[1:] != chq_o[:-1]) | (blk_o[1:] != blk_o[:-1])
+        mstart = np.maximum.accumulate(np.where(new_merged, off_o, 0))
+        pos_in_run = np.arange(n) - mstart[run_of_line]
         k_max = max(1, min(model.lines_per_block, 8))
-        new_run = np.ones(n, dtype=bool)
-        new_run[1:] = (
-            (chq_s[1:] != chq_s[:-1])
-            | (bk_s[1:] != bk_s[:-1])
-            | (blk_s[1:] != blk_s[:-1])
-        )
-        run_start = np.maximum.accumulate(
-            np.where(new_run, np.arange(n), 0)
-        )
-        pos_in_run = np.arange(n) - run_start
         new_chunk = pos_in_run % k_max == 0
         chunk_id = np.cumsum(new_chunk) - 1
         n_chunks = int(chunk_id[-1]) + 1
         chunk_start = np.nonzero(new_chunk)[0]
         k_of = np.diff(np.append(chunk_start, n)).astype(np.int32)
-        cchq = chq_s[chunk_start]
+        cchq = chq_o[run_of_line[chunk_start]]
 
         R = num_segments * C
         chunks_per_row = np.bincount(cchq, minlength=R)
@@ -565,15 +566,13 @@ def simulate_dram_contended(
         k_m = np.zeros((R, Lc), dtype=np.int32)
         va_m = np.zeros((R, Lc), dtype=bool)
         cflat = cchq * Lc + col_of_chunk
-        bk_m.reshape(-1)[cflat] = bk_s[chunk_start]
-        row_m.reshape(-1)[cflat] = row[order[chunk_start]]
+        bk_m.reshape(-1)[cflat] = rbk[order_r][run_of_line[chunk_start]]
+        row_m.reshape(-1)[cflat] = rrow[order_r][run_of_line[chunk_start]]
         k_m.reshape(-1)[cflat] = k_of
         va_m.reshape(-1)[cflat] = True
-        # slot of each ordered access in the (R, Lc, k_max) expansion
-        aflat = cflat[chunk_id] * k_max + (pos_in_run % k_max)
 
         bus_cyc = float(model.line_bytes / model.chan_bytes_per_cycle)
-        done0, hit0 = _scan_channel_chunked(
+        done0_d, hit0_d = _scan_channel_chunked(
             jnp.asarray(bk_m),
             jnp.asarray(row_m),
             jnp.asarray(k_m),
@@ -583,36 +582,60 @@ def simulate_dram_contended(
             float(model.t_rp + model.t_rcd),
             bus_cyc,
         )
-        done_f, hit_f = _expand_chunks(
-            done0, hit0, jnp.asarray(k_m), jnp.asarray(va_m),
-            k_max, float(model.t_cas), bus_cyc,
-        )
         if _profiling_active():
             # Attribute async device compute to "dram", not to the
             # extraction below (profiling sessions only).
-            jax.block_until_ready((done_f, hit_f))
+            jax.block_until_ready((done0_d, hit0_d))
 
     with stage("host_sync"):
-        done_flat = np.asarray(done_f).reshape(-1)
-        hit_flat = np.asarray(hit_f).reshape(-1)
+        # CHUNK-granular extraction: (R, Lc) first-access completions + row
+        # hits — k_max times smaller than per-access arrays; the in-chunk
+        # completions are reconstructed below with the identical f32 op chain.
+        done0_flat = np.asarray(done0_d).reshape(-1)
+        hit0_flat = np.asarray(hit0_d).reshape(-1)
 
     with stage("dram"):
-        # Per-access values back in original order; every aggregate below is
-        # a deterministic host reduction over that order, independent of the
-        # padded dispatch layout.
+        bus32 = np.float32(bus_cyc)
+        cas32 = np.float32(model.t_cas)
+        done0_chunk = done0_flat[cflat]                       # f32 per chunk
+        hit0_chunk = hit0_flat[cflat]
+
+        # Per-access completion = chunk's first completion + j sequential f32
+        # adds of the bus occupancy + t_cas — the exact op chain the device
+        # expansion applied, replayed on the host (IEEE f32 either way), so
+        # every derived value is bitwise unchanged.
+        j_of = (pos_in_run % k_max).astype(np.int32)
+        val = done0_chunk[chunk_id]
+        for step in range(1, k_max):
+            val = np.where(j_of >= step, val + bus32, val)
         done_acc = np.zeros(n, dtype=np.float64)
-        done_acc[order] = done_flat[aflat]
-        hit_acc = np.zeros(n, dtype=np.int64)
-        hit_acc[order] = hit_flat[aflat]
-
-        key = seg * num_sources + src
-        np.maximum.at(finish.reshape(-1), key, done_acc)
-        finish[finish > 0] += model.base_latency
-
+        done_acc[order] = val + cas32
         lat_seg = np.bincount(seg, weights=done_acc, minlength=num_segments)
-        hit_seg = np.bincount(seg, weights=hit_acc, minlength=num_segments)
+
+        # Maxima and row-hit counts reduce at CHUNK granularity — bitwise
+        # identical to the per-access reductions (completions increase within
+        # a chunk, so the chunk-last access carries the max; every in-chunk
+        # access after the first is a row hit by construction) at ~k_max
+        # fewer elements for the slow ufunc.at scatters.
+        vlast = done0_chunk
+        kk = k_of - 1
+        for step in range(1, k_max):
+            vlast = np.where(kk >= step, vlast + bus32, vlast)
+        done_last = (vlast + cas32).astype(np.float64)
+        hit_chunk = hit0_chunk.astype(np.int64) + (k_of - 1)
+        seg_chunk = seg[order[chunk_start]]
+        hit_seg = np.bincount(seg_chunk, weights=hit_chunk,
+                              minlength=num_segments)
         fin_seg = np.zeros(num_segments, dtype=np.float64)
-        np.maximum.at(fin_seg, seg, done_acc)
+        np.maximum.at(fin_seg, seg_chunk, done_last)
+        if num_sources == 1:
+            finish[:, 0] = fin_seg
+        else:
+            # A merged block run (hence a chunk) can interleave sources, so
+            # per-source maxima need the per-access completions.
+            key = seg * num_sources + src
+            np.maximum.at(finish.reshape(-1), key, done_acc)
+        finish[finish > 0] += model.base_latency
 
         results: List[DramResult] = []
         for s in range(num_segments):
@@ -749,6 +772,86 @@ def dram_timing_contended(
         present = np.bincount(src[mask], minlength=num_sources) > 0
         finish[s][present] = res.finish_cycle
     return out, finish
+
+
+@dataclass(frozen=True)
+class DramRequest:
+    """One deferred DRAM-timing dispatch — the unit of cross-config batching.
+
+    A request is exactly the argument tuple of ``dram_timing_contended``;
+    the sweep engine collects one per (memo key, embedding op) and pushes
+    all of them through ``dram_timing_many`` so same-model requests share
+    one event scan instead of one dispatch each.
+    """
+
+    lines: np.ndarray
+    seg: np.ndarray
+    src: np.ndarray
+    num_segments: int
+    num_sources: int
+    model: DramModel
+
+
+def dram_timing_single(req: DramRequest):
+    """Time one request (the unbatched reference path)."""
+    return dram_timing_contended(
+        req.lines, req.seg, req.src, req.num_segments, req.num_sources,
+        req.model,
+    )
+
+
+def dram_timing_many(requests: "list[DramRequest]", batch: bool = True):
+    """Time many independent requests; same-``DramModel`` requests share ONE
+    batched event scan.
+
+    Each request's segments are simply remapped into a disjoint range of one
+    concatenated ``dram_timing_contended`` call. Per-segment results are
+    independent of which other segments share a dispatch (FR-FCFS ordering is
+    segment-qualified, per-segment aggregation runs on the host in original
+    access order), so every request's results are bitwise identical to its
+    unbatched ``dram_timing_single`` dispatch — tests enforce this, including
+    the multi-core contended path. ``batch=False`` is that reference path.
+
+    Returns one ``(results, finish)`` pair per request, where ``finish`` is
+    sliced back to the request's own ``num_sources``.
+    """
+    out = [None] * len(requests)
+    if not batch:
+        return [dram_timing_single(r) for r in requests]
+    groups: "dict[tuple, list[int]]" = {}
+    for i, r in enumerate(requests):
+        # Group by model AND estimated padded row length: co-dispatching a
+        # tiny miss trace with a huge one would pad the tiny one's
+        # (segment, channel) rows to the huge one's chunk count. The estimate
+        # only shapes the grouping — results are exact for any grouping.
+        n_req = np.asarray(r.lines).size
+        est_row = max(1, n_req // max(1, r.num_segments * r.model.channels
+                                      * max(1, min(r.model.lines_per_block, 8))))
+        groups.setdefault((r.model, _chunk_bucket_len(est_row)), []).append(i)
+    for (model, _), idxs in groups.items():
+        if len(idxs) == 1:
+            out[idxs[0]] = dram_timing_single(requests[idxs[0]])
+            continue
+        reqs = [requests[i] for i in idxs]
+        with stage("dram"):
+            offsets = np.cumsum([0] + [r.num_segments for r in reqs])
+            lines = np.concatenate([
+                np.asarray(r.lines, dtype=np.int64).reshape(-1) for r in reqs
+            ])
+            seg = np.concatenate([
+                np.asarray(r.seg, dtype=np.int64).reshape(-1) + off
+                for r, off in zip(reqs, offsets[:-1])
+            ])
+            src = np.concatenate([
+                np.asarray(r.src, dtype=np.int64).reshape(-1) for r in reqs
+            ])
+            num_sources = max(r.num_sources for r in reqs)
+        results, finish = dram_timing_contended(
+            lines, seg, src, int(offsets[-1]), num_sources, model
+        )
+        for i, r, lo, hi in zip(idxs, reqs, offsets[:-1], offsets[1:]):
+            out[i] = (results[lo:hi], finish[lo:hi, :r.num_sources].copy())
+    return out
 
 
 def bulk_transfer_cycles(data_bytes: float, hw: HardwareConfig) -> float:

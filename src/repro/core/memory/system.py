@@ -50,7 +50,7 @@ in global trace order for DRAM timing.
 from __future__ import annotations
 
 from dataclasses import dataclass
-from typing import Dict, List, Optional, Sequence, Union
+from typing import Callable, Dict, List, Optional, Sequence, Union
 
 import numpy as np
 
@@ -68,8 +68,9 @@ from ..workload import EmbeddingOpSpec
 from .cache import CacheGeometry
 from .dram import (
     DramModel,
-    dram_timing_contended,
-    dram_timing_segmented,
+    DramRequest,
+    dram_timing_many,
+    dram_timing_single,
 )
 from .policies import (
     MemoryPolicy,
@@ -293,6 +294,26 @@ class _PreparedStream:
     acc_batch: np.ndarray            # batch of each stream access
     use_lane: bool
     at: Optional[AddressTrace]       # line trace (line-granular path only)
+
+
+@dataclass
+class PendingEmbedding:
+    """A classified embedding op whose DRAM timing has not yet run.
+
+    ``request`` is the deferred ``dram_timing_contended`` dispatch; the sweep
+    engine collects requests across every memoized configuration and times
+    them through ONE batched ``dram_timing_many`` call, then ``finalize``
+    assembles per-batch stats from the request's results. Classification and
+    stats assembly are thereby decoupled from when (and with whom) DRAM
+    timing executes — results are bit-exact either way (segments are
+    independent; test-enforced).
+    """
+
+    request: DramRequest
+    _finalize: Callable
+
+    def finalize(self, drams, finish) -> "List[EmbeddingBatchStats]":
+        return self._finalize(drams, finish)
 
 
 # --------------------------------------------------------------------------
@@ -553,6 +574,31 @@ class MemorySystem:
             stats.append(s)
         return stats
 
+    # -- deferred-DRAM pipeline ---------------------------------------------
+    def prepare_embedding(
+        self,
+        etrace: EmbeddingTrace,
+        pinned_lines: Optional[np.ndarray] = None,
+        allow_lane: bool = True,
+    ) -> PendingEmbedding:
+        """Classify all batches and package the deferred DRAM dispatch."""
+        cs = self.classify_embedding(etrace, pinned_lines, allow_lane)
+        return self._pending(etrace, cs)
+
+    def _pending(self, etrace: EmbeddingTrace, cs: ClassifiedStream) -> PendingEmbedding:
+        req = DramRequest(
+            lines=cs.miss_lines,
+            seg=cs.miss_batch,
+            src=np.zeros(cs.miss_lines.size, dtype=np.int64),
+            num_segments=cs.num_batches,
+            num_sources=1,
+            model=self.dram,
+        )
+        return PendingEmbedding(
+            request=req,
+            _finalize=lambda drams, finish: self._assemble_stats(etrace, cs, drams),
+        )
+
     # -- multi-batch embedding-op pipeline ----------------------------------
     def simulate_embedding(
         self,
@@ -566,11 +612,38 @@ class MemorySystem:
         ``allow_lane=False`` forces the line-granular path (used by parity
         tests; results are identical when the lane transform applies).
         """
-        cs = self.classify_embedding(etrace, pinned_lines, allow_lane)
-        drams = dram_timing_segmented(
-            cs.miss_lines, cs.miss_batch, cs.num_batches, self.dram
-        )
-        return self._assemble_stats(etrace, cs, drams)
+        p = self.prepare_embedding(etrace, pinned_lines, allow_lane)
+        return p.finalize(*dram_timing_single(p.request))
+
+
+def prepare_embedding_many(
+    systems: Sequence[MemorySystem],
+    etrace: EmbeddingTrace,
+    allow_lane: bool = True,
+) -> List[PendingEmbedding]:
+    """Batched classification across configurations of ONE policy, with DRAM
+    timing deferred.
+
+    All systems must share the same registered policy (and carry no policy
+    mix); their classification runs through ``MemoryPolicy.run_many``, which
+    fuses same-shape cache scans into single vmapped dispatches and shares
+    stack-distance passes (the DSE sweep fast path). Per-system results are
+    bit-exact with independent ``prepare_embedding`` calls — tests enforce
+    this end to end.
+    """
+    if not systems:
+        return []
+    policy = systems[0].policy
+    if any(ms.policy is not policy for ms in systems):
+        raise ValueError("prepare_embedding_many requires one shared policy")
+    if any(ms.hw.onchip.policy_mix for ms in systems):
+        raise ValueError("policy-mix configs must use the unbatched path")
+    preps = [ms._prepare_stream(etrace, None, allow_lane) for ms in systems]
+    outs = policy.run_many([p.stream for p in preps], [p.ctx for p in preps])
+    return [
+        ms._pending(etrace, ms._account(etrace, prep, out, None))
+        for ms, prep, out in zip(systems, preps, outs)
+    ]
 
 
 def simulate_embedding_many(
@@ -578,31 +651,13 @@ def simulate_embedding_many(
     etrace: EmbeddingTrace,
     allow_lane: bool = True,
 ) -> List[List[EmbeddingBatchStats]]:
-    """Batched ``simulate_embedding`` across configurations of ONE policy.
-
-    All systems must share the same registered policy (and carry no policy
-    mix); their classification scans run through ``MemoryPolicy.run_many``,
-    which fuses same-shape cache scans into single vmapped dispatches (the
-    DSE sweep fast path). Per-system results are bit-exact with independent
-    ``simulate_embedding`` calls — tests enforce this end to end.
-    """
-    if not systems:
-        return []
-    policy = systems[0].policy
-    if any(ms.policy is not policy for ms in systems):
-        raise ValueError("simulate_embedding_many requires one shared policy")
-    if any(ms.hw.onchip.policy_mix for ms in systems):
-        raise ValueError("policy-mix configs must use the unbatched path")
-    preps = [ms._prepare_stream(etrace, None, allow_lane) for ms in systems]
-    outs = policy.run_many([p.stream for p in preps], [p.ctx for p in preps])
-    results: List[List[EmbeddingBatchStats]] = []
-    for ms, prep, out in zip(systems, preps, outs):
-        cs = ms._account(etrace, prep, out, None)
-        drams = dram_timing_segmented(
-            cs.miss_lines, cs.miss_batch, cs.num_batches, ms.dram
-        )
-        results.append(ms._assemble_stats(etrace, cs, drams))
-    return results
+    """Batched ``simulate_embedding`` across configurations of ONE policy:
+    ``prepare_embedding_many`` + one batched DRAM dispatch."""
+    pending = prepare_embedding_many(systems, etrace, allow_lane)
+    return [
+        p.finalize(*out)
+        for p, out in zip(pending, dram_timing_many([p.request for p in pending]))
+    ]
 
 
 # --------------------------------------------------------------------------
@@ -641,17 +696,20 @@ class MultiCoreMemorySystem:
     def dram(self) -> DramModel:
         return self.core.dram
 
-    def simulate_embedding(
+    def prepare_embedding(
         self,
         etrace: EmbeddingTrace,
         pinned_lines: Optional[np.ndarray] = None,
         allow_lane: bool = True,
-    ) -> List[EmbeddingBatchStats]:
+    ) -> PendingEmbedding:
+        """Classify every core's shard (or the shared stream) and package the
+        deferred contended-DRAM dispatch; ``finalize`` assembles the cluster
+        stats including the per-core detail."""
         hw = self.hw
         n = hw.num_cores
         if n == 1 and hw.topology == Topology.PRIVATE:
-            # Degenerate cluster == today's single-core path, bit-exact.
-            return self.core.simulate_embedding(etrace, pinned_lines, allow_lane)
+            # Degenerate cluster == the single-core path, bit-exact.
+            return self.core.prepare_embedding(etrace, pinned_lines, allow_lane)
 
         spec = etrace.spec
         concat = etrace.concat
@@ -718,40 +776,58 @@ class MultiCoreMemorySystem:
                 miss_pos=all_pos,
             )
 
-        drams, core_finish = dram_timing_contended(
-            merged.miss_lines, merged.miss_batch, miss_core, B, n, self.dram
+        def finalize(drams, core_finish) -> List[EmbeddingBatchStats]:
+            # Counts/DRAM fields follow the single-core accounting contract
+            # verbatim; only the cycle model (slowest core bounds the batch)
+            # and the per-core detail are cluster-specific overrides below.
+            stats = self.core._assemble_stats(etrace, merged, drams)
+            onchip_bw = max(hw.onchip.read_bw_bytes_per_cycle, 1)
+            lat = hw.onchip.latency_cycles
+            for b, s in enumerate(stats):
+                full_vector = s.vector_cycles
+                per_core: List[CoreBatchStats] = []
+                for c in range(n):
+                    if hw.topology == Topology.SHARED:
+                        # One LLC port streams every core's lines.
+                        oc = int(merged.reads[b]) * line / onchip_bw + lat
+                    else:
+                        oc = int(core_reads[c, b]) * line / onchip_bw + lat
+                    vc = full_vector * core_lookups[c, b] / total_lookups[b]
+                    per_core.append(CoreBatchStats(
+                        core_id=c,
+                        lookups=int(core_lookups[c, b]),
+                        onchip_reads=int(core_reads[c, b]),
+                        cache_misses=int(core_miss[c, b]),
+                        onchip_cycles=oc,
+                        vector_cycles=vc,
+                        dram_finish_cycles=float(core_finish[b, c]),
+                    ))
+                s.onchip_cycles = max(pc.onchip_cycles for pc in per_core)
+                s.vector_cycles = max(pc.vector_cycles for pc in per_core)
+                s.per_core = per_core
+                s.cycles = max(s.onchip_cycles, s.dram_cycles, s.vector_cycles)
+            return stats
+
+        return PendingEmbedding(
+            request=DramRequest(
+                lines=merged.miss_lines,
+                seg=merged.miss_batch,
+                src=np.asarray(miss_core, dtype=np.int64),
+                num_segments=B,
+                num_sources=n,
+                model=self.dram,
+            ),
+            _finalize=finalize,
         )
 
-        # Counts/DRAM fields follow the single-core accounting contract
-        # verbatim; only the cycle model (slowest core bounds the batch) and
-        # the per-core detail are cluster-specific overrides below.
-        stats = self.core._assemble_stats(etrace, merged, drams)
-        onchip_bw = max(hw.onchip.read_bw_bytes_per_cycle, 1)
-        lat = hw.onchip.latency_cycles
-        for b, s in enumerate(stats):
-            full_vector = s.vector_cycles
-            per_core: List[CoreBatchStats] = []
-            for c in range(n):
-                if hw.topology == Topology.SHARED:
-                    # One LLC port streams every core's lines.
-                    oc = int(merged.reads[b]) * line / onchip_bw + lat
-                else:
-                    oc = int(core_reads[c, b]) * line / onchip_bw + lat
-                vc = full_vector * core_lookups[c, b] / total_lookups[b]
-                per_core.append(CoreBatchStats(
-                    core_id=c,
-                    lookups=int(core_lookups[c, b]),
-                    onchip_reads=int(core_reads[c, b]),
-                    cache_misses=int(core_miss[c, b]),
-                    onchip_cycles=oc,
-                    vector_cycles=vc,
-                    dram_finish_cycles=float(core_finish[b, c]),
-                ))
-            s.onchip_cycles = max(pc.onchip_cycles for pc in per_core)
-            s.vector_cycles = max(pc.vector_cycles for pc in per_core)
-            s.per_core = per_core
-            s.cycles = max(s.onchip_cycles, s.dram_cycles, s.vector_cycles)
-        return stats
+    def simulate_embedding(
+        self,
+        etrace: EmbeddingTrace,
+        pinned_lines: Optional[np.ndarray] = None,
+        allow_lane: bool = True,
+    ) -> List[EmbeddingBatchStats]:
+        p = self.prepare_embedding(etrace, pinned_lines, allow_lane)
+        return p.finalize(*dram_timing_single(p.request))
 
 
 def memory_system_for(

@@ -21,11 +21,21 @@ one pass while staying **bit-exact** with independent ``simulate()`` calls
     way, so JAX jit caches are shared across grid points with the same
     (ways, policy) shape signature instead of recompiling per config.
   * **Vmapped scan batching** — all distinct single-core grid points of one
-    cache-engine policy classify through ``simulate_embedding_many``: their
+    cache-engine policy classify through ``prepare_embedding_many``: their
     set-group sub-scans are bucketed by padded shape and each bucket runs as
     ONE vmapped dispatch instead of one dispatch per (config, group)
     (``batch_scans=False`` falls back to per-config scans; results are
     bit-exact either way).
+  * **Stack-distance sharing** — under the default ``cache_backend="stack"``
+    the LRU grid points classify analytically: one stack-distance pass per
+    (stream, num_sets) covers EVERY associativity in the grid (Mattson
+    inclusion), no sequential scan at all; srrip/fifo fall back to the scan
+    engine transparently.
+  * **Cross-config DRAM batching** — classification and DRAM timing are
+    decoupled (``PendingEmbedding``): every memo key's miss-trace dispatch
+    of a (workload, zipf) slice runs through ONE ``dram_timing_many`` call,
+    bit-exact vs per-key dispatch (``batch_dram=False`` is that reference
+    path).
 
 The grid also spans the CoreCluster axes: ``num_cores`` and ``topologies``
 (private per-core on-chip vs shared LLC) sweep through the multi-core
@@ -60,11 +70,12 @@ from .engine import (
     summarize_matrix_ops,
 )
 from .hardware import HardwareConfig, OnChipPolicy, Topology, tpuv6e
+from .memory.dram import dram_timing_many
 from .memory.policies import available_policies
 from .memory.system import (
     MemorySystem,
     memory_system_for,
-    simulate_embedding_many,
+    prepare_embedding_many,
 )
 from .results import SimResult
 from .workload import Workload
@@ -179,6 +190,7 @@ def sweep(
     num_cores: Optional[Sequence[int]] = None,
     topologies: Optional[Sequence[Union[str, Topology]]] = None,
     batch_scans: bool = True,
+    batch_dram: bool = True,
 ) -> SweepResult:
     """Evaluate the (workload x zipf x policy x capacity x ways x num_cores
     x topology) grid.
@@ -247,8 +259,11 @@ def sweep(
                     pending[key] = ms
 
             # Batched classification: distinct single-core cache-engine keys
-            # of ONE policy share a vmapped dispatch per scan shape
-            # (simulate_embedding_many); everything else runs per key.
+            # of ONE policy share a vmapped dispatch per scan shape — and,
+            # under the stack backend, one stack-distance pass per
+            # (stream, num_sets) (prepare_embedding_many); everything else
+            # classifies per key. DRAM timing is deferred throughout.
+            prepared: Dict[tuple, list] = {}   # key -> PendingEmbedding/etrace
             by_policy: Dict[str, list] = {}
             for key, ms in pending.items():
                 if (
@@ -265,15 +280,28 @@ def sweep(
                 systems = [m for _, m in batch]
                 per_key = [[] for _ in systems]
                 for et in etraces:
-                    for i, stats in enumerate(
-                        simulate_embedding_many(systems, et)
+                    for i, p in enumerate(
+                        prepare_embedding_many(systems, et)
                     ):
-                        per_key[i].append(stats)
-                for k, stats in zip(keys, per_key):
-                    stats_memo[k] = stats
+                        per_key[i].append(p)
+                for k, ps in zip(keys, per_key):
+                    prepared[k] = ps
                     del pending[k]
             for key, ms in pending.items():
-                stats_memo[key] = [ms.simulate_embedding(et) for et in etraces]
+                prepared[key] = [ms.prepare_embedding(et) for et in etraces]
+
+            # Cross-memo-key DRAM batching: every deferred miss-trace dispatch
+            # of this (workload, zipf) slice — all policies, geometries, and
+            # cluster shapes — runs through ONE dram_timing_many call.
+            # Per-request results are bitwise identical to unbatched dispatch
+            # (batch_dram=False is that reference path; test-enforced).
+            key_order = list(prepared)
+            all_pending = [p for k in key_order for p in prepared[k]]
+            outs = iter(dram_timing_many(
+                [p.request for p in all_pending], batch=batch_dram
+            ))
+            for k in key_order:
+                stats_memo[k] = [p.finalize(*next(outs)) for p in prepared[k]]
 
             for pol, cap, w, nc, topo, hw, key in grid:
                 res = assemble_result(

@@ -1,0 +1,129 @@
+"""Pallas LRU stack-distance kernel (the TPU variant of the distance pass).
+
+``memory/stack.py`` computes exact LRU stack distances analytically (argsorts
+and prefix sums). This kernel is the VMEM-resident realization of the same
+distance pass for ``cache_backend="stack_pallas"``: per set-group sub-trace
+it keeps a *recency-ordered* tag list (way 0 = MRU) in VMEM scratch and walks
+the padded sub-trace in-kernel. For every access the position of its tag in
+the recency list IS the stack distance (capped at ``ways`` — larger distances
+are indistinguishable from a miss for every associativity this state covers);
+updating is one rotate-insert toward MRU, no timestamps.
+
+This is a deliberately different *shape* of implementation from both the
+``(tags, meta)`` cache-scan kernel and the analytic engine — agreement across
+the three (and ``GoldenCache``) is therefore meaningful, and is enforced by
+the differential fuzz tests in ``tests/test_cache_stack.py``. Off-TPU the
+kernel runs in interpret mode so CPU CI exercises the exact kernel program.
+
+Outputs: per-access capped distance (int32; hit for W ways iff ``dist < W``
+with ``W <= ways``) and the eviction flag (miss with a full set).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _stack_distance_kernel(
+    num_sets: int,
+    ways: int,
+    s_ref,        # (1, L) int32 local set index per access
+    t_ref,        # (1, L) int32 tag per access
+    v_ref,        # (1, L) int32 1 = real access, 0 = padding
+    dist_ref,     # (1, L) int32 out: stack distance, capped at ways
+    evict_ref,    # (1, L) int32 out: eviction performed
+    tags_ref,     # VMEM (num_sets, ways) int32 scratch: recency list, -1 empty
+):
+    L = s_ref.shape[1]
+    tags_ref[...] = jnp.full((num_sets, ways), -1, dtype=jnp.int32)
+    way_idx = jax.lax.broadcasted_iota(jnp.int32, (1, ways), 1)
+
+    def body(i, _):
+        s = s_ref[0, i]
+        tag = t_ref[0, i]
+        valid = v_ref[0, i] != 0
+
+        row = pl.load(tags_ref, (pl.dslice(s, 1), slice(None)))   # (1, W)
+        hit_vec = row == tag
+        found = jnp.any(hit_vec)
+        # Position of the tag in the recency list = capped stack distance.
+        pos = jnp.sum(
+            jnp.where(hit_vec, way_idx, 0), dtype=jnp.int32
+        )
+        dist = jnp.where(found, pos, jnp.int32(ways))
+
+        # Rotate-insert toward MRU: ways [1, limit] take their left
+        # neighbour, way 0 takes the tag; ways beyond the hit position (or
+        # everything on a miss, dropping the LRU way) stay put.
+        limit = jnp.where(found, pos, jnp.int32(ways - 1))
+        rolled = jnp.roll(row, 1, axis=1)
+        new_row = jnp.where(
+            way_idx == 0, tag, jnp.where(way_idx <= limit, rolled, row)
+        )
+        evict = valid & ~found & (row[0, ways - 1] >= 0)
+        new_row = jnp.where(valid, new_row, row)
+        pl.store(tags_ref, (pl.dslice(s, 1), slice(None)), new_row)
+
+        pl.store(
+            dist_ref, (slice(0, 1), pl.dslice(i, 1)),
+            jnp.where(valid, dist, jnp.int32(ways)).reshape(1, 1),
+        )
+        pl.store(
+            evict_ref, (slice(0, 1), pl.dslice(i, 1)),
+            evict.astype(jnp.int32).reshape(1, 1),
+        )
+        return 0
+
+    jax.lax.fori_loop(0, L, body, 0)
+
+
+@functools.lru_cache(maxsize=None)
+def _build_stack_distance(
+    num_sets: int, ways: int, B: int, L: int, interpret: bool
+):
+    """Memoized pallas_call per (geometry, batch shape) — bucketed sweeps
+    re-dispatch identical shapes, so the kernel closure is built once."""
+    kernel = functools.partial(_stack_distance_kernel, num_sets, ways)
+    row = pl.BlockSpec((1, L), lambda b: (b, 0))
+    return pl.pallas_call(
+        kernel,
+        grid=(B,),
+        in_specs=[row, row, row],
+        out_specs=[row, row],
+        out_shape=[
+            jax.ShapeDtypeStruct((B, L), jnp.int32),
+            jax.ShapeDtypeStruct((B, L), jnp.int32),
+        ],
+        scratch_shapes=[pltpu.VMEM((num_sets, ways), jnp.int32)],
+        interpret=interpret,
+    )
+
+
+def stack_distance_groups(
+    sets: jax.Array,      # (B, L) int32 local set index
+    tags: jax.Array,      # (B, L) int32 tag
+    valid: jax.Array,     # (B, L) bool
+    num_sets: int,
+    ways: int,
+    interpret: "bool | None" = None,
+):
+    """Run B padded set-group sub-traces through the distance kernel.
+
+    Returns device-resident ``(dist, evict)``: int32 distances capped at
+    ``ways`` (hit for W-way LRU iff ``dist < W``) and bool eviction flags.
+    ``interpret=None`` auto-selects interpret mode off-TPU.
+    """
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
+    B, L = sets.shape
+    call = _build_stack_distance(
+        int(num_sets), int(ways), int(B), int(L), bool(interpret)
+    )
+    dist, evict = call(
+        sets.astype(jnp.int32), tags.astype(jnp.int32), valid.astype(jnp.int32)
+    )
+    return dist, evict.astype(bool)

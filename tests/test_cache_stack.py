@@ -1,0 +1,262 @@
+"""Stack-distance cache backend + cross-config DRAM batcher: differential
+fuzz vs the ChampSim-semantics golden model and bit-exactness guarantees.
+
+The ``stack``/``stack_pallas`` backends are advertised as pure execution-
+strategy knobs: every hit/miss, eviction, DRAM row-hit, and finish-cycle
+count must be bitwise identical to the scan backend and ``GoldenCache`` —
+including adversarial geometries (1 set, 1 way, non-power-of-two ways) and
+the Mattson sharing property (every ways value of a grid classified from ONE
+distance pass). Likewise ``dram_timing_many`` must equal per-request
+dispatch, including the multi-core contended path.
+"""
+import numpy as np
+import pytest
+from _hypothesis_compat import given, settings, st
+
+from repro.core import dlrm_rmc2_small, simulate, sweep, tpuv6e
+from repro.core.hardware import OnChipPolicy
+from repro.core.memory import stack as stack_mod
+from repro.core.memory.cache import (
+    CacheGeometry,
+    simulate_cache,
+    simulate_cache_many,
+)
+from repro.core.memory.dram import (
+    DramModel,
+    DramRequest,
+    dram_timing_many,
+    dram_timing_single,
+)
+from repro.core.memory.golden import GoldenCache
+from repro.core.memory.stack import (
+    classify_lru_stack_many,
+    distance_pass_count,
+    stack_distances_jnp,
+    stack_distances_np,
+)
+
+GEOMETRIES = [
+    (1, 1, 6), (1, 4, 30), (3, 2, 50), (7, 5, 200), (32, 16, 4000),
+    (8, 3, 120), (33, 7, 500),          # non-pow2 ways / sets
+]
+
+
+@pytest.mark.parametrize("backend", ["stack", "stack_pallas"])
+@pytest.mark.parametrize("sets,ways,space", GEOMETRIES)
+def test_stack_bit_exact_vs_golden(backend, sets, ways, space, rng):
+    lines = rng.integers(0, space, size=300)
+    geom = CacheGeometry(num_sets=sets, ways=ways, line_bytes=64)
+    ours = simulate_cache(lines, geom, "lru", backend=backend)
+    gold = GoldenCache(geom, "lru")
+    gold_hits = gold.run(lines)
+    assert np.array_equal(ours.hits, gold_hits)
+    assert ours.num_hits == gold.num_hits
+    assert ours.num_misses == gold.num_misses
+    assert ours.num_evictions == gold.num_evictions
+
+
+@settings(max_examples=20, deadline=None)
+@given(
+    sets=st.sampled_from([1, 2, 3, 5, 8, 33, 128]),
+    ways=st.sampled_from([1, 2, 3, 4, 7, 16]),
+    n=st.integers(1, 400),
+    space=st.integers(1, 900),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_stack_bit_exact_property(sets, ways, n, space, seed):
+    lines = np.random.default_rng(seed).integers(0, space, size=n)
+    geom = CacheGeometry(num_sets=sets, ways=ways, line_bytes=64)
+    ours = simulate_cache(lines, geom, "lru", backend="stack")
+    gold = GoldenCache(geom, "lru")
+    gold_hits = gold.run(lines)
+    assert np.array_equal(ours.hits, gold_hits)
+    assert ours.num_evictions == gold.num_evictions
+
+
+def test_stack_jnp_engine_matches_numpy(rng):
+    """The device-resident jnp pass equals the numpy host twin bitwise."""
+    for sets in (1, 3, 64):
+        lines = rng.integers(0, 5000, size=777).astype(np.int32)
+        d_np, b_np = stack_distances_np(lines, sets)
+        d_j, b_j = stack_distances_jnp(lines, sets)
+        assert np.array_equal(d_np, d_j)
+        assert np.array_equal(b_np, b_j)
+
+
+def test_stack_jnp_engine_end_to_end(rng):
+    """classify_lru_stack_many(engine="jnp") equals the numpy engine."""
+    stream = rng.integers(0, 3000, size=2000).astype(np.int64)
+    geoms = [CacheGeometry(num_sets=s, ways=w, line_bytes=64)
+             for s, w in ((16, 4), (16, 8), (64, 3))]
+    a = classify_lru_stack_many([stream] * len(geoms), geoms, engine="np")
+    b = classify_lru_stack_many([stream] * len(geoms), geoms, engine="jnp")
+    for (ha, ea), (hb, eb) in zip(a, b):
+        assert np.array_equal(ha, hb)
+        assert ea == eb
+
+
+def test_one_distance_pass_classifies_every_ways(rng):
+    """Mattson sharing: all ways values of one (stream, num_sets) classify
+    from ONE distance pass, each bit-exact vs an independent golden run."""
+    stream = rng.integers(0, 4000, size=3000).astype(np.int64)
+    ways_axis = (1, 2, 3, 4, 7, 8, 16)
+    geoms = [CacheGeometry(num_sets=32, ways=w, line_bytes=64)
+             for w in ways_axis]
+    before = distance_pass_count()
+    results = simulate_cache_many([stream] * len(geoms), geoms, "lru",
+                                  backend="stack")
+    assert distance_pass_count() - before == 1       # shared pass
+    for geom, res in zip(geoms, results):
+        gold = GoldenCache(geom, "lru")
+        gold_hits = gold.run(stream)
+        assert np.array_equal(res.hits, gold_hits)
+        assert res.num_evictions == gold.num_evictions
+    # Mattson inclusion: hits grow monotonically with associativity.
+    for a, b in zip(results, results[1:]):
+        assert not np.any(a.hits & ~b.hits)
+
+
+def test_stack_backend_falls_back_for_non_stack_policies(rng):
+    lines = rng.integers(0, 600, size=400)
+    geom = CacheGeometry(num_sets=8, ways=4, line_bytes=64)
+    for policy in ("srrip", "fifo"):
+        for backend in ("stack", "stack_pallas"):
+            got = simulate_cache(lines, geom, policy, backend=backend)
+            ref = simulate_cache(lines, geom, policy, backend="scan")
+            assert np.array_equal(got.hits, ref.hits), (policy, backend)
+            assert got.num_evictions == ref.num_evictions
+
+
+def test_sweep_grid_stack_vs_scan_and_independent_simulate():
+    """Every grid point under the stack backend equals both the scan-backend
+    sweep and an independent simulate() run, bit for bit."""
+    wl = dlrm_rmc2_small(num_tables=2, rows_per_table=2000, dim=128,
+                         lookups=4, batch_size=8, num_batches=2)
+    grid = dict(policies=("spm", "lru", "srrip"),
+                capacities=(1 << 16, 1 << 17), ways=(2, 4),
+                zipf_s=0.9, seed=0)
+    hw_stack = tpuv6e().with_cache_backend("stack")
+    got = sweep(wl, hw_stack, **grid)
+    ref = sweep(wl, tpuv6e().with_cache_backend("scan"), **grid)
+    assert got.num_configs == ref.num_configs
+    for a, b in zip(got.entries, ref.entries):
+        assert not a.result.diff(b.result), a.config.label
+    for e in got.entries[:: max(1, got.num_configs // 5)]:
+        c = e.config
+        hw = hw_stack.with_policy(
+            OnChipPolicy(c.policy), capacity_bytes=c.capacity_bytes, ways=c.ways
+        )
+        ind = simulate(wl, hw, seed=0, zipf_s=c.zipf_s)
+        assert not e.result.diff(ind), c.label
+
+
+def _mk_request(rng, model, nv, num_segments, num_sources, lpv=8):
+    base = rng.integers(0, 100_000, size=nv).astype(np.int64) * lpv
+    lines = (base[:, None] + np.arange(lpv)[None, :]).reshape(-1)
+    seg = np.sort(rng.integers(0, num_segments, size=nv))
+    seg = np.repeat(seg, lpv)
+    src = np.repeat(rng.integers(0, num_sources, size=nv), lpv)
+    return DramRequest(lines, seg, src, num_segments, num_sources, model)
+
+
+def test_dram_batcher_bit_exact_vs_unbatched(rng):
+    """Cross-memo-key batching: every request's DramResults and per-source
+    finish matrix equal its unbatched dispatch — including multi-core
+    contended requests and empty traces."""
+    model = DramModel.from_hardware(tpuv6e())
+    reqs = [
+        _mk_request(rng, model, 700, 2, 1),
+        _mk_request(rng, model, 45, 3, 1),
+        _mk_request(rng, model, 400, 2, 4),     # multi-core contended
+        DramRequest(np.zeros(0, np.int64), np.zeros(0, np.int64),
+                    np.zeros(0, np.int64), 2, 1, model),
+        _mk_request(rng, model, 300, 2, 2),
+    ]
+    batched = dram_timing_many(reqs, batch=True)
+    for req, (res_b, fin_b) in zip(reqs, batched):
+        res_u, fin_u = dram_timing_single(req)
+        assert fin_b.shape == fin_u.shape == (req.num_segments, req.num_sources)
+        assert np.array_equal(fin_b, fin_u)
+        for rb, ru in zip(res_b, res_u):
+            assert rb.finish_cycle == ru.finish_cycle
+            assert rb.total_latency_cycles == ru.total_latency_cycles
+            assert rb.row_hits == ru.row_hits
+            assert rb.row_misses == ru.row_misses
+            assert rb.accesses == ru.accesses
+
+
+def test_sweep_batch_dram_flag_bit_exact():
+    """batch_dram=False is the unbatched reference path; results identical —
+    across single-core AND multi-core cluster grid points."""
+    wl = dlrm_rmc2_small(num_tables=2, rows_per_table=1500, dim=128,
+                         lookups=4, batch_size=8, num_batches=2)
+    grid = dict(policies=("spm", "lru"), capacities=(1 << 16,), ways=(2,),
+                zipf_s=0.9, seed=0, num_cores=(1, 2),
+                topologies=("private", "shared"))
+    a = sweep(wl, tpuv6e(), batch_dram=True, **grid)
+    b = sweep(wl, tpuv6e(), batch_dram=False, **grid)
+    assert a.num_configs == b.num_configs
+    for ea, eb in zip(a.entries, b.entries):
+        assert not ea.result.diff(eb.result), ea.config.label
+
+
+def test_stack_memo_distinguishes_aliasing_views(rng):
+    """Two views sharing (pointer, size, dtype) but different strides must
+    not share a distance pass."""
+    a = rng.integers(0, 50, size=1000).astype(np.int64)
+    geom = CacheGeometry(num_sets=4, ways=2, line_bytes=64)
+    views = [a[:500], a[::2]]
+    got = classify_lru_stack_many(views, [geom, geom])
+    for v, (h, ev) in zip(views, got):
+        gold = GoldenCache(geom, "lru")
+        gold_hits = gold.run(np.ascontiguousarray(v))
+        assert np.array_equal(h, gold_hits)
+        assert ev == gold.num_evictions
+
+
+def test_inversion_block_size_keeps_histogram_linear():
+    """The radix block grows with n so the (chunk, bucket) histogram stays
+    O(n) elements — large traces must not allocate quadratic tables."""
+    from repro.core.memory.stack import _block_size
+
+    for n in (1, 100, 46080, 1 << 20, 1 << 24):
+        bs = _block_size(n)
+        assert bs >= 128 and bs & (bs - 1) == 0
+        blocks = -(-n // bs)
+        assert blocks * blocks <= max(16 * n, 128 * 128)
+    # and the count stays exact at a non-default block size
+    rng = np.random.default_rng(3)
+    v = rng.permutation(3000).astype(np.int32)
+    from repro.core.memory.stack import _inv_prev_larger_np
+
+    ref = _inv_prev_larger_np(v, bs=128)
+    for bs in (256, 512):
+        assert np.array_equal(_inv_prev_larger_np(v, bs=bs), ref)
+
+
+def test_stack_rejects_out_of_range_lines():
+    geom = CacheGeometry(num_sets=4, ways=2, line_bytes=64)
+    with pytest.raises(ValueError, match="int32"):
+        simulate_cache(np.array([2**40]), geom, "lru", backend="stack")
+
+
+def test_stack_empty_and_single_access():
+    geom = CacheGeometry(num_sets=4, ways=2, line_bytes=64)
+    res = simulate_cache(np.zeros(0, dtype=np.int64), geom, "lru",
+                         backend="stack")
+    assert res.accesses == 0 and res.num_evictions == 0
+    res1 = simulate_cache(np.array([5]), geom, "lru", backend="stack")
+    assert res1.num_misses == 1 and not res1.hits[0]
+
+
+def test_multicore_cluster_stack_backend_bit_exact():
+    """Cluster topologies under the stack backend equal the scan backend
+    (shared-LLC classification + contended DRAM downstream of it)."""
+    wl = dlrm_rmc2_small(num_tables=2, rows_per_table=1500, dim=128,
+                         lookups=4, batch_size=8, num_batches=2)
+    base = tpuv6e().with_policy("lru", capacity_bytes=1 << 16, ways=2)
+    for cores, topo in ((2, "shared"), (2, "private")):
+        hw = base.with_cluster(cores, topo)
+        got = simulate(wl, hw.with_cache_backend("stack"), seed=0, zipf_s=0.9)
+        ref = simulate(wl, hw.with_cache_backend("scan"), seed=0, zipf_s=0.9)
+        assert not got.diff(ref), (cores, topo)

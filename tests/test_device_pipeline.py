@@ -147,15 +147,17 @@ def test_bucket_len_compile_count_logarithmic():
 # --------------------------------------------------------------------------
 
 def test_cache_backend_bit_exact_end_to_end():
-    """simulate() under cache_backend="pallas" (interpret mode on CPU)
-    equals the scan backend for a cache-mode policy, bit for bit."""
+    """simulate() under every cache backend (Pallas variants in interpret
+    mode on CPU) equals the scan backend for a cache-mode policy, bit for
+    bit — the knob can never change results."""
     wl = dlrm_rmc2_small(num_tables=2, rows_per_table=300, batch_size=2,
                          num_batches=2)
     base = tpuv6e().with_policy("lru", capacity_bytes=1 << 14)
-    assert set(CACHE_BACKENDS) == {"scan", "pallas"}
+    assert set(CACHE_BACKENDS) == {"scan", "pallas", "stack", "stack_pallas"}
     ref = simulate(wl, base.with_cache_backend("scan"), seed=0, zipf_s=0.9)
-    got = simulate(wl, base.with_cache_backend("pallas"), seed=0, zipf_s=0.9)
-    assert not got.diff(ref)
+    for backend in ("pallas", "stack", "stack_pallas"):
+        got = simulate(wl, base.with_cache_backend(backend), seed=0, zipf_s=0.9)
+        assert not got.diff(ref), backend
 
 
 def test_cache_backend_validation():
@@ -171,14 +173,22 @@ def test_profiling_stages_cover_hot_path():
     wl = dlrm_rmc2_small(num_tables=2, rows_per_table=400, batch_size=4,
                          num_batches=2)
     hw = tpuv6e().with_policy("lru", capacity_bytes=1 << 15)
+    # Default (stack) backend: LRU classification shows up as the
+    # stack_distance stage; the scan backend reports cache_scan instead.
     with profiling.collect() as prof:
         simulate(wl, hw, seed=0, zipf_s=0.9)
     got = prof.breakdown()
-    for name in ("trace_gen", "classify", "cache_scan", "dram", "host_sync"):
+    for name in ("trace_gen", "classify", "stack_distance", "dram"):
         assert name in got, got
         assert got[name] >= 0.0
+    with profiling.collect() as prof_scan:
+        simulate(wl, hw.with_cache_backend("scan"), seed=0, zipf_s=0.9)
+    got_scan = prof_scan.breakdown()
+    for name in ("trace_gen", "classify", "cache_scan", "dram", "host_sync"):
+        assert name in got_scan, got_scan
+        assert got_scan[name] >= 0.0
     # exclusive accounting: stages don't double-count nested children
-    assert sum(got.values()) < 60.0
+    assert sum(got_scan.values()) < 60.0
 
 
 def test_profiling_disabled_reports_nothing():
