@@ -13,6 +13,10 @@ so the per-config perf trajectory is tracked across PRs.
 (``repro.core.profiling``) and adds a per-stage wall-time breakdown to the
 perf record — trace gen / classify / cache scan / DRAM / host sync — so the
 next perf PR starts from data instead of guesses.
+
+A separate NUMA placement-axes slice (channel_affinity x placement on a
+2-core table_hash cluster) is timed into ``placement_per_config_ms`` without
+touching the historical perf-gate grid.
 """
 from __future__ import annotations
 
@@ -64,6 +68,20 @@ def run(profile: bool = False) -> List[Dict]:
     sr_nb = sweep(wl, base_hw, policies=POLICIES, capacities=CAPACITIES,
                   ways=WAYS, zipf_s=ZIPF, seed=0, batch_scans=False)
 
+    # NUMA placement-axes slice: the (affinity x placement) grid on a
+    # 2-core table_hash cluster, timed separately so the headline
+    # per_config_ms (the perf-gate number) keeps its historical grid.
+    wl_p = dlrm_rmc2_small(num_tables=6, rows_per_table=ROWS, batch_size=BATCH,
+                           num_batches=2)
+    hw_p = base_hw.with_cluster(2, "private", "table_hash")
+    placement_axes = dict(
+        policies=("spm", "lru"), zipf_s=ZIPF, seed=0,
+        channel_affinities=("symmetric", "per_core", "per_table"),
+        placements=("interleave", "table_rank", "hot_replicate"),
+    )
+    sweep(wl_p, hw_p, **placement_axes)          # warm
+    sr_p = sweep(wl_p, hw_p, **placement_axes)
+
     sample = sr.entries[:: max(1, len(sr.entries) // N_INDEPENDENT_SAMPLE)]
     t0 = time.perf_counter()
     for e in sample:
@@ -89,6 +107,8 @@ def run(profile: bool = False) -> List[Dict]:
         "batched_scan_speedup": sr_nb.wall_seconds / max(sr.wall_seconds, 1e-9),
         "cache_backend": base_hw.cache_backend,
         "stack_distance_passes": stack_passes,
+        "placement_configs": sr_p.num_configs,
+        "placement_per_config_ms": sr_p.wall_seconds / sr_p.num_configs * 1e3,
         "bitexact_sample": len(sample),
         "best_config": best.config.label,
         "best_total_cycles": best.result.total_cycles,

@@ -1,0 +1,79 @@
+"""NUMA channel affinity: table_hash sharding finally REDUCES contention.
+
+Before the placement layer, `table_hash` lookup sharding only partitioned
+work — every core still hit every DRAM channel, so cores' miss bursts
+interleaved inside the same banks and buses and the shared-DRAM finish barely
+moved. With `channel_affinity="per_core"`, each core's misses route only to
+its private channel group; combined with `table_hash` sharding (each table
+lives on exactly one core) a table's DRAM traffic stays on its owner's
+channels — the TensorDIMM-style placement the ROADMAP called for.
+
+This example sweeps the (channel_affinity x placement) grid over a balanced
+all-miss (SPM) DLRM workload — 6 tables hash evenly onto 2 cores — and shows
+at least one configuration where `per_core` affinity STRICTLY lowers the
+contended embedding cycles vs the `symmetric` baseline (asserted; this is
+the PR's acceptance demo).
+
+Run:   PYTHONPATH=src python examples/placement_contention.py [--smoke]
+"""
+from __future__ import annotations
+
+import sys
+
+from repro.core import OnChipPolicy, dlrm_rmc2_small, sweep, tpuv6e
+
+# 6 tables hash evenly onto 2 cores (3 + 3): per-core DRAM load is balanced,
+# so the symmetric-vs-per_core gap is pure contention, not load imbalance.
+TABLES, CORES = 6, 2
+ZIPF_S = 1.05            # skewed reuse (paper's Reuse-High regime)
+
+
+def run(smoke: bool = False):
+    rows, batch, lookups = (20_000, 32, 8) if smoke else (100_000, 64, 16)
+    wl = dlrm_rmc2_small(num_tables=TABLES, rows_per_table=rows,
+                         lookups=lookups, batch_size=batch)
+    base = tpuv6e().with_policy(OnChipPolicy.SPM).with_cluster(
+        CORES, "private", "table_hash")
+    sr = sweep(
+        wl, base, policies=("spm",), zipf_s=ZIPF_S, seed=0,
+        channel_affinities=("symmetric", "per_core", "per_table"),
+        placements=("interleave", "table_rank", "hot_replicate"),
+    )
+    return wl, sr
+
+
+def main() -> None:
+    smoke = "--smoke" in sys.argv
+    wl, sr = run(smoke)
+
+    by_cfg = {
+        (e.config.channel_affinity, e.config.placement): e.result
+        for e in sr.entries
+    }
+    sym = by_cfg[("symmetric", "interleave")]
+    print(f"# NUMA placement vs shared-DRAM contention — {wl.name}, "
+          f"{TABLES} tables table_hash-sharded over {CORES} cores, SPM, "
+          f"Zipf s={ZIPF_S}")
+    print(f"{'affinity':<10} {'placement':<14} {'embed_cycles':>13} "
+          f"{'vs_symmetric':>12} {'row_hit_rate':>12}")
+    for (aff, plc), r in sorted(by_cfg.items()):
+        hits = sum(b.dram_row_hits for b in r.batches)
+        total = hits + sum(b.dram_row_misses for b in r.batches)
+        print(f"{aff:<10} {plc:<14} {r.embedding_cycles:>13.0f} "
+              f"{sym.embedding_cycles / max(r.embedding_cycles, 1e-9):>12.3f} "
+              f"{hits / max(total, 1):>12.3f}")
+
+    pc = by_cfg[("per_core", "interleave")]
+    gain = sym.embedding_cycles / max(pc.embedding_cycles, 1e-9)
+    print(f"\n# per_core affinity + table_hash sharding: {gain:.3f}x lower "
+          "contended embedding cycles than symmetric (same traffic, private "
+          "channel groups — sharding now reduces contention, not just work)")
+    # Acceptance contract: >= 1 config where per_core STRICTLY wins.
+    assert pc.embedding_cycles < sym.embedding_cycles, (
+        pc.embedding_cycles, sym.embedding_cycles)
+    if smoke:
+        print("# smoke OK")
+
+
+if __name__ == "__main__":
+    main()

@@ -11,7 +11,10 @@ attributable to a stage, not just visible in the total.
 
 Also runs small sweeps under every non-default cache backend ("pallas",
 "stack", "stack_pallas"; Pallas variants in interpret mode on CPU) and
-asserts bit-exact agreement with the scan backend in the same job.
+asserts bit-exact agreement with the scan backend in the same job, plus a
+NUMA placement-axes sweep smoke (channel_affinities x placements memo keys
+bit-exact vs independent simulate(), symmetric/interleave vs the axes-free
+sweep) so the 1.5x gate and the exactness checks cover the placement layer.
 
 Usage:  PYTHONPATH=src python scripts/perf_smoke.py [--update-baseline]
 Baseline: benchmarks/perf_baseline.json (checked in; results/ is gitignored).
@@ -28,7 +31,14 @@ _REPO_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
 sys.path.insert(0, _REPO_ROOT)     # for the benchmarks package
 
 from benchmarks import dse_sweep as _bench          # noqa: E402
-from repro.core import dlrm_rmc2_small, profiling, sweep, tpuv6e  # noqa: E402
+from repro.core import (                            # noqa: E402
+    OnChipPolicy,
+    dlrm_rmc2_small,
+    profiling,
+    simulate,
+    sweep,
+    tpuv6e,
+)
 
 BASELINE_PATH = os.path.join(_REPO_ROOT, "benchmarks", "perf_baseline.json")
 REGRESSION_FACTOR = 1.5
@@ -88,6 +98,35 @@ def backend_smoke() -> None:
               "bit-exact vs scan")
 
 
+def placement_smoke() -> None:
+    """The NUMA placement axes sweep through distinct memo keys and stay
+    exact: symmetric/interleave grid points equal the axes-free sweep bit for
+    bit, every other point equals an independent ``simulate()`` run."""
+    wl = dlrm_rmc2_small(num_tables=6, rows_per_table=1000, batch_size=4,
+                         num_batches=2)
+    base = tpuv6e().with_cluster(2, "private", "table_hash")
+    grids = dict(policies=("spm", "lru"), capacities=(1 << 14,), ways=(4,),
+                 zipf_s=1.0, seed=0)
+    got = sweep(wl, base, channel_affinities=("symmetric", "per_core"),
+                placements=("interleave", "table_rank"), **grids)
+    assert got.num_configs == 2 * 2 * 2
+    ref_by = {e.config.policy: e.result for e in sweep(wl, base, **grids).entries}
+    for e in got.entries:
+        c = e.config
+        if c.channel_affinity == "symmetric" and c.placement == "interleave":
+            mism = e.result.diff(ref_by[c.policy])
+        else:
+            hw = base.with_policy(
+                OnChipPolicy(c.policy), capacity_bytes=c.capacity_bytes,
+                ways=c.ways,
+            ).with_placement(c.channel_affinity, c.placement)
+            mism = e.result.diff(simulate(wl, hw, seed=0, zipf_s=c.zipf_s))
+        assert not mism, (c.label, mism)
+    print(f"placement axes smoke: {got.num_configs} configs (2 affinities x "
+          "2 placements) bit-exact vs simulate(); symmetric/interleave "
+          "bit-exact vs the axes-free sweep")
+
+
 def main() -> int:
     ap = argparse.ArgumentParser(description=__doc__)
     ap.add_argument("--update-baseline", action="store_true",
@@ -95,6 +134,7 @@ def main() -> int:
     args = ap.parse_args()
 
     backend_smoke()
+    placement_smoke()
     per_config_ms, num_configs, stages = measure()
 
     if args.update_baseline or not os.path.exists(BASELINE_PATH):

@@ -2,6 +2,7 @@
 matrix and embedding vector operations over a configurable memory hierarchy."""
 
 from .hardware import (
+    CHANNEL_AFFINITIES,
     Dataflow,
     HardwareConfig,
     LookupSharding,
@@ -9,6 +10,7 @@ from .hardware import (
     OffChipMemory,
     OnChipMemory,
     OnChipPolicy,
+    PLACEMENTS,
     Topology,
     VectorUnit,
     tpuv6e,
@@ -34,9 +36,11 @@ from .results import BatchResult, SimResult
 from .sweep import SweepConfig, SweepEntry, SweepResult, sweep
 
 __all__ = [
+    "CHANNEL_AFFINITIES",
     "Dataflow",
     "HardwareConfig",
     "LookupSharding",
+    "PLACEMENTS",
     "Topology",
     "MatrixUnit",
     "OffChipMemory",

@@ -51,6 +51,44 @@ class LookupSharding(str, enum.Enum):
     TABLE_HASH = "table_hash"  # hash table_id -> core (model parallel)
 
 
+# DRAM channel-affinity modes (NUMA-style routing of embedding miss traffic):
+#   "symmetric" — every request may use every channel (classic interleaved
+#                 DRAM; the default and the historical engine behaviour).
+#   "per_core"  — channels partition into ``num_cores`` strided groups and
+#                 core c's requests route ONLY to group c's channels (private
+#                 memory channels per core, ONNXim/TensorDIMM-style NUMA).
+#                 Routing is by REQUESTER: a row touched by two cores is
+#                 homed in both cores' groups, i.e. the model assumes
+#                 per-core-private replicas of shared data (free of storage/
+#                 coherence cost). Pair it with table_hash sharding, where
+#                 requester == owner and nothing is shared; for a single-copy
+#                 home under batch sharding use "per_table" instead.
+#   "per_table" — requests route to the channel group owned by their TABLE
+#                 (hash(table_id) -> group, the same hash as table_hash
+#                 lookup sharding), regardless of the issuing core — the
+#                 single-copy data-home placement.
+# Affinity changes WHERE miss traffic lands, never how much of it there is —
+# classification is upstream and untouched. The degenerate "symmetric" mode
+# is bitwise identical to the pre-placement engine (test-enforced).
+CHANNEL_AFFINITIES = ("symmetric", "per_core", "per_table")
+
+# Embedding-row placement within the affine channel group:
+#   "interleave"    — block-granular striping across the group's channels
+#                     (the classic layout; identity under "symmetric").
+#   "table_rank"    — TensorDIMM-style per-rank table placement: each table
+#                     is homed to ONE rank (modelled as a bank index) of its
+#                     group's channels; its blocks stripe across the group's
+#                     channels but stay within that rank, maximizing per-table
+#                     row-buffer locality and isolating tables from each
+#                     other's row conflicts.
+#   "hot_replicate" — "table_rank" for cold rows + the hottest vectors
+#                     replicated across every (channel, rank) of the group so
+#                     hot traffic stripes at full width (TensorDIMM's hot-
+#                     embedding replication); the hot set is profiled from
+#                     the trace deterministically.
+PLACEMENTS = ("interleave", "table_rank", "hot_replicate")
+
+
 # Cache-engine backends for the simulator's set-associative classification
 # (memory/cache.py):
 #   "scan"         — vmapped lax.scan engine (the sequential reference).
@@ -160,6 +198,12 @@ class HardwareConfig:
     # SHARED topology: ``onchip`` is the one shared last-level memory.
     onchip: OnChipMemory = field(default_factory=OnChipMemory)
     offchip: OffChipMemory = field(default_factory=OffChipMemory)
+    # NUMA placement axes (see CHANNEL_AFFINITIES / PLACEMENTS): how embedding
+    # miss traffic is routed across DRAM channels and where rows are homed.
+    # The defaults reproduce the historical symmetric interleaved engine
+    # bitwise. Build through ``with_placement`` for validation.
+    channel_affinity: str = "symmetric"
+    placement: str = "interleave"
     # Simulator-engine knob (not a hardware parameter): which cache-engine
     # backend classifies set-associative accesses. See CACHE_BACKENDS. The
     # default "stack" classifies LRU analytically (one stack-distance pass
@@ -219,6 +263,37 @@ class HardwareConfig:
             kw["topology"] = Topology(topology)
         if lookup_sharding is not None:
             kw["lookup_sharding"] = LookupSharding(lookup_sharding)
+        return dataclasses.replace(self, **kw)
+
+    def with_placement(
+        self,
+        channel_affinity: "str | None" = None,
+        placement: "str | None" = None,
+    ) -> "HardwareConfig":
+        """Select the DRAM channel-affinity and row-placement modes.
+
+        ``channel_affinity`` routes requests to channel groups (see
+        ``CHANNEL_AFFINITIES``); ``placement`` homes rows within the group
+        (see ``PLACEMENTS``). ``per_core`` affinity requires ``channels`` to
+        split evenly over ``num_cores`` — checked when the memory system is
+        built, since the cluster shape may change after this call. The
+        default ``symmetric``/``interleave`` pair is bitwise identical to the
+        pre-placement engine (test-enforced).
+        """
+        kw = {}
+        if channel_affinity is not None:
+            if channel_affinity not in CHANNEL_AFFINITIES:
+                raise ValueError(
+                    f"unknown channel affinity {channel_affinity!r}; "
+                    f"options: {CHANNEL_AFFINITIES}"
+                )
+            kw["channel_affinity"] = channel_affinity
+        if placement is not None:
+            if placement not in PLACEMENTS:
+                raise ValueError(
+                    f"unknown placement {placement!r}; options: {PLACEMENTS}"
+                )
+            kw["placement"] = placement
         return dataclasses.replace(self, **kw)
 
     def with_cache_backend(self, backend: str) -> "HardwareConfig":

@@ -48,6 +48,7 @@ Replacement semantics (matching ChampSim):
 from __future__ import annotations
 
 import functools
+import logging
 from dataclasses import dataclass
 
 import jax
@@ -204,18 +205,34 @@ def _validate(policy: str, backend: str) -> None:
         )
 
 
+_log = logging.getLogger(__name__)
+_FALLBACK_WARNED: "set[tuple[str, str]]" = set()
+
+
 def _effective_backend(policy: str, backend: str) -> str:
     """Resolve the stack variants per policy.
 
     Only LRU is a stack algorithm; under ``"stack"``/``"stack_pallas"`` the
     non-stack policies (srrip, fifo) transparently fall back to the
     corresponding scan engine — the backend knob can never change results.
+    The fallback is logged once per (policy, backend) so a user profiling an
+    srrip/fifo sweep learns they are timing the scan engine, not the
+    analytic stack pass they selected.
     """
+    resolved = backend
     if backend == "stack":
-        return "stack" if policy == "lru" else "scan"
-    if backend == "stack_pallas":
-        return "stack_pallas" if policy == "lru" else "pallas"
-    return backend
+        resolved = "stack" if policy == "lru" else "scan"
+    elif backend == "stack_pallas":
+        resolved = "stack_pallas" if policy == "lru" else "pallas"
+    if resolved != backend and (policy, backend) not in _FALLBACK_WARNED:
+        _FALLBACK_WARNED.add((policy, backend))
+        _log.warning(
+            "cache_backend=%r applies only to LRU (a stack algorithm); "
+            "policy %r falls back to the %r engine — results are bit-exact, "
+            "only the execution strategy differs",
+            backend, policy, resolved,
+        )
+    return resolved
 
 
 def simulate_cache(

@@ -742,6 +742,12 @@ def dram_timing_contended(
     Segments longer than ``DETAILED_DRAM_MAX`` fall back to the closed-form
     estimate over the merged stream (per-source finish approximated by the
     segment finish — the shared bus bounds every core in that regime).
+
+    NUMA channel affinity needs no special handling here: callers hand in
+    *placed* line addresses (``trace.PlacementMap``), whose decompose lands
+    only on each request's affine channels, and per-channel state is already
+    independent — so disjoint channel groups time exactly as if each group
+    were scanned alone (differential-test-enforced).
     """
     lines = np.asarray(lines, dtype=np.int64).reshape(-1)
     seg = np.asarray(seg, dtype=np.int64).reshape(-1)

@@ -46,6 +46,15 @@ into policy groups (hot tables pinned, cold tables cached, ...); each group
 classifies its sub-stream under a set-proportional slice of the on-chip
 capacity (``PolicyContext.scaled``), and the groups' miss streams merge back
 in global trace order for DRAM timing.
+
+NUMA placement (``hw.channel_affinity`` / ``hw.placement``): before a miss
+trace becomes a ``DramRequest``, ``PlacementMap.place`` (trace.py) maps each
+line to its (channel-group, rank) home — per-core private channel groups
+under ``per_core``, per-table groups under ``per_table``, TensorDIMM-style
+per-rank table homes under ``table_rank``/``hot_replicate``. The transform
+is pure address remapping, so the contended/batched DRAM engines are reused
+untouched; the degenerate ``symmetric``/``interleave`` pair skips the map
+entirely and is bitwise identical to the historical engine (test-enforced).
 """
 from __future__ import annotations
 
@@ -60,6 +69,8 @@ from ..trace import (
     AddressTrace,
     ConcatTrace,
     FullTrace,
+    PlacementMap,
+    profile_hot_vectors,
     shard_lookup_cores,
     shard_trace,
     translate,
@@ -160,6 +171,7 @@ class EmbeddingTrace:
         self._vec_ids: Optional[np.ndarray] = None
         self._lookup_batch: Optional[np.ndarray] = None
         self._atraces: Dict[int, AddressTrace] = {}
+        self._hot_vecs: Optional[np.ndarray] = None
 
     @classmethod
     def from_concat(cls, spec: EmbeddingOpSpec, concat: ConcatTrace) -> "EmbeddingTrace":
@@ -170,6 +182,7 @@ class EmbeddingTrace:
         et._vec_ids = None
         et._lookup_batch = None
         et._atraces = {}
+        et._hot_vecs = None
         return et
 
     @property
@@ -200,6 +213,16 @@ class EmbeddingTrace:
                 at = translate(self.concat, self.spec, line_bytes)
             self._atraces[line_bytes] = at
         return at
+
+    @property
+    def hot_vec_ids(self) -> np.ndarray:
+        """Profiled hot vector set (sorted ids) for ``hot_replicate``
+        placement — deterministic in the trace, hardware-independent, so it
+        is computed once and shared across every sweep configuration."""
+        if self._hot_vecs is None:
+            with stage("trace_gen"):
+                self._hot_vecs = profile_hot_vectors(self.vec_ids)
+        return self._hot_vecs
 
 
 # --------------------------------------------------------------------------
@@ -585,9 +608,31 @@ class MemorySystem:
         cs = self.classify_embedding(etrace, pinned_lines, allow_lane)
         return self._pending(etrace, cs)
 
+    # -- NUMA placement (channel affinity + row homes) ----------------------
+    def placement_map(self, etrace: EmbeddingTrace) -> Optional[PlacementMap]:
+        """The row->(channel-group, rank) map for this config, or ``None``
+        for the degenerate ``symmetric``/``interleave`` pair — the miss trace
+        then reaches DRAM untransformed, byte for byte the historical path."""
+        hw = self.hw
+        if hw.channel_affinity == "symmetric" and hw.placement == "interleave":
+            return None
+        hot = etrace.hot_vec_ids if hw.placement == "hot_replicate" else None
+        return PlacementMap.from_model(self.dram, hw, etrace.spec, hot_vecs=hot)
+
+    def _place_misses(
+        self,
+        etrace: EmbeddingTrace,
+        miss_lines: np.ndarray,
+        miss_src: Optional[np.ndarray],
+    ) -> np.ndarray:
+        pm = self.placement_map(etrace)
+        if pm is None:
+            return miss_lines
+        return pm.place(miss_lines, miss_src)
+
     def _pending(self, etrace: EmbeddingTrace, cs: ClassifiedStream) -> PendingEmbedding:
         req = DramRequest(
-            lines=cs.miss_lines,
+            lines=self._place_misses(etrace, cs.miss_lines, None),
             seg=cs.miss_batch,
             src=np.zeros(cs.miss_lines.size, dtype=np.int64),
             num_segments=cs.num_batches,
@@ -808,11 +853,16 @@ class MultiCoreMemorySystem:
                 s.cycles = max(s.onchip_cycles, s.dram_cycles, s.vector_cycles)
             return stats
 
+        miss_src = np.asarray(miss_core, dtype=np.int64)
         return PendingEmbedding(
             request=DramRequest(
-                lines=merged.miss_lines,
+                # Placement routes each core's misses to its affine channel
+                # group (per_core) or each table's home group (per_table);
+                # the contended scan then only sees cross-core contention
+                # where channel groups actually overlap.
+                lines=self.core._place_misses(etrace, merged.miss_lines, miss_src),
                 seg=merged.miss_batch,
-                src=np.asarray(miss_core, dtype=np.int64),
+                src=miss_src,
                 num_segments=B,
                 num_sources=n,
                 model=self.dram,

@@ -39,7 +39,11 @@ one pass while staying **bit-exact** with independent ``simulate()`` calls
 
 The grid also spans the CoreCluster axes: ``num_cores`` and ``topologies``
 (private per-core on-chip vs shared LLC) sweep through the multi-core
-MemorySystem with shared-DRAM contention.
+MemorySystem with shared-DRAM contention — and the NUMA placement axes
+``channel_affinities`` / ``placements`` (symmetric | per_core | per_table x
+interleave | table_rank | hot_replicate), which participate in the memo keys
+and ride the same batched ``dram_timing_many`` dispatch (placement is pure
+address remapping upstream of DRAM timing).
 
 Typical use (the paper's Fig. 4 case study is one call — see
 ``examples/fig4_sweep.py``)::
@@ -94,6 +98,8 @@ class SweepConfig:
     zipf_s: float
     num_cores: int = 1
     topology: str = "private"
+    channel_affinity: str = "symmetric"
+    placement: str = "interleave"
 
     @property
     def label(self) -> str:
@@ -101,6 +107,8 @@ class SweepConfig:
         base = f"{self.workload}/{self.policy}/{cap_mb:g}MB/{self.ways}w/z{self.zipf_s:g}"
         if self.num_cores != 1 or self.topology != "private":
             base += f"/{self.num_cores}c-{self.topology}"
+        if self.channel_affinity != "symmetric" or self.placement != "interleave":
+            base += f"/{self.channel_affinity}-{self.placement}"
         return base
 
 
@@ -143,12 +151,14 @@ class SweepResult:
             c = e.config
             if c.policy == baseline_policy:
                 base[(c.workload, c.capacity_bytes, c.ways, c.zipf_s,
-                      c.num_cores, c.topology)] = e.result.total_cycles
+                      c.num_cores, c.topology, c.channel_affinity,
+                      c.placement)] = e.result.total_cycles
         out = []
         for e in self.entries:
             c = e.config
             ref = base.get((c.workload, c.capacity_bytes, c.ways, c.zipf_s,
-                            c.num_cores, c.topology))
+                            c.num_cores, c.topology, c.channel_affinity,
+                            c.placement))
             if ref is None:
                 continue
             r = e.row()
@@ -189,16 +199,19 @@ def sweep(
     energy_table: EnergyTable = EnergyTable(),
     num_cores: Optional[Sequence[int]] = None,
     topologies: Optional[Sequence[Union[str, Topology]]] = None,
+    channel_affinities: Optional[Sequence[str]] = None,
+    placements: Optional[Sequence[str]] = None,
     batch_scans: bool = True,
     batch_dram: bool = True,
 ) -> SweepResult:
     """Evaluate the (workload x zipf x policy x capacity x ways x num_cores
-    x topology) grid.
+    x topology x channel_affinity x placement) grid.
 
     Every grid point's ``SimResult`` is bit-exact against
     ``simulate(workload, base_hw.with_policy(policy, capacity_bytes=...,
-    ways=...).with_cluster(num_cores, topology), seed=seed, zipf_s=z)`` — the
-    sweep only removes redundant work, never changes the model.
+    ways=...).with_cluster(num_cores, topology).with_placement(affinity,
+    placement), seed=seed, zipf_s=z)`` — the sweep only removes redundant
+    work, never changes the model.
     """
     base_hw = base_hw or tpuv6e()
     wls = _as_tuple(workloads, ())
@@ -218,6 +231,10 @@ def sweep(
     topo_t = tuple(
         Topology(t).value for t in _as_tuple(topologies, (base_hw.topology.value,))
     )
+    aff_t = tuple(
+        str(a) for a in _as_tuple(channel_affinities, (base_hw.channel_affinity,))
+    )
+    plc_t = tuple(str(p) for p in _as_tuple(placements, (base_hw.placement,)))
 
     t0 = time.perf_counter()
     out = SweepResult()
@@ -236,14 +253,23 @@ def sweep(
             stats_memo: Dict[tuple, list] = {}
             grid = []
             pending: Dict[tuple, object] = {}   # key -> memory system
-            for pol, cap, w, nc, topo in itertools.product(
-                pol_names, caps, ways_t, cores_t, topo_t
+            for pol, cap, w, nc, topo, aff, plc in itertools.product(
+                pol_names, caps, ways_t, cores_t, topo_t, aff_t, plc_t
             ):
                 hw = base_hw.with_policy(
                     OnChipPolicy(pol), capacity_bytes=cap, ways=w
-                ).with_cluster(nc, topo)
+                ).with_cluster(nc, topo).with_placement(aff, plc)
                 ms = memory_system_for(hw)
-                key = (pol, nc, topo, hw.lookup_sharding.value, hw.onchip.policy_mix)
+                # Placement only redirects DRAM traffic, but it redirects it
+                # per config — the memo key must carry both axes so a
+                # per_core grid point never reuses symmetric DRAM timing.
+                # Canonicalize first: with one core every affinity collapses
+                # to a single channel group (PlacementMap degenerates
+                # identically), so keying those points apart would recompute
+                # provably identical classification + DRAM timing.
+                key_aff = "symmetric" if nc == 1 else aff
+                key = (pol, nc, topo, hw.lookup_sharding.value, hw.onchip.policy_mix,
+                       key_aff, plc)
                 key += tuple(getattr(hw.onchip, p) for p in ms.policy.sensitive_params)
                 if ms.policy.uses_cache_engine:
                     # Backends are bit-exact, but memoization must not hand a
@@ -254,7 +280,7 @@ def sweep(
                     # Mix groups may read parameters the default policy does
                     # not (e.g. pinned tables under an SPM default).
                     key += (cap, w)
-                grid.append((pol, cap, w, nc, topo, hw, key))
+                grid.append((pol, cap, w, nc, topo, aff, plc, hw, key))
                 if key not in stats_memo and key not in pending:
                     pending[key] = ms
 
@@ -303,7 +329,7 @@ def sweep(
             for k in key_order:
                 stats_memo[k] = [p.finalize(*next(outs)) for p in prepared[k]]
 
-            for pol, cap, w, nc, topo, hw, key in grid:
+            for pol, cap, w, nc, topo, aff, plc, hw, key in grid:
                 res = assemble_result(
                     wl, hw, matrix, stats_memo[key], energy_table
                 )
@@ -316,6 +342,8 @@ def sweep(
                         zipf_s=z,
                         num_cores=nc,
                         topology=topo,
+                        channel_affinity=aff,
+                        placement=plc,
                     ),
                     result=res,
                 ))

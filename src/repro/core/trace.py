@@ -337,6 +337,226 @@ def shard_trace(
 
 
 # --------------------------------------------------------------------------
+# NUMA placement: embedding row -> (channel-group, rank) home
+# --------------------------------------------------------------------------
+
+# Fraction of distinct vectors (by access frequency) replicated across the
+# whole channel group under ``placement="hot_replicate"`` — TensorDIMM
+# replicates the hottest embeddings across ranks so any rank can serve them.
+HOT_REPLICATE_FRACTION = 0.05
+
+
+def profile_hot_vectors(
+    vec_ids: np.ndarray, fraction: float = HOT_REPLICATE_FRACTION
+) -> np.ndarray:
+    """The hottest distinct vector ids of a trace, sorted — deterministic in
+    the trace (frequency desc, vector id asc on ties)."""
+    uniq, counts = np.unique(np.asarray(vec_ids, dtype=np.int64), return_counts=True)
+    if uniq.size == 0:
+        return uniq
+    k = max(1, int(uniq.size * fraction))
+    order = np.argsort(-counts, kind="stable")
+    return np.sort(uniq[order[:k]])
+
+
+@dataclass(frozen=True, eq=False)
+class PlacementMap:
+    """Maps embedding line addresses to their NUMA (channel-group, rank) home.
+
+    The map is a pure address transform applied to miss traces *before* DRAM
+    timing: a placed line decomposes (``DramModel.decompose``) to a channel
+    inside the request's affine channel group, with the bank ("rank") and row
+    chosen by the placement mode. Routing therefore rides through the
+    existing contended/batched DRAM engines untouched — they already scan
+    channels independently, so disjoint channel groups simply stop contending.
+
+    Channel groups are strided: group ``g`` of ``G`` owns channels
+    ``{g, g + G, g + 2G, ...}``. The degenerate ``symmetric``/``interleave``
+    configuration is the *identity* transform (``place`` returns its input),
+    which is what makes the placement layer bitwise invisible by default
+    (test-enforced).
+
+    ``per_core`` routes by REQUESTER, not by data home: a line accessed from
+    two cores places at two distinct addresses (one per group), modeling
+    per-core-private replicas of shared rows at zero storage/coherence cost.
+    That is the intended TensorDIMM pairing with ``table_hash`` sharding
+    (requester == table owner, nothing shared); under ``batch`` sharding use
+    ``per_table`` for a single-copy data home.
+
+    Placement modes within the group (see ``hardware.PLACEMENTS``):
+
+    * ``interleave``    — blocks stripe across the group's channels, then
+      banks, then rows: exactly the symmetric layout restricted to the group.
+    * ``table_rank``    — TensorDIMM-style: each table is homed to ONE rank
+      (bank index = ``hash(table) % banks``); its blocks stripe across the
+      group's channels but stay in that rank, in a per-table private row
+      range (no cross-table row aliasing by construction).
+    * ``hot_replicate`` — ``table_rank`` for cold rows; vectors in
+      ``hot_vecs`` stripe across every (channel, rank) of the group at full
+      width, in a row range disjoint from every cold table's.
+
+    The transform is injective (distinct lines never merge), so run
+    compression, chunking, and row-hit accounting downstream stay exact.
+    """
+
+    channels: int
+    banks: int
+    lines_per_block: int
+    blocks_per_row: int
+    line_bytes: int
+    num_groups: int
+    affinity: str
+    placement: str
+    table_bytes: int
+    vector_bytes: int
+    num_tables: int
+    hot_vecs: Optional[np.ndarray] = None    # sorted global vector ids
+
+    @staticmethod
+    def from_model(
+        model,
+        hw,
+        spec,
+        hot_vecs: Optional[np.ndarray] = None,
+    ) -> "PlacementMap":
+        """Build from a ``DramModel``-like object (single source of the
+        channel/bank/row derivations), the hardware config, and the op spec."""
+        affinity = hw.channel_affinity
+        num_groups = 1 if affinity == "symmetric" else int(hw.num_cores)
+        if num_groups > 1 and model.channels % num_groups != 0:
+            raise ValueError(
+                f"channel affinity {affinity!r} needs channels "
+                f"({model.channels}) divisible by num_cores ({num_groups})"
+            )
+        return PlacementMap(
+            channels=model.channels,
+            banks=model.banks_per_channel,
+            lines_per_block=model.lines_per_block,
+            blocks_per_row=max(1, model.lines_per_row // model.lines_per_block),
+            line_bytes=model.line_bytes,
+            num_groups=num_groups,
+            affinity=affinity,
+            placement=hw.placement,
+            table_bytes=spec.table_bytes,
+            vector_bytes=spec.vector_bytes,
+            num_tables=spec.num_tables,
+            hot_vecs=hot_vecs,
+        )
+
+    @property
+    def group_size(self) -> int:
+        """Channels per group."""
+        return self.channels // self.num_groups
+
+    @property
+    def is_identity(self) -> bool:
+        """True when ``place`` is the exact identity (the degenerate config)."""
+        return self.num_groups == 1 and self.placement == "interleave"
+
+    # q-space spans: each table owns a private range of block-sequence ids so
+    # tables (and the replicated hot set) can never alias rows of each other.
+    # The span is rounded up to a whole number of rows — otherwise two tables
+    # homed to the same rank could share the row straddling their boundary,
+    # counting a spurious cross-table row hit per boundary.
+    @property
+    def _table_span(self) -> int:
+        ib = self.lines_per_block * self.line_bytes
+        span = self.table_bytes // ib + 2
+        bpr = self.blocks_per_row
+        return -(-span // bpr) * bpr
+
+    @property
+    def _hot_q_base(self) -> int:
+        return self._table_span * (self.num_tables + 1)
+
+    def affine_channels(self, group: int) -> np.ndarray:
+        """The channel ids group ``group`` may route to (strided grouping)."""
+        return np.arange(self.group_size, dtype=np.int64) * self.num_groups + int(group)
+
+    def table_of(self, lines: np.ndarray) -> np.ndarray:
+        """Table id of each line (from its start byte; contiguous layout)."""
+        return (np.asarray(lines, dtype=np.int64) * self.line_bytes) // self.table_bytes
+
+    def rank_of_table(self, table_ids: np.ndarray) -> np.ndarray:
+        """Deterministic table -> rank (bank index) home, TensorDIMM-style."""
+        return table_core_of(table_ids, self.banks).astype(np.int64)
+
+    def group_of(
+        self, lines: np.ndarray, src: Optional[np.ndarray] = None
+    ) -> np.ndarray:
+        """Affine channel-group of each request (total: every line maps)."""
+        lines = np.asarray(lines, dtype=np.int64).reshape(-1)
+        if self.num_groups == 1:
+            return np.zeros(lines.size, dtype=np.int64)
+        if self.affinity == "per_core":
+            if src is None:
+                # Silently homing everything to group 0 would quietly inflate
+                # finish cycles; per_core routing REQUIRES source-core tags.
+                raise ValueError(
+                    "per_core channel affinity needs per-request source-core "
+                    "tags; route through the multi-core pipeline "
+                    "(memory_system_for) instead of a bare MemorySystem"
+                )
+            return np.asarray(src, dtype=np.int64).reshape(-1) % self.num_groups
+        # per_table: the table's home group, independent of the issuing core
+        # (same hash as table_hash lookup sharding, so a table's core and its
+        # channel group coincide under model-parallel sharding).
+        return table_core_of(self.table_of(lines), self.num_groups).astype(np.int64)
+
+    def place(
+        self, lines: np.ndarray, src: Optional[np.ndarray] = None
+    ) -> np.ndarray:
+        """Placed line addresses: ``DramModel.decompose`` of the result lands
+        on the request's affine channels with the mode's (rank, row) home.
+        Identity (input returned unchanged) for ``symmetric``/``interleave``.
+        """
+        lines = np.asarray(lines, dtype=np.int64).reshape(-1)
+        if self.is_identity or lines.size == 0:
+            return lines
+        lpb = self.lines_per_block
+        C, B, G = self.channels, self.banks, self.num_groups
+        Cg = self.group_size
+        blk = lines // lpb
+        off = lines - blk * lpb
+        g = self.group_of(lines, src)
+
+        def pack(q: np.ndarray, bk: np.ndarray, ch_idx: np.ndarray) -> np.ndarray:
+            # q = block-sequence id within (channel, bank): decompose derives
+            # row = q // blocks_per_row and block-in-row = q % blocks_per_row,
+            # so this is the exact inverse of decompose_blocks.
+            new_blk = (q * B + bk) * C + (ch_idx * G + g)
+            return new_blk * lpb + off
+
+        if self.placement == "interleave":
+            # The symmetric layout restricted to the group's channels.
+            q = blk // Cg
+            return pack(q // B, q % B, blk % Cg)
+
+        t = self.table_of(lines)
+        tstart = (t * self.table_bytes) // (lpb * self.line_bytes)
+        blk_local = blk - tstart
+        q_cold = t * self._table_span + blk_local // Cg
+        placed = pack(q_cold, self.rank_of_table(t), blk_local % Cg)
+        if (
+            self.placement == "hot_replicate"
+            and self.hot_vecs is not None
+            and self.hot_vecs.size
+        ):
+            vec = (lines * self.line_bytes) // self.vector_bytes
+            idx = np.clip(np.searchsorted(self.hot_vecs, vec), 0,
+                          self.hot_vecs.size - 1)
+            hot = self.hot_vecs[idx] == vec
+            if np.any(hot):
+                qh = blk // Cg
+                placed = np.where(
+                    hot,
+                    pack(self._hot_q_base + qh // B, qh % B, blk % Cg),
+                    placed,
+                )
+        return placed
+
+
+# --------------------------------------------------------------------------
 # Address translation: index trace -> line-address trace
 # --------------------------------------------------------------------------
 

@@ -1,0 +1,158 @@
+"""Reusable differential/property test helpers.
+
+Four PRs of bit-exact rewrites (lane transform, multi-core delegation,
+chunked DRAM, stack-distance backend, cross-config batching) each hand-rolled
+the same comparison loops: zip two result lists, ``dataclasses.asdict`` both
+sides, compare field by field. This module is the single owner of that
+pattern:
+
+* ``assert_bitwise_equal_results(a, b)`` — recursively asserts two result
+  structures are *bitwise identical*: ``SimResult``/``SweepResult`` (via
+  their own diff surface), dataclasses (``DramResult``,
+  ``EmbeddingBatchStats``, ...), numpy arrays (exact ``array_equal``),
+  dicts/sequences, and scalars (exact ``==`` — never a tolerance).
+* ``trace_corpus(...)`` — a seeded, deterministic ``EmbeddingTrace`` corpus
+  (heterogeneous batch lengths included) shared by differential tests.
+* ``golden_pair(engine, reference)`` — fixture factory: returns a runner
+  that evaluates any (engine, reference) callable pair over the corpus and
+  asserts bitwise equality per trace.
+
+Every "backend/optimization X is bit-exact vs reference Y" guarantee in the
+suite should go through this layer so a new engine inherits the comparison
+semantics instead of re-deriving them.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Optional, Sequence
+
+import numpy as np
+
+from repro.core.memory.system import EmbeddingTrace
+from repro.core.trace import expand_trace, generate_zipf_trace
+from repro.core.workload import EmbeddingOpSpec
+
+
+def _fail(path: str, msg: str) -> None:
+    raise AssertionError(f"bitwise mismatch at {path or '<root>'}: {msg}")
+
+
+def assert_bitwise_equal_results(a, b, label: str = "") -> None:
+    """Assert two result structures are bitwise identical (no tolerances)."""
+    _assert_equal(a, b, label)
+
+
+def _assert_equal(a, b, path: str) -> None:
+    # SimResult / anything exposing its own structured diff
+    if hasattr(a, "diff") and callable(a.diff) and type(a) is type(b):
+        mism = a.diff(b)
+        if mism:
+            _fail(path, f"{type(a).__name__}.diff: {mism}")
+        return
+    # SweepResult-shaped: compare configs + per-entry results, not wall time
+    if hasattr(a, "entries") and hasattr(b, "entries"):
+        ea, eb = a.entries, b.entries
+        if len(ea) != len(eb):
+            _fail(path, f"entry counts differ: {len(ea)} vs {len(eb)}")
+        for x, y in zip(ea, eb):
+            if x.config != y.config:
+                _fail(path, f"configs differ: {x.config} vs {y.config}")
+            _assert_equal(x.result, y.result, f"{path}[{x.config.label}]")
+        return
+    if isinstance(a, np.ndarray) or isinstance(b, np.ndarray):
+        aa, bb = np.asarray(a), np.asarray(b)
+        # bitwise semantics: NaN == NaN (identical bit patterns must pass)
+        eq_nan = (np.issubdtype(aa.dtype, np.inexact)
+                  and np.issubdtype(bb.dtype, np.inexact))
+        if not np.array_equal(aa, bb, equal_nan=eq_nan):
+            _fail(path, f"arrays differ: {a!r} vs {b!r}")
+        return
+    if dataclasses.is_dataclass(a) and not isinstance(a, type):
+        if type(a) is not type(b):
+            _fail(path, f"types differ: {type(a).__name__} vs {type(b).__name__}")
+        for f in dataclasses.fields(a):
+            _assert_equal(
+                getattr(a, f.name), getattr(b, f.name), f"{path}.{f.name}"
+            )
+        return
+    if isinstance(a, dict) and isinstance(b, dict):
+        if set(a) != set(b):
+            _fail(path, f"keys differ: {sorted(a)} vs {sorted(b)}")
+        for k in a:
+            _assert_equal(a[k], b[k], f"{path}[{k!r}]")
+        return
+    if isinstance(a, (list, tuple)) and isinstance(b, (list, tuple)):
+        if len(a) != len(b):
+            _fail(path, f"lengths differ: {len(a)} vs {len(b)}")
+        for i, (x, y) in enumerate(zip(a, b)):
+            _assert_equal(x, y, f"{path}[{i}]")
+        return
+    if a != b:
+        # bitwise semantics: two NaN scalars are equal (same bit meaning)
+        if isinstance(a, float) and isinstance(b, float) \
+                and a != a and b != b:
+            return
+        _fail(path, f"{a!r} != {b!r}")
+
+
+DEFAULT_SPEC = EmbeddingOpSpec(
+    num_tables=3, rows_per_table=3000, dim=128, lookups_per_sample=6,
+    dtype_bytes=4,
+)
+
+
+def make_etrace(
+    spec: EmbeddingOpSpec,
+    batch_sizes: Sequence[int],
+    seed: int = 0,
+    zipf_s: float = 1.0,
+) -> EmbeddingTrace:
+    """One seeded multi-batch EmbeddingTrace (deterministic in arguments)."""
+    traces = []
+    for bi, bsz in enumerate(batch_sizes):
+        it = generate_zipf_trace(
+            bsz * spec.num_tables * spec.lookups_per_sample,
+            spec.rows_per_table, zipf_s, seed=seed + bi,
+        )
+        traces.append(expand_trace(it, spec, bsz, seed=seed + bi))
+    return EmbeddingTrace(spec, traces)
+
+
+def trace_corpus(
+    spec: Optional[EmbeddingOpSpec] = None,
+    batch_sets: Sequence[Sequence[int]] = ((8, 8), (5, 11, 2)),
+    seeds: Sequence[int] = (0, 7),
+    zipf_s: float = 1.0,
+) -> "list[EmbeddingTrace]":
+    """The seeded trace corpus differential tests share: every (batch-shape,
+    seed) combination, heterogeneous per-batch lengths included."""
+    spec = spec or DEFAULT_SPEC
+    return [
+        make_etrace(spec, bs, seed=s, zipf_s=zipf_s)
+        for bs in batch_sets
+        for s in seeds
+    ]
+
+
+def golden_pair(
+    engine: Callable[[EmbeddingTrace], object],
+    reference: Callable[[EmbeddingTrace], object],
+    corpus: Optional[Sequence[EmbeddingTrace]] = None,
+    label: str = "",
+) -> Callable[[], None]:
+    """Fixture factory: a runner asserting ``engine(trace)`` is bitwise
+    identical to ``reference(trace)`` over the seeded corpus.
+
+    ``engine``/``reference`` take one ``EmbeddingTrace`` and may return any
+    structure ``assert_bitwise_equal_results`` understands (stats lists,
+    ``DramResult`` tuples, ``SimResult``s, ...).
+    """
+    items = list(corpus) if corpus is not None else trace_corpus()
+
+    def run() -> None:
+        for i, et in enumerate(items):
+            assert_bitwise_equal_results(
+                engine(et), reference(et), label=f"{label}[trace {i}]"
+            )
+
+    return run

@@ -9,10 +9,13 @@ the Mattson sharing property (every ways value of a grid classified from ONE
 distance pass). Likewise ``dram_timing_many`` must equal per-request
 dispatch, including the multi-core contended path.
 """
+import logging
+
 import numpy as np
 import pytest
 from _hypothesis_compat import given, settings, st
 
+from differential import assert_bitwise_equal_results
 from repro.core import dlrm_rmc2_small, simulate, sweep, tpuv6e
 from repro.core.hardware import OnChipPolicy
 from repro.core.memory import stack as stack_mod
@@ -127,6 +130,38 @@ def test_stack_backend_falls_back_for_non_stack_policies(rng):
             assert got.num_evictions == ref.num_evictions
 
 
+def test_stack_fallback_selection_and_one_time_warning(caplog):
+    """Regression: srrip/fifo resolve stack->scan / stack_pallas->pallas
+    (lru keeps the stack variants), and the silent fallback now logs exactly
+    ONE warning per (policy, backend) — a user profiling an srrip sweep must
+    learn they are timing the scan engine."""
+    from repro.core.memory.cache import _FALLBACK_WARNED, _effective_backend
+
+    # selection table (the knob can never change results, only execution)
+    assert _effective_backend("lru", "stack") == "stack"
+    assert _effective_backend("lru", "stack_pallas") == "stack_pallas"
+    assert _effective_backend("srrip", "stack") == "scan"
+    assert _effective_backend("fifo", "stack") == "scan"
+    assert _effective_backend("srrip", "stack_pallas") == "pallas"
+    assert _effective_backend("fifo", "scan") == "scan"
+    assert _effective_backend("srrip", "pallas") == "pallas"
+
+    _FALLBACK_WARNED.clear()   # other tests may have tripped it already
+    logger = "repro.core.memory.cache"
+    with caplog.at_level(logging.WARNING, logger=logger):
+        _effective_backend("srrip", "stack")
+        _effective_backend("srrip", "stack")     # second call: silent
+        _effective_backend("lru", "stack")       # no fallback: silent
+    warned = [r for r in caplog.records if r.name == logger]
+    assert len(warned) == 1
+    assert "srrip" in warned[0].getMessage()
+    assert "bit-exact" in warned[0].getMessage()
+    caplog.clear()
+    with caplog.at_level(logging.WARNING, logger=logger):
+        _effective_backend("fifo", "stack_pallas")   # distinct pair: warns
+    assert len([r for r in caplog.records if r.name == logger]) == 1
+
+
 def test_sweep_grid_stack_vs_scan_and_independent_simulate():
     """Every grid point under the stack backend equals both the scan-backend
     sweep and an independent simulate() run, bit for bit."""
@@ -140,14 +175,14 @@ def test_sweep_grid_stack_vs_scan_and_independent_simulate():
     ref = sweep(wl, tpuv6e().with_cache_backend("scan"), **grid)
     assert got.num_configs == ref.num_configs
     for a, b in zip(got.entries, ref.entries):
-        assert not a.result.diff(b.result), a.config.label
+        assert_bitwise_equal_results(a.result, b.result, label=a.config.label)
     for e in got.entries[:: max(1, got.num_configs // 5)]:
         c = e.config
         hw = hw_stack.with_policy(
             OnChipPolicy(c.policy), capacity_bytes=c.capacity_bytes, ways=c.ways
         )
         ind = simulate(wl, hw, seed=0, zipf_s=c.zipf_s)
-        assert not e.result.diff(ind), c.label
+        assert_bitwise_equal_results(e.result, ind, label=c.label)
 
 
 def _mk_request(rng, model, nv, num_segments, num_sources, lpv=8):
@@ -176,13 +211,7 @@ def test_dram_batcher_bit_exact_vs_unbatched(rng):
     for req, (res_b, fin_b) in zip(reqs, batched):
         res_u, fin_u = dram_timing_single(req)
         assert fin_b.shape == fin_u.shape == (req.num_segments, req.num_sources)
-        assert np.array_equal(fin_b, fin_u)
-        for rb, ru in zip(res_b, res_u):
-            assert rb.finish_cycle == ru.finish_cycle
-            assert rb.total_latency_cycles == ru.total_latency_cycles
-            assert rb.row_hits == ru.row_hits
-            assert rb.row_misses == ru.row_misses
-            assert rb.accesses == ru.accesses
+        assert_bitwise_equal_results((res_b, fin_b), (res_u, fin_u))
 
 
 def test_sweep_batch_dram_flag_bit_exact():
@@ -196,8 +225,7 @@ def test_sweep_batch_dram_flag_bit_exact():
     a = sweep(wl, tpuv6e(), batch_dram=True, **grid)
     b = sweep(wl, tpuv6e(), batch_dram=False, **grid)
     assert a.num_configs == b.num_configs
-    for ea, eb in zip(a.entries, b.entries):
-        assert not ea.result.diff(eb.result), ea.config.label
+    assert_bitwise_equal_results(a, b)
 
 
 def test_stack_memo_distinguishes_aliasing_views(rng):
@@ -259,4 +287,4 @@ def test_multicore_cluster_stack_backend_bit_exact():
         hw = base.with_cluster(cores, topo)
         got = simulate(wl, hw.with_cache_backend("stack"), seed=0, zipf_s=0.9)
         ref = simulate(wl, hw.with_cache_backend("scan"), seed=0, zipf_s=0.9)
-        assert not got.diff(ref), (cores, topo)
+        assert_bitwise_equal_results(got, ref, label=f"{cores}c-{topo}")

@@ -1,12 +1,11 @@
 """Multi-core CoreCluster MemorySystem: degenerate bit-exactness, per-core
 trace-sharding conservation laws (property-tested), shared-DRAM contention,
 per-table policy mixes, sweep axes, and config validation."""
-import dataclasses
-
 import numpy as np
 import pytest
 
 from _hypothesis_compat import given, st
+from differential import assert_bitwise_equal_results, golden_pair
 from repro.core import (
     LookupSharding,
     MemorySystem,
@@ -59,11 +58,12 @@ _SPEC = EmbeddingOpSpec(num_tables=3, rows_per_table=3000, dim=128,
 def test_degenerate_cluster_bitexact_per_policy(policy):
     hw = tpuv6e().with_policy(OnChipPolicy(policy), capacity_bytes=1 << 18)
     assert hw.num_cores == 1 and hw.topology == Topology.PRIVATE
-    et = _etrace(_SPEC, [8, 8])
-    single = MemorySystem.from_hardware(hw).simulate_embedding(et)
-    multi = MultiCoreMemorySystem.from_hardware(hw).simulate_embedding(et)
-    for a, b in zip(single, multi):
-        assert dataclasses.asdict(a) == dataclasses.asdict(b)
+    golden_pair(
+        lambda et: MultiCoreMemorySystem.from_hardware(hw).simulate_embedding(et),
+        lambda et: MemorySystem.from_hardware(hw).simulate_embedding(et),
+        corpus=[_etrace(_SPEC, [8, 8])],
+        label=policy,
+    )()
     # and the factory picks the plain single-core pipeline
     assert isinstance(memory_system_for(hw), MemorySystem)
 
@@ -214,11 +214,12 @@ def test_degenerate_policy_mix_bitexact():
     for policy in ("lru", "spm", "pinning"):
         hw = tpuv6e().with_policy(OnChipPolicy(policy), capacity_bytes=1 << 18)
         hwm = hw.with_policy_mix({t: policy for t in range(_SPEC.num_tables)})
-        et = _etrace(_SPEC, [8, 8])
-        a = MemorySystem.from_hardware(hw).simulate_embedding(et)
-        b = MemorySystem.from_hardware(hwm).simulate_embedding(et)
-        for x, y in zip(a, b):
-            assert dataclasses.asdict(x) == dataclasses.asdict(y), policy
+        golden_pair(
+            lambda et: MemorySystem.from_hardware(hwm).simulate_embedding(et),
+            lambda et: MemorySystem.from_hardware(hw).simulate_embedding(et),
+            corpus=[_etrace(_SPEC, [8, 8])],
+            label=policy,
+        )()
 
 
 def test_policy_mix_pinned_hot_cached_cold():
@@ -278,7 +279,7 @@ def test_sweep_cluster_axes_bitexact():
             OnChipPolicy(c.policy), capacity_bytes=c.capacity_bytes, ways=c.ways
         ).with_cluster(c.num_cores, c.topology)
         ref = simulate(wl, hw, seed=0, zipf_s=c.zipf_s)
-        assert not e.result.diff(ref), (c.label, e.result.diff(ref))
+        assert_bitwise_equal_results(e.result, ref, label=c.label)
 
 
 def test_sweep_batched_scans_bitexact_vs_unbatched():
@@ -289,9 +290,7 @@ def test_sweep_batched_scans_bitexact_vs_unbatched():
     a = sweep(wl, tpuv6e(), batch_scans=True, **kw)
     b = sweep(wl, tpuv6e(), batch_scans=False, **kw)
     assert a.num_configs == b.num_configs == 12
-    for ea, eb in zip(a.entries, b.entries):
-        assert ea.config == eb.config
-        assert not ea.result.diff(eb.result), ea.config.label
+    assert_bitwise_equal_results(a, b)
 
 
 # --------------------------------------------------------------------------

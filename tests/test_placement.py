@@ -1,0 +1,390 @@
+"""NUMA placement layer: channel affinity + row placement.
+
+The contract under test (ISSUE 5 tentpole):
+
+* the degenerate ``symmetric``/``interleave`` configuration is *bitwise
+  identical* to the pre-placement engine across every policy, cache backend,
+  and cluster topology (the placement map is the identity and is skipped);
+* the row -> (channel-group, rank) mapping is total, and every placed
+  request decomposes onto exactly one channel of its affine group
+  (property-tested over core counts, affinities, placements, and seeds);
+* ``per_core`` affinity really isolates: the contended shared-DRAM scan over
+  placed addresses equals running each core's stream through an independent
+  ``dram_timing_segmented`` dispatch, finish cycles and row-hit counts
+  bitwise (differential fuzz);
+* the sweep axes (``channel_affinities`` / ``placements``) are memoized
+  correctly — every grid point bit-exact vs an independent ``simulate()``.
+"""
+import numpy as np
+import pytest
+
+from _hypothesis_compat import given, settings, st
+from differential import (
+    assert_bitwise_equal_results,
+    golden_pair,
+    make_etrace,
+    trace_corpus,
+)
+from repro.core import (
+    MemorySystem,
+    OnChipPolicy,
+    dlrm_rmc2_small,
+    memory_system_for,
+    simulate,
+    sweep,
+    tpuv6e,
+)
+from repro.core.hardware import CACHE_BACKENDS, CHANNEL_AFFINITIES, PLACEMENTS
+from repro.core.memory.dram import (
+    DramModel,
+    dram_timing_contended,
+    dram_timing_segmented,
+)
+from repro.core.trace import PlacementMap, profile_hot_vectors
+from repro.core.workload import EmbeddingOpSpec
+
+_SPEC = EmbeddingOpSpec(num_tables=6, rows_per_table=4000, dim=128,
+                        lookups_per_sample=6, dtype_bytes=4)
+
+
+def _pmap(hw, spec=_SPEC, hot_vecs=None):
+    return PlacementMap.from_model(
+        DramModel.from_hardware(hw), hw, spec, hot_vecs=hot_vecs
+    )
+
+
+def _vector_lines(rng, nv, lpv=8):
+    base = rng.integers(0, _SPEC.num_tables * _SPEC.table_bytes // 512,
+                        size=nv).astype(np.int64) * lpv
+    return (base[:, None] + np.arange(lpv)[None, :]).reshape(-1)
+
+
+# --------------------------------------------------------------------------
+# Degenerate config: bitwise identity with the pre-placement engine
+# --------------------------------------------------------------------------
+
+def test_symmetric_interleave_map_is_identity(rng):
+    """place() under symmetric/interleave returns its input bitwise — the
+    degenerate path cannot perturb the historical engine by construction."""
+    pm = _pmap(tpuv6e())
+    assert pm.is_identity
+    lines = _vector_lines(rng, 3000)
+    placed = pm.place(lines, rng.integers(0, 4, size=lines.size))
+    assert placed is lines or np.array_equal(placed, lines)
+    # and the MemorySystem skips the map entirely
+    ms = MemorySystem.from_hardware(tpuv6e())
+    assert ms.placement_map(make_etrace(_SPEC, [4])) is None
+
+
+@pytest.mark.parametrize("cores,topo", [(1, "private"), (2, "private"), (2, "shared")])
+def test_symmetric_interleave_bitexact_per_policy(cores, topo):
+    """Explicitly selecting the degenerate placement equals the default
+    config bitwise for every policy and cluster topology (golden_pair)."""
+    corpus = trace_corpus(spec=_SPEC, batch_sets=((6, 9),), seeds=(0,))
+    from repro.core import available_policies
+
+    for policy in sorted(available_policies()):
+        hw = tpuv6e().with_policy(
+            OnChipPolicy(policy), capacity_bytes=1 << 17
+        ).with_cluster(cores, topo)
+        hw_explicit = hw.with_placement("symmetric", "interleave")
+        golden_pair(
+            lambda et, h=hw_explicit: memory_system_for(h).simulate_embedding(et),
+            lambda et, h=hw: memory_system_for(h).simulate_embedding(et),
+            corpus=corpus,
+            label=f"{policy}/{cores}c-{topo}",
+        )()
+
+
+@pytest.mark.parametrize("backend", CACHE_BACKENDS)
+def test_symmetric_interleave_bitexact_per_backend(backend):
+    """The degenerate placement is invisible under every cache backend
+    (Pallas variants in interpret mode on CPU)."""
+    wl = dlrm_rmc2_small(num_tables=2, rows_per_table=300, batch_size=2,
+                         num_batches=2)
+    hw = tpuv6e().with_policy("lru", capacity_bytes=1 << 14)
+    hw = hw.with_cache_backend(backend)
+    ref = simulate(wl, hw, seed=0, zipf_s=0.9)
+    got = simulate(wl, hw.with_placement("symmetric", "interleave"),
+                   seed=0, zipf_s=0.9)
+    assert_bitwise_equal_results(got, ref, label=backend)
+
+
+# --------------------------------------------------------------------------
+# Property tests: mapping totality + affine routing + conservation
+# --------------------------------------------------------------------------
+
+@settings(max_examples=20, deadline=None)
+@given(
+    cores=st.sampled_from([1, 2, 4, 8, 16]),
+    affinity=st.sampled_from(list(CHANNEL_AFFINITIES)),
+    placement=st.sampled_from(list(PLACEMENTS)),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_mapping_total_and_lands_on_affine_channels(cores, affinity, placement, seed):
+    """Totality + affinity: every line maps to exactly one placed address,
+    and that address decomposes onto a channel of the request's group."""
+    rng = np.random.default_rng(seed)
+    hw = tpuv6e().with_cluster(cores, "private", "table_hash").with_placement(
+        affinity, placement)
+    dm = DramModel.from_hardware(hw)
+    lines = _vector_lines(rng, 500)
+    src = rng.integers(0, cores, size=lines.size).astype(np.int64)
+    hot = profile_hot_vectors((lines * 64) // _SPEC.vector_bytes)
+    pm = _pmap(hw, hot_vecs=hot if placement == "hot_replicate" else None)
+
+    group = pm.group_of(lines, src)
+    assert group.shape == lines.shape            # total: one group per request
+    assert np.all((0 <= group) & (group < pm.num_groups))
+
+    placed = pm.place(lines, src)
+    assert placed.shape == lines.shape           # total: one home per request
+    assert np.all(placed >= 0)
+    ch, _bk, _row = dm.decompose(placed)
+    for g in range(pm.num_groups):
+        m = group == g
+        if not np.any(m):
+            continue
+        affine = set(pm.affine_channels(g).tolist())
+        assert set(np.unique(ch[m]).tolist()) <= affine, (g, affinity, placement)
+    # injectivity per source: distinct lines never merge (row-hit accounting
+    # downstream relies on it)
+    for c in range(cores):
+        m = src == c
+        assert np.unique(placed[m]).size == np.unique(lines[m]).size
+
+
+@settings(max_examples=10, deadline=None)
+@given(cores=st.sampled_from([2, 4]), seed=st.integers(0, 2**31 - 1))
+def test_symmetric_conservation_per_core_counts(cores, seed):
+    """Under symmetric affinity the per-core attribution is pure accounting:
+    per-source access counts sum to the merged total, each source's finish is
+    bounded by the segment finish, and the segment finish equals the max."""
+    rng = np.random.default_rng(seed)
+    dm = DramModel.from_hardware(tpuv6e())
+    lines = _vector_lines(rng, 400)
+    n = lines.size
+    seg = np.sort(rng.integers(0, 2, size=n))
+    src = rng.integers(0, cores, size=n)
+    res, fin = dram_timing_contended(lines, seg, src, 2, cores, dm)
+    merged, fin1 = dram_timing_contended(
+        lines, seg, np.zeros(n, dtype=np.int64), 2, 1, dm)
+    for s in range(2):
+        # same merged stream: per-segment results independent of src tags
+        assert_bitwise_equal_results(res[s], merged[s])
+        per_src = np.bincount(src[seg == s], minlength=cores)
+        assert per_src.sum() == res[s].accesses
+        present = per_src > 0
+        assert np.all(fin[s][present] > 0)
+        assert np.all(fin[s] <= res[s].finish_cycle)
+        assert fin[s].max() == res[s].finish_cycle == fin1[s, 0]
+
+
+# --------------------------------------------------------------------------
+# Differential fuzz: per_core isolation == independent per-core timing
+# --------------------------------------------------------------------------
+
+@settings(max_examples=8, deadline=None)
+@given(cores=st.sampled_from([2, 4, 8]), seed=st.integers(0, 2**31 - 1))
+def test_per_core_contended_equals_private_group_segmented(cores, seed):
+    """With per_core affinity, cores' placed streams touch disjoint channel
+    groups, so the contended shared-DRAM dispatch must equal running each
+    core's own stream through an independent single-core
+    ``dram_timing_segmented`` — finish cycles and row-hit counts bitwise."""
+    rng = np.random.default_rng(seed)
+    hw = tpuv6e().with_cluster(cores, "private", "table_hash").with_placement(
+        "per_core", "interleave")
+    dm = DramModel.from_hardware(hw)
+    pm = _pmap(hw)
+    nv = 600
+    lines = _vector_lines(rng, nv)
+    seg = np.repeat(np.sort(rng.integers(0, 2, size=nv)), 8)
+    src = np.repeat(rng.integers(0, cores, size=nv), 8)
+    placed = pm.place(lines, src)
+
+    res, fin = dram_timing_contended(placed, seg, src, 2, cores, dm)
+    alone = [dram_timing_segmented(placed[src == c], seg[src == c], 2, dm)
+             for c in range(cores)]
+    for s in range(2):
+        for c in range(cores):
+            if np.any((src == c) & (seg == s)):
+                assert fin[s, c] == alone[c][s].finish_cycle, (s, c)
+            else:
+                assert fin[s, c] == 0.0
+        assert res[s].row_hits == sum(a[s].row_hits for a in alone)
+        assert res[s].row_misses == sum(a[s].row_misses for a in alone)
+        assert res[s].finish_cycle == max(a[s].finish_cycle for a in alone)
+
+
+# --------------------------------------------------------------------------
+# Sweep axes + memoization keys
+# --------------------------------------------------------------------------
+
+def test_sweep_placement_axes_bitexact_vs_simulate():
+    """Every (affinity, placement) grid point equals an independent
+    simulate() with the same config — the memo key carries both axes."""
+    wl = dlrm_rmc2_small(num_tables=6, rows_per_table=1500, dim=128,
+                         lookups=3, batch_size=6, num_batches=2)
+    base = tpuv6e().with_cluster(2, "private", "table_hash")
+    sr = sweep(wl, base, policies=("spm", "lru"), capacities=(1 << 16,),
+               ways=(4,), zipf_s=1.0, seed=0,
+               channel_affinities=("symmetric", "per_core", "per_table"),
+               placements=("interleave", "table_rank", "hot_replicate"))
+    assert sr.num_configs == 2 * 3 * 3
+    labels = {e.config.label for e in sr.entries}
+    assert len(labels) == sr.num_configs
+    for e in sr.entries:
+        c = e.config
+        hw = base.with_policy(
+            OnChipPolicy(c.policy), capacity_bytes=c.capacity_bytes, ways=c.ways
+        ).with_placement(c.channel_affinity, c.placement)
+        ref = simulate(wl, hw, seed=0, zipf_s=c.zipf_s)
+        assert_bitwise_equal_results(e.result, ref, label=c.label)
+    # the axes must actually matter: symmetric and per_core SPM points
+    # cannot share DRAM timing on this contended workload
+    by_aff = {
+        e.config.channel_affinity: e.result.embedding_cycles
+        for e in sr.entries
+        if e.config.policy == "spm" and e.config.placement == "interleave"
+    }
+    assert by_aff["symmetric"] != by_aff["per_core"]
+
+
+def test_single_core_affinity_collapses_and_memoizes():
+    """With one core every affinity is a single channel group, so the sweep
+    canonicalizes the memo key — all affinity values of an nc=1 grid point
+    are bitwise identical to symmetric AND to independent simulate()."""
+    wl = dlrm_rmc2_small(num_tables=6, rows_per_table=1500, dim=128,
+                         lookups=3, batch_size=6, num_batches=2)
+    sr = sweep(wl, tpuv6e(), policies=("lru",), capacities=(1 << 16,),
+               ways=(4,), zipf_s=1.0, seed=0,
+               channel_affinities=("symmetric", "per_core", "per_table"),
+               placements=("interleave", "table_rank"))
+    by = {(e.config.channel_affinity, e.config.placement): e.result
+          for e in sr.entries}
+    for plc in ("interleave", "table_rank"):
+        for aff in ("per_core", "per_table"):
+            assert_bitwise_equal_results(by[(aff, plc)], by[("symmetric", plc)],
+                                         label=f"{aff}/{plc}")
+        hw = tpuv6e().with_policy("lru", capacity_bytes=1 << 16, ways=4
+                                  ).with_placement("per_core", plc)
+        assert_bitwise_equal_results(
+            by[("per_core", plc)], simulate(wl, hw, seed=0, zipf_s=1.0))
+
+
+def test_single_core_placement_rides_batched_classification():
+    """On a 1-core grid the vmapped same-policy classification batching still
+    applies; placement happens per memo key downstream of it — every grid
+    point bit-exact vs independent simulate(), batched or not."""
+    wl = dlrm_rmc2_small(num_tables=6, rows_per_table=1500, dim=128,
+                         lookups=3, batch_size=6, num_batches=2)
+    base = tpuv6e().with_placement("symmetric", "table_rank")
+    kw = dict(policies=("lru",), capacities=(1 << 16, 1 << 17, 1 << 18),
+              ways=(4,), zipf_s=1.0, seed=0)
+    a = sweep(wl, base, batch_scans=True, **kw)
+    b = sweep(wl, base, batch_scans=False, **kw)
+    assert_bitwise_equal_results(a, b)
+    for e in a.entries:
+        c = e.config
+        assert c.placement == "table_rank"
+        hw = base.with_policy(
+            OnChipPolicy(c.policy), capacity_bytes=c.capacity_bytes, ways=c.ways
+        )
+        assert_bitwise_equal_results(
+            e.result, simulate(wl, hw, seed=0, zipf_s=c.zipf_s), label=c.label
+        )
+
+
+def test_hot_replicate_deterministic_and_conserves_accesses():
+    """hot_replicate profiles its hot set from the trace deterministically:
+    repeated runs are bitwise identical, and placement never changes HOW MUCH
+    traffic there is — only where it lands."""
+    wl = dlrm_rmc2_small(num_tables=6, rows_per_table=4000, dim=128,
+                         lookups=6, batch_size=12, num_batches=2)
+    hw = tpuv6e().with_policy("lru", capacity_bytes=1 << 17).with_cluster(
+        2, "private", "table_hash").with_placement("per_core", "hot_replicate")
+    a = simulate(wl, hw, seed=0, zipf_s=1.05)
+    b = simulate(wl, hw, seed=0, zipf_s=1.05)
+    assert_bitwise_equal_results(a, b)
+    ref = simulate(wl, hw.with_placement("symmetric", "interleave"),
+                   seed=0, zipf_s=1.05)
+    assert a.cache_hits == ref.cache_hits
+    assert a.cache_misses == ref.cache_misses
+    assert a.offchip_reads == ref.offchip_reads
+    assert (a.batches[0].dram_row_hits + a.batches[0].dram_row_misses
+            == ref.batches[0].dram_row_hits + ref.batches[0].dram_row_misses)
+
+
+def test_per_core_affinity_reduces_contention_with_table_hash():
+    """The headline claim (examples/placement_contention.py, smoke-sized):
+    per_core affinity + table_hash sharding strictly lowers contended
+    embedding cycles vs symmetric on a balanced all-miss workload."""
+    wl = dlrm_rmc2_small(num_tables=6, rows_per_table=20000, dim=128,
+                         lookups=8, batch_size=32, num_batches=2)
+    hw = tpuv6e().with_policy(OnChipPolicy.SPM).with_cluster(
+        2, "private", "table_hash")
+    sym = simulate(wl, hw, seed=0, zipf_s=1.05)
+    pc = simulate(wl, hw.with_placement("per_core", "interleave"),
+                  seed=0, zipf_s=1.05)
+    assert pc.embedding_cycles < sym.embedding_cycles
+
+
+# --------------------------------------------------------------------------
+# Validation
+# --------------------------------------------------------------------------
+
+def test_table_rank_never_shares_a_row_across_tables():
+    """Regression: the per-table q-span is row-aligned, so two tables homed
+    to the same rank can never share the DRAM row straddling their boundary
+    (an unaligned span counted a spurious cross-table row hit per boundary —
+    in exactly the configs table_rank claims to isolate)."""
+    # rows_per_table chosen so table_bytes // interleave_bytes + 2 is NOT a
+    # multiple of blocks_per_row; group_size=1 puts every block of a table on
+    # one (channel, bank) where boundary rows would collide.
+    spec = EmbeddingOpSpec(num_tables=8, rows_per_table=4001, dim=128,
+                           lookups_per_sample=4, dtype_bytes=4)
+    hw = tpuv6e().with_cluster(16, "private", "table_hash").with_placement(
+        "per_core", "table_rank")
+    dm = DramModel.from_hardware(hw)
+    pm = PlacementMap.from_model(dm, hw, spec)
+    # every line of the address space boundary region of each table pair
+    lpv = spec.vector_bytes // 64
+    rows = np.arange(spec.rows_per_table * spec.num_tables, dtype=np.int64)
+    lines = (rows[:, None] * lpv + np.arange(lpv)[None, :]).reshape(-1)
+    # per_core routing: give each line its table's owning core (table_hash)
+    from repro.core.trace import table_core_of
+    src = table_core_of(pm.table_of(lines), hw.num_cores).astype(np.int64)
+    placed = pm.place(lines, src)
+    ch, bk, row = dm.decompose(placed)
+    key = (ch.astype(np.int64) * dm.banks_per_channel + bk) * (2**32) + row
+    t = pm.table_of(lines)
+    order = np.argsort(key, kind="stable")
+    same_row = key[order][1:] == key[order][:-1]
+    assert np.all(t[order][1:][same_row] == t[order][:-1][same_row])
+
+
+def test_with_placement_validation():
+    with pytest.raises(ValueError, match="channel affinity"):
+        tpuv6e().with_placement("per_rank")
+    with pytest.raises(ValueError, match="placement"):
+        tpuv6e().with_placement(placement="hot")
+    hw = tpuv6e().with_placement("per_core", "table_rank")
+    assert hw.channel_affinity == "per_core"
+    assert hw.placement == "table_rank"
+    # per_core routing without source-core tags must fail loudly, not home
+    # everything to group 0 (regression)
+    pm = _pmap(hw.with_cluster(4, "private", "table_hash"))
+    with pytest.raises(ValueError, match="source-core"):
+        pm.group_of(np.arange(10, dtype=np.int64), None)
+
+
+def test_uneven_channel_split_rejected():
+    """per_core affinity needs channels % num_cores == 0 — checked when the
+    placement map is built (the cluster shape may change after
+    with_placement)."""
+    wl = dlrm_rmc2_small(num_tables=3, rows_per_table=500, lookups=2,
+                         batch_size=4)
+    hw = tpuv6e().with_cluster(3, "private", "table_hash").with_placement(
+        "per_core", "interleave")
+    with pytest.raises(ValueError, match="divisible"):
+        simulate(wl, hw, seed=0)
