@@ -33,6 +33,15 @@ WAYS = (8, 16)
 ZIPF = 1.0
 N_INDEPENDENT_SAMPLE = 6
 
+# The placement-axes slice grid: shared with scripts/perf_smoke.py (imported,
+# not copied, so the ratio gate measures exactly what the benchmark reports).
+PLACEMENT_TABLES = 6
+PLACEMENT_AXES = dict(
+    policies=("spm", "lru"), zipf_s=ZIPF, seed=0,
+    channel_affinities=("symmetric", "per_core", "per_table"),
+    placements=("interleave", "table_rank", "hot_replicate"),
+)
+
 
 def run(profile: bool = False) -> List[Dict]:
     wl = dlrm_rmc2_small(num_tables=TABLES, rows_per_table=ROWS, batch_size=BATCH,
@@ -71,16 +80,18 @@ def run(profile: bool = False) -> List[Dict]:
     # NUMA placement-axes slice: the (affinity x placement) grid on a
     # 2-core table_hash cluster, timed separately so the headline
     # per_config_ms (the perf-gate number) keeps its historical grid.
-    wl_p = dlrm_rmc2_small(num_tables=6, rows_per_table=ROWS, batch_size=BATCH,
-                           num_batches=2)
+    wl_p = dlrm_rmc2_small(num_tables=PLACEMENT_TABLES, rows_per_table=ROWS,
+                           batch_size=BATCH, num_batches=2)
     hw_p = base_hw.with_cluster(2, "private", "table_hash")
-    placement_axes = dict(
-        policies=("spm", "lru"), zipf_s=ZIPF, seed=0,
-        channel_affinities=("symmetric", "per_core", "per_table"),
-        placements=("interleave", "table_rank", "hot_replicate"),
-    )
+    placement_axes = PLACEMENT_AXES
     sweep(wl_p, hw_p, **placement_axes)          # warm
-    sr_p = sweep(wl_p, hw_p, **placement_axes)
+    # Best-of-2: the placement slice feeds a ratio gate (perf_smoke) and
+    # single-shot walls on small shared runners carry ~20% scheduler noise,
+    # enough to flip the gate without any code change.
+    sr_p = min(
+        (sweep(wl_p, hw_p, **placement_axes) for _ in range(2)),
+        key=lambda s: s.wall_seconds,
+    )
 
     sample = sr.entries[:: max(1, len(sr.entries) // N_INDEPENDENT_SAMPLE)]
     t0 = time.perf_counter()

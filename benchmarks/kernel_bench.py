@@ -10,8 +10,11 @@ engine, Pallas kernel in interpret mode, sequential GoldenCache) in
 accesses/second. ``run_stack_distance()`` benchmarks the analytic LRU
 stack-distance engine (numpy host twin, device-resident jnp pass, Pallas
 distance kernel) against the scan backend across trace lengths and set
-counts, asserting bit-exact agreement in-line. Both save into
-BENCH_cache_kernel.json, uploaded with the CI artifacts.
+counts, asserting bit-exact agreement in-line. ``run_rrip_engines()`` does
+the same for srrip/fifo through the compressed per-set analytic engines
+(``memory/rrip.py``), so all three sweep-default cache backends are tracked
+per-PR. All save into BENCH_cache_kernel.json, uploaded with the CI
+artifacts.
 """
 from __future__ import annotations
 
@@ -199,10 +202,58 @@ def run_stack_distance() -> List[Dict]:
     return rows
 
 
+def run_rrip_engines() -> List[Dict]:
+    """SRRIP/FIFO analytic engines (acc/s) vs the sequential scan backend.
+
+    Same shape as ``run_stack_distance()`` but for the two non-LRU policies,
+    which classify through the compressed per-set engines in
+    ``memory/rrip.py`` when the sweep routes them to the ``stack`` backend.
+    A 4-point ways axis per (trace, set count) makes the one-presort-per-
+    (stream, num_sets) sharing show up as throughput; every row is asserted
+    bit-exact against the scan backend in-line.
+    """
+    from repro.core.memory import rrip as rrip_mod
+    from repro.core.memory.cache import CacheGeometry, simulate_cache_many
+
+    rng = np.random.default_rng(0)
+    ways_axis = (2, 4, 8, 16)
+    rows: List[Dict] = []
+    for policy in ("srrip", "fifo"):
+        for n, sets in ((8192, 64), (8192, 512), (32768, 512)):
+            stream = rng.integers(0, n, size=n).astype(np.int64)
+            geoms = [CacheGeometry(num_sets=sets, ways=w, line_bytes=64)
+                     for w in ways_axis]
+            streams = [stream] * len(geoms)
+            total = n * len(geoms)
+
+            ref = simulate_cache_many(streams, geoms, policy, backend="scan")
+            t0 = time.time()
+            simulate_cache_many(streams, geoms, policy, backend="scan")
+            dt_scan = time.time() - t0
+            rows.append({"kernel": "rrip_engine", "variant": "scan-backend",
+                         "policy": policy, "n": n, "sets": sets,
+                         "us": dt_scan * 1e6,
+                         "macc_per_s": total / dt_scan / 1e6})
+
+            simulate_cache_many(streams, geoms, policy, backend="stack")  # warm
+            ap0 = rrip_mod.analytic_pass_count()
+            t0 = time.time()
+            got = simulate_cache_many(streams, geoms, policy, backend="stack")
+            dt = time.time() - t0
+            assert rrip_mod.analytic_pass_count() - ap0 == 1  # shared presort
+            for r, g in zip(ref, got):
+                assert np.array_equal(r.hits, g.hits)
+                assert r.num_evictions == g.num_evictions
+            rows.append({"kernel": "rrip_engine", "variant": "analytic",
+                         "policy": policy, "n": n, "sets": sets,
+                         "us": dt * 1e6, "macc_per_s": total / dt / 1e6})
+    return rows
+
+
 if __name__ == "__main__":
     from benchmarks import common
 
-    cache_rows = run_cache_scan() + run_stack_distance()
+    cache_rows = run_cache_scan() + run_stack_distance() + run_rrip_engines()
     path = common.save_rows("BENCH_cache_kernel", cache_rows)
     print(f"saved {path}")
     for r in cache_rows:

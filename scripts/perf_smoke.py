@@ -15,6 +15,10 @@ asserts bit-exact agreement with the scan backend in the same job, plus a
 NUMA placement-axes sweep smoke (channel_affinities x placements memo keys
 bit-exact vs independent simulate(), symmetric/interleave vs the axes-free
 sweep) so the 1.5x gate and the exactness checks cover the placement layer.
+The benchmark's placement-axes slice is additionally gated as a RATIO: its
+per-config wall must stay within 2x of the base grid's (both best-of-3), so
+the batched placement dispatch can't silently decay back toward the old
+per-config path.
 
 Usage:  PYTHONPATH=src python scripts/perf_smoke.py [--update-baseline]
 Baseline: benchmarks/perf_baseline.json (checked in; results/ is gitignored).
@@ -42,6 +46,11 @@ from repro.core import (                            # noqa: E402
 
 BASELINE_PATH = os.path.join(_REPO_ROOT, "benchmarks", "perf_baseline.json")
 REGRESSION_FACTOR = 1.5
+# The placement-axes slice pays two structural costs the base grid does not
+# (multi-source contended timing + the placement transform), but the batched
+# dispatch keeps it within 2x of the base grid's per-config wall. An absolute
+# ratio gate (not a baseline delta) so the two slices can't drift apart.
+PLACEMENT_RATIO_LIMIT = 2.0
 
 # The guarded grid IS the dse_sweep benchmark grid — imported, not copied,
 # so the gate can never drift from what the benchmark measures.
@@ -79,6 +88,25 @@ def measure() -> "tuple[float, int, dict]":
         for k, v in prof.breakdown(total_seconds=profiled_wall).items()
     }
     return best, num_configs, stages
+
+
+def measure_placement() -> "tuple[float, int]":
+    """Steady-state per_config_ms of the placement-axes slice (best of 3) —
+    the grid is imported from the benchmark, never copied."""
+    wl = dlrm_rmc2_small(num_tables=_bench.PLACEMENT_TABLES,
+                         rows_per_table=_bench.ROWS,
+                         batch_size=_bench.BATCH, num_batches=2)
+    hw = tpuv6e().with_cluster(2, "private", "table_hash")
+    sweep(wl, hw, **_bench.PLACEMENT_AXES)      # warm
+    best = float("inf")
+    num_configs = 0
+    for _ in range(3):
+        t0 = time.perf_counter()
+        sr = sweep(wl, hw, **_bench.PLACEMENT_AXES)
+        wall = time.perf_counter() - t0
+        num_configs = sr.num_configs
+        best = min(best, wall / sr.num_configs * 1e3)
+    return best, num_configs
 
 
 def backend_smoke() -> None:
@@ -136,13 +164,18 @@ def main() -> int:
     backend_smoke()
     placement_smoke()
     per_config_ms, num_configs, stages = measure()
+    placement_ms, placement_configs = measure_placement()
+    ratio = placement_ms / per_config_ms
 
     if args.update_baseline or not os.path.exists(BASELINE_PATH):
         with open(BASELINE_PATH, "w") as f:
             json.dump({"per_config_ms": round(per_config_ms, 3),
                        "grid_configs": num_configs,
+                       "placement_per_config_ms": round(placement_ms, 3),
+                       "placement_configs": placement_configs,
                        "stage_ms_per_config": stages}, f, indent=2)
-        print(f"baseline written: {per_config_ms:.1f} ms/config -> {BASELINE_PATH}")
+        print(f"baseline written: {per_config_ms:.1f} ms/config (placement "
+              f"{placement_ms:.1f}, ratio {ratio:.2f}x) -> {BASELINE_PATH}")
         return 0
 
     with open(BASELINE_PATH) as f:
@@ -171,6 +204,14 @@ def main() -> int:
     if per_config_ms > limit:
         print("PERF REGRESSION: sweep per-config time exceeds the allowed "
               "factor over the checked-in baseline", file=sys.stderr)
+        return 1
+    print(f"placement_per_config_ms={placement_ms:.1f} "
+          f"(baseline {baseline_rec.get('placement_per_config_ms', 0.0):.1f}) "
+          f"ratio={ratio:.2f}x limit={PLACEMENT_RATIO_LIMIT}x")
+    if ratio > PLACEMENT_RATIO_LIMIT:
+        print("PERF REGRESSION: placement-axes slice exceeds "
+              f"{PLACEMENT_RATIO_LIMIT}x the base grid's per-config time",
+              file=sys.stderr)
         return 1
     print("perf smoke OK")
     return 0

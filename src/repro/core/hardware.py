@@ -94,16 +94,18 @@ PLACEMENTS = ("interleave", "table_rank", "hot_replicate")
 #   "scan"         — vmapped lax.scan engine (the sequential reference).
 #   "pallas"       — VMEM-resident Pallas scan kernel (kernels/cache_scan.py;
 #                    interpret mode off-TPU).
-#   "stack"        — analytic LRU stack-distance engine (memory/stack.py):
-#                    one sort-based distance pass per (stream, num_sets)
-#                    classifies EVERY associativity, no sequential scan.
-#                    The default: fastest for DSE sweeps over LRU grids.
-#   "stack_pallas" — the Pallas kernel variant of the distance pass
-#                    (kernels/stack_distance.py), VMEM recency state.
-# The stack variants apply to LRU (the stack algorithm); non-stack policies
-# (srrip, fifo) transparently fall back to scan / pallas respectively. Every
-# backend is bit-exact against the golden model — the knob trades execution
-# strategy, never results.
+#   "stack"        — analytic engines (the default, fastest for DSE sweeps):
+#                    LRU via the stack-distance engine (memory/stack.py; one
+#                    sort-based distance pass per (stream, num_sets)
+#                    classifies EVERY associativity), srrip/fifo via the
+#                    compressed per-set engines (memory/rrip.py; shared
+#                    presort per (stream, num_sets), short batched per-set
+#                    scans). No policy runs a full-trace sequential scan.
+#   "stack_pallas" — like "stack", but the LRU distance pass runs the Pallas
+#                    kernel (kernels/stack_distance.py), VMEM recency state;
+#                    identical to "stack" for srrip/fifo.
+# Every backend is bit-exact against the golden model — the knob trades
+# execution strategy, never results.
 CACHE_BACKENDS = ("scan", "pallas", "stack", "stack_pallas")
 
 
@@ -206,9 +208,9 @@ class HardwareConfig:
     placement: str = "interleave"
     # Simulator-engine knob (not a hardware parameter): which cache-engine
     # backend classifies set-associative accesses. See CACHE_BACKENDS. The
-    # default "stack" classifies LRU analytically (one stack-distance pass
-    # covers every associativity) and falls back to "scan" for non-stack
-    # replacement policies — results are bit-exact across all backends.
+    # default "stack" classifies every policy analytically (stack-distance
+    # passes for LRU, compressed per-set engines for srrip/fifo) — results
+    # are bit-exact across all backends.
     cache_backend: str = "stack"
 
     def cycles_to_seconds(self, cycles: float) -> float:
@@ -301,8 +303,9 @@ class HardwareConfig:
 
         Results are bit-exact across backends (test-enforced); this only
         chooses how set-associative classification executes. The "stack"
-        variants apply to LRU and transparently fall back to scan/pallas for
-        non-stack policies.
+        variants cover every policy analytically (stack distances for LRU,
+        compressed per-set engines for srrip/fifo); "stack_pallas" differs
+        from "stack" only in LRU's distance pass.
         """
         if backend not in CACHE_BACKENDS:
             raise ValueError(

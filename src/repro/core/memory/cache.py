@@ -26,16 +26,18 @@ optimizations keep it fast while remaining bit-exact (both tested):
 Backends: the scan engine above (``cache_backend="scan"``), a Pallas kernel
 (``cache_backend="pallas"``, ``kernels/cache_scan.py``) that keeps the
 (tags, meta) set-group state in VMEM and walks the padded sub-trace
-in-kernel, and the analytic stack-distance engine for LRU
-(``cache_backend="stack"``, the default — ``memory/stack.py``; LRU is a
-stack algorithm, so one sort-based distance pass per (stream, num_sets)
-classifies every associativity with no sequential scan, plus a Pallas
-distance-kernel variant ``"stack_pallas"``, ``kernels/stack_distance.py``).
-Non-stack policies (srrip, fifo) transparently fall back from the stack
-variants to scan/pallas. Scan and pallas run through the same set-group
-partitioning and length bucketing; ALL backends are bit-exact against
-``golden.GoldenCache`` (test-enforced); the Pallas paths fall back to
-interpret mode off-TPU so CPU CI exercises them end to end.
+in-kernel, and the analytic engines (``cache_backend="stack"``, the
+default). Under ``"stack"``/``"stack_pallas"`` every policy classifies
+without a full-trace sequential scan: LRU through shared Mattson
+stack-distance passes (``memory/stack.py``; one sort-based pass per
+(stream, num_sets) classifies every associativity; ``"stack_pallas"``
+swaps in the Pallas distance kernel, ``kernels/stack_distance.py``), and
+srrip/fifo through the compressed per-set engines (``memory/rrip.py``:
+shared presort per (stream, num_sets), short batched per-set scans instead
+of one O(n) scan per config). Scan and pallas run through the same
+set-group partitioning and length bucketing; ALL backends are bit-exact
+against ``golden.GoldenCache`` (test-enforced); the Pallas paths fall back
+to interpret mode off-TPU so CPU CI exercises them end to end.
 
 Replacement semantics (matching ChampSim):
   * LRU   — victim = first invalid way, else least-recently-used way.
@@ -48,7 +50,6 @@ Replacement semantics (matching ChampSim):
 from __future__ import annotations
 
 import functools
-import logging
 from dataclasses import dataclass
 
 import jax
@@ -205,34 +206,20 @@ def _validate(policy: str, backend: str) -> None:
         )
 
 
-_log = logging.getLogger(__name__)
-_FALLBACK_WARNED: "set[tuple[str, str]]" = set()
-
-
 def _effective_backend(policy: str, backend: str) -> str:
     """Resolve the stack variants per policy.
 
-    Only LRU is a stack algorithm; under ``"stack"``/``"stack_pallas"`` the
-    non-stack policies (srrip, fifo) transparently fall back to the
-    corresponding scan engine — the backend knob can never change results.
-    The fallback is logged once per (policy, backend) so a user profiling an
-    srrip/fifo sweep learns they are timing the scan engine, not the
-    analytic stack pass they selected.
+    Every policy has an analytic engine, so ``"stack"`` resolves to
+    ``"stack"`` for all of them: LRU classifies through Mattson
+    stack-distance passes and srrip/fifo through the compressed per-set
+    engines (``rrip.py``). Only the LRU *distance pass* has a Pallas
+    variant, so ``"stack_pallas"`` differs from ``"stack"`` for LRU alone
+    and resolves to ``"stack"`` otherwise. The backend knob can never
+    change results — all engines are bit-exact (test-enforced).
     """
-    resolved = backend
-    if backend == "stack":
-        resolved = "stack" if policy == "lru" else "scan"
-    elif backend == "stack_pallas":
-        resolved = "stack_pallas" if policy == "lru" else "pallas"
-    if resolved != backend and (policy, backend) not in _FALLBACK_WARNED:
-        _FALLBACK_WARNED.add((policy, backend))
-        _log.warning(
-            "cache_backend=%r applies only to LRU (a stack algorithm); "
-            "policy %r falls back to the %r engine — results are bit-exact, "
-            "only the execution strategy differs",
-            backend, policy, resolved,
-        )
-    return resolved
+    if backend == "stack_pallas" and policy != "lru":
+        return "stack"
+    return backend
 
 
 def simulate_cache(
@@ -339,6 +326,20 @@ def _run_buckets(lines_list, geometries, policy: str, backend: str):
     return out
 
 
+def _classify_analytic(lines_list, geometries, policy):
+    """(hits, evictions) pairs from the policy's analytic engine: Mattson
+    stack distances for LRU, compressed per-set engines for srrip/fifo."""
+    if policy == "lru":
+        from .stack import classify_lru_stack_many
+
+        return classify_lru_stack_many(lines_list, geometries)
+    from .rrip import classify_analytic_many
+
+    return classify_analytic_many(
+        lines_list, [(g.num_sets, g.ways) for g in geometries], policy
+    )
+
+
 def simulate_cache_many(
     streams: "list[np.ndarray]",
     geometries: "list[CacheGeometry]",
@@ -360,8 +361,7 @@ def simulate_cache_many(
         raise ValueError("streams and geometries length mismatch")
     backend = _effective_backend(policy, backend)
     if backend == "stack":
-        from .stack import classify_lru_stack_many
-
+        pairs = _classify_analytic(lines_list, geometries, policy)
         return [
             CacheResult(
                 hits=h,
@@ -369,7 +369,7 @@ def simulate_cache_many(
                 num_misses=h.size - int(h.sum()),
                 num_evictions=ev,
             )
-            for h, ev in classify_lru_stack_many(lines_list, geometries)
+            for h, ev in pairs
         ]
 
     hits_out = [np.zeros(l.size, dtype=bool) for l in lines_list]
@@ -410,8 +410,9 @@ def classify_streams(
     same bucketed device dispatches as ``simulate_cache_many``, but skips
     eviction accounting and performs exactly ONE blocking device->host
     extraction per bucket — the single sync point of the classify stage.
-    Under the ``stack`` backend LRU classifies through shared analytic
-    stack-distance passes instead (one per (stream, num_sets)).
+    Under the ``stack`` backend every policy classifies through its shared
+    analytic passes instead (stack distances for LRU, compressed per-set
+    engines for srrip/fifo — one presort per (stream, num_sets)).
     """
     _validate(policy, backend)
     lines_list = [np.asarray(s, dtype=np.int64).reshape(-1) for s in streams]
@@ -419,9 +420,7 @@ def classify_streams(
         raise ValueError("streams and geometries length mismatch")
     backend = _effective_backend(policy, backend)
     if backend == "stack":
-        from .stack import classify_lru_stack_many
-
-        return [h for h, _ in classify_lru_stack_many(lines_list, geometries)]
+        return [h for h, _ in _classify_analytic(lines_list, geometries, policy)]
     hits_out = [np.zeros(l.size, dtype=bool) for l in lines_list]
     for ts, h_d, _ in _run_buckets(lines_list, geometries, policy, backend):
         with stage("host_sync"):

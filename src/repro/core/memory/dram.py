@@ -40,6 +40,7 @@ traces; tests pin it within tolerance of the event scan.
 from __future__ import annotations
 
 import functools
+import os
 from dataclasses import dataclass
 from typing import List
 
@@ -118,6 +119,32 @@ class DramModel:
         return ch, bk, row
 
 
+def _argsort_stable(key: np.ndarray) -> np.ndarray:
+    """Stable argsort of non-negative int64 keys, radix-accelerated.
+
+    numpy's ``kind="stable"`` runs an O(n) radix sort for 16-bit integer
+    dtypes but falls back to mergesort (~8x slower at FR-FCFS sizes) for
+    wider ones. An LSD radix sort built from stable uint16-digit passes
+    produces the *identical* permutation: each pass sorts by one more
+    significant digit with ties resolved by the previous pass's order, so
+    the composition is exactly the unique stable order by the full key
+    (test-enforced against ``np.argsort(key, kind="stable")``).
+    """
+    kmax = int(key.max()) if key.size else 0
+    if kmax < (1 << 16):
+        return np.argsort(key.astype(np.uint16), kind="stable")
+    order = np.argsort((key & 0xFFFF).astype(np.uint16), kind="stable")
+    k = key[order] >> 16
+    shift = 16
+    while True:
+        nxt = np.argsort((k & 0xFFFF).astype(np.uint16), kind="stable")
+        order = order[nxt]
+        shift += 16
+        if (kmax >> shift) == 0:
+            return order
+        k = k[nxt] >> 16
+
+
 def _per_key_rank(keys: np.ndarray) -> np.ndarray:
     """Rank of each element within its key group, preserving original order."""
     n = keys.size
@@ -163,7 +190,7 @@ def _frfcfs_order(
     if seg is not None:
         chq = seg.astype(np.int64) * channels + chq
     gb = chq * banks + bk
-    order0 = np.argsort(gb, kind="stable")    # per-bank streams, in order
+    order0 = _argsort_stable(gb)              # per-bank streams, in order
     gb_s, blk_s = gb[order0], blk[order0]
     first = np.ones(n, dtype=bool)
     first[1:] = gb_s[1:] != gb_s[:-1]
@@ -175,7 +202,7 @@ def _frfcfs_order(
     # Final service key (chq, inst, bk); ties = arrival order via stability.
     key = np.empty(n, dtype=np.int64)
     key[order0] = (chq[order0] * (n + 1) + inst_s) * banks + bk[order0]
-    return np.argsort(key, kind="stable")
+    return _argsort_stable(key)
 
 
 def _frfcfs_order_ref(
@@ -293,6 +320,7 @@ def _scan_channel_chunked(
     banks: int,
     k_max: int,
     t_row_act: float,
+    t_cas: float,
     bus_cycles_per_line: float,
 ):
     """Per-(segment, channel) scan over same-(bank, block) chunks.
@@ -303,13 +331,21 @@ def _scan_channel_chunked(
     each (reproduced as the same sequence of f32 adds, so state — and every
     derived completion — is bitwise identical). Bank state is updated via
     one-hot masks rather than gather/scatter (faster on small carries, same
-    values). Returns the first-access completion (CAS excluded) and row-hit
-    flag per chunk; ``_expand_chunks`` reconstructs per-access values.
+    values).
+
+    Device-resident bookkeeping: the carry also folds each row's run
+    aggregates as it scans — the f32 latency chain ``sum_chunks sum_j
+    (done_j + t_cas)`` accumulated sequentially in service order (padded
+    columns add exact 0.0, so the value is layout-independent), the row-hit
+    count, and the running max of chunk-last completions (CAS excluded).
+    ``simulate_dram_contended`` extracts only these (R,)-sized aggregates
+    for single-source requests; the per-chunk ``(done0, row_hit)`` outputs
+    remain for per-source finish attribution and the host reference mode.
     """
 
     def one_row(bk_r, row_r, k_r, v_r):
         def step(carry, x):
-            open_row, bank_free, bus_free = carry
+            open_row, bank_free, bus_free, lat_acc, hit_acc, dmax = carry
             b, r, k, v = x
             sel = jax.lax.iota(jnp.int32, banks) == b
             row_hit = jnp.any(sel & (open_row == r))
@@ -318,13 +354,21 @@ def _scan_channel_chunked(
             bank_avail = jnp.maximum(jnp.float32(0.0), bank_prev) + occ
             done0 = jnp.maximum(bank_avail, bus_free) + bus_cycles_per_line
             dlast = done0
+            lc = done0 + t_cas
             for j in range(1, k_max):
-                dlast = jnp.where(j < k, dlast + bus_cycles_per_line, dlast)
+                live = j < k
+                dlast = jnp.where(live, dlast + bus_cycles_per_line, dlast)
+                lc = jnp.where(live, lc + (dlast + t_cas), lc)
             upd = sel & v
             open_row = jnp.where(upd, r, open_row)
             bank_free = jnp.where(upd, dlast, bank_free)
             bus_free = jnp.where(v, dlast, bus_free)
-            return (open_row, bank_free, bus_free), (
+            lat_acc = lat_acc + jnp.where(v, lc, 0.0)
+            hit_acc = hit_acc + jnp.where(
+                v, k - 1 + row_hit.astype(jnp.int32), 0
+            )
+            dmax = jnp.maximum(dmax, jnp.where(v, dlast, 0.0))
+            return (open_row, bank_free, bus_free, lat_acc, hit_acc, dmax), (
                 jnp.where(v, done0, 0.0), row_hit & v
             )
 
@@ -332,19 +376,30 @@ def _scan_channel_chunked(
             jnp.full((banks,), -1, dtype=jnp.int32),
             jnp.zeros((banks,), dtype=jnp.float32),
             jnp.float32(0.0),
+            jnp.float32(0.0),
+            jnp.int32(0),
+            jnp.float32(0.0),
         )
-        _, outs = jax.lax.scan(
+        carry, outs = jax.lax.scan(
             step, init, (bk_r, row_r, k_r, v_r), unroll=_SCAN_UNROLL
         )
-        return outs
+        return (carry[3], carry[4], carry[5]), outs
 
     return jax.vmap(one_row)(bkc, rowc, kc, valid)
 
 
 def _chunk_bucket_len(n: int) -> int:
-    """Power-of-two padding for chunk rows (compiled-shape reuse)."""
+    """Bucketed padding for chunk rows (compiled-shape reuse).
+
+    Half-octave steps (64, 96, 128, 192, ...): scan wall time is linear in
+    the padded length, so pure powers of two waste up to ~2x sequential
+    steps on rows that just cross a boundary; the 1.5x intermediates cap
+    the padding overhead at 33% for at most twice the compiled-shape pool.
+    """
     b = 64
     while b < n:
+        if n <= b + b // 2:
+            return b + b // 2
         b *= 2
     return b
 
@@ -464,6 +519,7 @@ def simulate_dram_contended(
     num_segments: int,
     num_sources: int,
     model: DramModel,
+    aggregate: str = "device",
 ):
     """Shared-DRAM timing with cross-source contention within each segment.
 
@@ -480,45 +536,92 @@ def simulate_dram_contended(
     DRAM stall under contention is directly observable.
 
     Engine: run-compressed FR-FCFS ordering on the host, then ONE chunked
-    device scan over all (segment, channel) rows (``_scan_channel_chunked``),
-    then a single chunk-granular device->host extraction; in-chunk
-    completions are replayed on the host with the identical f32 op chain.
-    Per-segment aggregates are reduced on the host in original access order,
-    so they are identical whether a segment is timed alone or inside a
-    larger dispatch.
+    device scan over all (segment, channel) rows (``_scan_channel_chunked``).
+    All host bookkeeping is RUN-granular — chunks are built directly from
+    merged block runs, with no per-access expansion on the default path.
+    The scan carries per-row aggregates (latency sum, row-hit count, max
+    completion), so for single-source requests the extraction is three
+    ``(segments * channels,)``-sized arrays folded to per-segment results by
+    pure reshapes. Multi-source requests stay run-granular too: run
+    boundaries fold ``src`` (order-preserving — no block instance is added),
+    so each run is source-pure and its maximum completion is its last line;
+    per-source finish reduces over runs, never per-access.
 
-    Exactness: every per-access completion (hence ``finish_cycle``, the
-    per-source ``finish`` attribution, and all row-hit counts) is bitwise
-    identical to the per-access scan. ``total_latency_cycles`` alone is now
-    accumulated in f64 over the original access order (previously an f32
-    on-device sum whose value depended on the padded dispatch layout) — more
-    accurate, layout-independent, and within f32 rounding of the old value;
-    nothing downstream of ``DramResult`` consumes it for timing.
+    ``aggregate`` selects where per-segment totals reduce: ``"device"``
+    (default) trusts the in-scan carry aggregates; ``"host"`` ignores them
+    and re-derives every total from the per-chunk ``(done0, row_hit)``
+    outputs with an independent host implementation of the same IEEE op
+    chains. The two modes are bitwise identical (test-enforced) — ``"host"``
+    exists as the differential reference, not as a performance path.
+
+    Exactness: every per-access completion (hence ``finish_cycle`` and the
+    per-source ``finish`` attribution) and all row-hit counts are bitwise
+    identical to the per-access scan. ``total_latency_cycles`` is the f32
+    per-(segment, channel) service-order chain summed in f64 across
+    channels — sequential adds of ``(completion + t_cas)`` exactly as the
+    device scan accumulates them (padding adds exact 0.0, so the value is
+    independent of dispatch layout and of which segments share a dispatch).
+    Nothing downstream of ``DramResult`` consumes it for timing.
+    """
+    if aggregate not in ("device", "host"):
+        raise ValueError(f"unknown aggregate mode: {aggregate!r}")
+    return _contended_finish(
+        _contended_start(lines, seg, src, num_segments, num_sources, model),
+        aggregate,
+    )
+
+
+def _contended_start(
+    lines: np.ndarray,
+    seg: np.ndarray,
+    src: np.ndarray,
+    num_segments: int,
+    num_sources: int,
+    model: DramModel,
+) -> dict:
+    """Host prep + async device dispatch for one contended call.
+
+    Returns an opaque state consumed by ``_contended_finish``. The chunked
+    scan is dispatched but not blocked on (JAX dispatch is async, also on
+    CPU), so a caller that starts several calls before finishing any
+    overlaps each call's host bookkeeping with the earlier calls' device
+    scans — ``dram_timing_many`` pipelines its batch groups this way.
     """
     lines = np.asarray(lines, dtype=np.int64).reshape(-1)
     seg = np.asarray(seg, dtype=np.int64).reshape(-1)
     src = np.asarray(src, dtype=np.int64).reshape(-1)
     n = lines.size
     C = model.channels
-    empty = DramResult(0.0, 0.0, 0, 0, 0)
-    finish = np.zeros((num_segments, num_sources), dtype=np.float64)
     if n == 0:
-        return [empty] * num_segments, finish
-    n_seg = np.bincount(seg, minlength=num_segments)
+        return dict(
+            n=0, num_segments=num_segments, num_sources=num_sources,
+            model=model,
+        )
 
     with stage("dram"):
-        blk = lines // model.lines_per_block
+        lpb = model.lines_per_block
+        if lpb & (lpb - 1) == 0:
+            blk = lines >> (lpb.bit_length() - 1)   # pow2: shift, not divide
+        else:
+            blk = lines // lpb
         # Run compression: maximal stretches of same-(segment, block) lines
         # in arrival order share one (channel, bank, row) and identical
         # FR-FCFS keys, so ordering operates on RUNS (~8x fewer elements for
-        # vector-expanded miss bursts — the argsorts were the host hot spot)
-        # and expands back. Stability keeps a run's lines consecutive and
-        # per-bank arrival order intact, and block-instance counting over
-        # runs merges adjacent same-block runs exactly like the per-line
-        # derivation, so the expanded service order is bitwise identical to
-        # line-level ordering (test-enforced vs the golden DRAM model).
+        # vector-expanded miss bursts — the argsorts were the host hot spot).
+        # Stability keeps a run's lines consecutive and per-bank arrival
+        # order intact, and block-instance counting over runs merges adjacent
+        # same-block runs exactly like the per-line derivation, so the
+        # implied service order is bitwise identical to line-level ordering
+        # (test-enforced vs the golden DRAM model).
         new_run0 = np.ones(n, dtype=bool)
         new_run0[1:] = (seg[1:] != seg[:-1]) | (blk[1:] != blk[:-1])
+        if num_sources > 1:
+            # Source-pure runs: splitting a run at a source boundary adds no
+            # block instance (same bank stream, same block), so every
+            # FR-FCFS key — and the stable order around the split — is
+            # unchanged; the halves stay adjacent and re-merge into the same
+            # chunks. Buys run-granular per-source finish attribution below.
+            new_run0[1:] |= src[1:] != src[:-1]
         rstart = np.nonzero(new_run0)[0]
         nr = rstart.size
         rlen = np.diff(np.append(rstart, n))
@@ -528,32 +631,38 @@ def simulate_dram_contended(
         order_r = _frfcfs_order(
             rch, rbk, rblk, model.banks_per_channel, C, seg=rseg
         )
+        n_seg = np.bincount(
+            rseg, weights=rlen, minlength=num_segments
+        ).astype(np.int64)
 
-        # Expand the run order to the per-line service order.
         rlen_o = rlen[order_r]
-        off_o = np.cumsum(rlen_o) - rlen_o       # line offset of each run
-        run_of_line = np.repeat(np.arange(nr), rlen_o)
-        within = np.arange(n) - off_o[run_of_line]
-        order = rstart[order_r][run_of_line] + within
+        pre_o = np.cumsum(rlen_o) - rlen_o       # line offset of each run
 
         # Chunking: FR-FCFS keeps a block's accesses consecutive; adjacent
         # ordered runs with the same (segment-qualified channel, block) are
-        # one service run. Cap chunks at the interleave-block size so the
-        # chunk length is a compile-time constant — splitting a longer run
-        # is exact (the split point sees bank_free == bus_free == prev done).
+        # one merged service run. Cap chunks at the interleave-block size so
+        # the chunk length is a compile-time constant — splitting a longer
+        # run is exact (the split point sees bank_free == bus_free == prev
+        # done). Chunks are derived from merged runs directly (run-granular;
+        # no n-sized intermediates).
         chq_o = rseg[order_r] * C + rch[order_r]
         blk_o = rblk[order_r]
         new_merged = np.ones(nr, dtype=bool)
         new_merged[1:] = (chq_o[1:] != chq_o[:-1]) | (blk_o[1:] != blk_o[:-1])
-        mstart = np.maximum.accumulate(np.where(new_merged, off_o, 0))
-        pos_in_run = np.arange(n) - mstart[run_of_line]
+        mstart_r = np.nonzero(new_merged)[0]     # first ordered run of each
+        nm = mstart_r.size
+        mlen = np.diff(np.append(pre_o[mstart_r], n))  # lines per merged run
         k_max = max(1, min(model.lines_per_block, 8))
-        new_chunk = pos_in_run % k_max == 0
-        chunk_id = np.cumsum(new_chunk) - 1
-        n_chunks = int(chunk_id[-1]) + 1
-        chunk_start = np.nonzero(new_chunk)[0]
-        k_of = np.diff(np.append(chunk_start, n)).astype(np.int32)
-        cchq = chq_o[run_of_line[chunk_start]]
+        nchunks_m = -(-mlen // k_max)
+        n_chunks = int(nchunks_m.sum())
+        chunk_ofs = np.cumsum(nchunks_m) - nchunks_m
+        chunk_merged = np.repeat(np.arange(nm), nchunks_m)
+        pos_c = np.arange(n_chunks) - chunk_ofs[chunk_merged]
+        k_of = np.minimum(
+            k_max, mlen[chunk_merged] - pos_c * k_max
+        ).astype(np.int32)
+        first_run = mstart_r[chunk_merged]
+        cchq = chq_o[first_run]
 
         R = num_segments * C
         chunks_per_row = np.bincount(cchq, minlength=R)
@@ -566,13 +675,13 @@ def simulate_dram_contended(
         k_m = np.zeros((R, Lc), dtype=np.int32)
         va_m = np.zeros((R, Lc), dtype=bool)
         cflat = cchq * Lc + col_of_chunk
-        bk_m.reshape(-1)[cflat] = rbk[order_r][run_of_line[chunk_start]]
-        row_m.reshape(-1)[cflat] = rrow[order_r][run_of_line[chunk_start]]
+        bk_m.reshape(-1)[cflat] = rbk[order_r][first_run]
+        row_m.reshape(-1)[cflat] = rrow[order_r][first_run]
         k_m.reshape(-1)[cflat] = k_of
         va_m.reshape(-1)[cflat] = True
 
         bus_cyc = float(model.line_bytes / model.chan_bytes_per_cycle)
-        done0_d, hit0_d = _scan_channel_chunked(
+        (lat_d, hitn_d, dmax_d), (done0_d, hit0_d) = _scan_channel_chunked(
             jnp.asarray(bk_m),
             jnp.asarray(row_m),
             jnp.asarray(k_m),
@@ -580,59 +689,151 @@ def simulate_dram_contended(
             model.banks_per_channel,
             k_max,
             float(model.t_rp + model.t_rcd),
+            float(model.t_cas),
             bus_cyc,
         )
         if _profiling_active():
             # Attribute async device compute to "dram", not to the
-            # extraction below (profiling sessions only).
-            jax.block_until_ready((done0_d, hit0_d))
+            # extraction in ``_contended_finish`` (profiling sessions only;
+            # unprofiled runs keep the dispatch async for pipelining).
+            jax.block_until_ready((lat_d, hitn_d, dmax_d, done0_d, hit0_d))
+
+    return dict(
+        n=n, num_segments=num_segments, num_sources=num_sources, model=model,
+        C=C, nr=nr, n_chunks=n_chunks, k_max=k_max, R=R, Lc=Lc,
+        bus_cyc=bus_cyc, n_seg=n_seg, cflat=cflat, k_of=k_of, cchq=cchq,
+        new_merged=new_merged, pre_o=pre_o, mstart_r=mstart_r,
+        chunk_ofs=chunk_ofs, rlen_o=rlen_o, rseg_o=rseg[order_r],
+        src_run=src[rstart][order_r] if num_sources > 1 else None,
+        rstart_o=rstart[order_r], seg=seg, src=src,
+        lat_d=lat_d, hitn_d=hitn_d, dmax_d=dmax_d,
+        done0_d=done0_d, hit0_d=hit0_d,
+    )
+
+
+def _contended_finish(st: dict, aggregate: str = "device"):
+    """Extraction + per-segment aggregation for a started contended call."""
+    num_segments = st["num_segments"]
+    num_sources = st["num_sources"]
+    model = st["model"]
+    empty = DramResult(0.0, 0.0, 0, 0, 0)
+    finish = np.zeros((num_segments, num_sources), dtype=np.float64)
+    if st["n"] == 0:
+        return [empty] * num_segments, finish
+    n, C, nr = st["n"], st["C"], st["nr"]
+    n_chunks, k_max, R, Lc = st["n_chunks"], st["k_max"], st["R"], st["Lc"]
+    n_seg, cflat, k_of, cchq = st["n_seg"], st["cflat"], st["k_of"], st["cchq"]
+    new_merged, pre_o = st["new_merged"], st["pre_o"]
+    mstart_r, chunk_ofs, rlen_o = st["mstart_r"], st["chunk_ofs"], st["rlen_o"]
+    rseg_o, src_run, rstart_o = st["rseg_o"], st["src_run"], st["rstart_o"]
+    seg, src = st["seg"], st["src"]
+    lat_d, hitn_d, dmax_d = st["lat_d"], st["hitn_d"], st["dmax_d"]
+    done0_d, hit0_d = st["done0_d"], st["hit0_d"]
+    bus32 = np.float32(st["bus_cyc"])
+    cas32 = np.float32(model.t_cas)
+    need_chunks = aggregate == "host" or num_sources > 1
 
     with stage("host_sync"):
-        # CHUNK-granular extraction: (R, Lc) first-access completions + row
-        # hits — k_max times smaller than per-access arrays; the in-chunk
-        # completions are reconstructed below with the identical f32 op chain.
-        done0_flat = np.asarray(done0_d).reshape(-1)
-        hit0_flat = np.asarray(hit0_d).reshape(-1)
+        if aggregate == "device":
+            # ROW-granular extraction: three (segments * channels,)-sized
+            # aggregates — finished per-row sums/maxima straight off the
+            # scan carry, independent of trace length.
+            lat_row = np.asarray(lat_d).reshape(-1)
+            hit_row = np.asarray(hitn_d).reshape(-1)
+            dmax_row = np.asarray(dmax_d).reshape(-1)
+        if need_chunks:
+            # CHUNK-granular extraction — for the host reference mode and
+            # for per-source finish attribution (chunk-first completions
+            # anchor the run-granular per-source maxima).
+            done0_flat = np.asarray(done0_d).reshape(-1)
+        if aggregate == "host":
+            hit0_flat = np.asarray(hit0_d).reshape(-1)
 
     with stage("dram"):
-        bus32 = np.float32(bus_cyc)
-        cas32 = np.float32(model.t_cas)
-        done0_chunk = done0_flat[cflat]                       # f32 per chunk
-        hit0_chunk = hit0_flat[cflat]
+        if need_chunks:
+            done0_chunk = done0_flat[cflat]                   # f32 per chunk
 
-        # Per-access completion = chunk's first completion + j sequential f32
-        # adds of the bus occupancy + t_cas — the exact op chain the device
-        # expansion applied, replayed on the host (IEEE f32 either way), so
-        # every derived value is bitwise unchanged.
-        j_of = (pos_in_run % k_max).astype(np.int32)
-        val = done0_chunk[chunk_id]
-        for step in range(1, k_max):
-            val = np.where(j_of >= step, val + bus32, val)
-        done_acc = np.zeros(n, dtype=np.float64)
-        done_acc[order] = val + cas32
-        lat_seg = np.bincount(seg, weights=done_acc, minlength=num_segments)
+        if aggregate == "device":
+            lat_seg = (
+                lat_row.astype(np.float64).reshape(num_segments, C).sum(axis=1)
+            )
+            hit_seg = (
+                hit_row.astype(np.int64).reshape(num_segments, C).sum(axis=1)
+            )
+            fin_row = np.where(
+                dmax_row > 0, (dmax_row + cas32).astype(np.float64), 0.0
+            )
+            fin_seg = fin_row.reshape(num_segments, C).max(axis=1)
+        else:
+            # Independent host re-derivation of every aggregate from the
+            # per-chunk scan outputs: replay the in-chunk f32 completion /
+            # latency chain, then reduce at chunk granularity. Same IEEE op
+            # chains as the device carry (sequential f32 adds in service
+            # order; 0.0-padding is exact), different implementation — the
+            # differential reference for the device aggregates.
+            hit0_chunk = hit0_flat[cflat]
+            d = done0_chunk
+            lc = done0_chunk + cas32
+            for step in range(1, k_max):
+                live = step < k_of
+                d = np.where(live, d + bus32, d)
+                lc = np.where(live, lc + (d + cas32), lc)
+            lc_m = np.zeros((R, Lc), dtype=np.float32)
+            lc_m.reshape(-1)[cflat] = lc
+            lat_row_h = np.cumsum(lc_m, axis=1, dtype=np.float32)[:, -1]
+            lat_seg = (
+                lat_row_h.astype(np.float64)
+                .reshape(num_segments, C)
+                .sum(axis=1)
+            )
+            done_last = (d + cas32).astype(np.float64)  # chunk-last + CAS
+            hit_chunk = hit0_chunk.astype(np.int64) + (k_of - 1)
+            cseg = cchq // C
+            hit_seg = np.bincount(
+                cseg, weights=hit_chunk, minlength=num_segments
+            ).astype(np.int64)
+            fin_seg = np.zeros(num_segments, dtype=np.float64)
+            np.maximum.at(fin_seg, cseg, done_last)
 
-        # Maxima and row-hit counts reduce at CHUNK granularity — bitwise
-        # identical to the per-access reductions (completions increase within
-        # a chunk, so the chunk-last access carries the max; every in-chunk
-        # access after the first is a row hit by construction) at ~k_max
-        # fewer elements for the slow ufunc.at scatters.
-        vlast = done0_chunk
-        kk = k_of - 1
-        for step in range(1, k_max):
-            vlast = np.where(kk >= step, vlast + bus32, vlast)
-        done_last = (vlast + cas32).astype(np.float64)
-        hit_chunk = hit0_chunk.astype(np.int64) + (k_of - 1)
-        seg_chunk = seg[order[chunk_start]]
-        hit_seg = np.bincount(seg_chunk, weights=hit_chunk,
-                              minlength=num_segments)
-        fin_seg = np.zeros(num_segments, dtype=np.float64)
-        np.maximum.at(fin_seg, seg_chunk, done_last)
         if num_sources == 1:
             finish[:, 0] = fin_seg
+        elif aggregate == "device":
+            # Run-granular per-source finish: runs are source-pure (the run
+            # boundary folds ``src``), and within a merged run completions
+            # are non-decreasing in service order (each chunk resumes at
+            # ``max(dlast, dlast) + bus``, and f32 adds of positive
+            # constants are monotone), so a run's maximum completion is its
+            # LAST line. Its value is the chunk-first completion plus the
+            # same sequential f32 bus adds the scan applied — bitwise equal
+            # to the per-access expansion the host mode keeps as reference.
+            m_of_run = np.cumsum(new_merged) - 1
+            pos_in_m = pre_o - pre_o[mstart_r][m_of_run]
+            p_last = pos_in_m + rlen_o - 1
+            c_last = chunk_ofs[m_of_run] + p_last // k_max
+            j_last = p_last % k_max
+            val = done0_chunk[c_last]
+            for step in range(1, k_max):
+                val = np.where(j_last >= step, val + bus32, val)
+            key_run = rseg_o * num_sources + src_run
+            np.maximum.at(
+                finish.reshape(-1), key_run, (val + cas32).astype(np.float64)
+            )
         else:
-            # A merged block run (hence a chunk) can interleave sources, so
-            # per-source maxima need the per-access completions.
+            # Expand per-access completions: chunk's first completion + j
+            # sequential f32 adds of the bus occupancy + t_cas — the exact
+            # op chain the device scan applied.
+            run_of_line = np.repeat(np.arange(nr), rlen_o)
+            within = np.arange(n) - pre_o[run_of_line]
+            order = rstart_o[run_of_line] + within
+            chunk_of_line = np.repeat(np.arange(n_chunks), k_of)
+            j_of = np.arange(n) - np.repeat(
+                np.cumsum(k_of) - k_of, k_of
+            )
+            val = done0_chunk[chunk_of_line]
+            for step in range(1, k_max):
+                val = np.where(j_of >= step, val + bus32, val)
+            done_acc = np.zeros(n, dtype=np.float64)
+            done_acc[order] = val + cas32
             key = seg * num_sources + src
             np.maximum.at(finish.reshape(-1), key, done_acc)
         finish[finish > 0] += model.base_latency
@@ -806,6 +1007,32 @@ def dram_timing_single(req: DramRequest):
     )
 
 
+def _timing_contended_start(lines, seg, src, num_segments, num_sources, model):
+    """``dram_timing_contended`` split for pipelined dispatch.
+
+    The common case (no segment above ``DETAILED_DRAM_MAX``) returns a
+    pending ``_contended_start`` state; the estimate fallback is evaluated
+    eagerly (it has no device phase worth overlapping).
+    """
+    n_total = np.asarray(lines).size
+    if n_total > DETAILED_DRAM_MAX and (np.bincount(
+        np.asarray(seg, dtype=np.int64).reshape(-1), minlength=num_segments
+    ) > DETAILED_DRAM_MAX).any():
+        return ("eager", dram_timing_contended(
+            lines, seg, src, num_segments, num_sources, model
+        ))
+    return ("pending", _contended_start(
+        lines, seg, src, num_segments, num_sources, model
+    ))
+
+
+def _timing_contended_finish(started):
+    tag, value = started
+    if tag == "eager":
+        return value
+    return _contended_finish(value)
+
+
 def dram_timing_many(requests: "list[DramRequest]", batch: bool = True):
     """Time many independent requests; same-``DramModel`` requests share ONE
     batched event scan.
@@ -834,9 +1061,19 @@ def dram_timing_many(requests: "list[DramRequest]", batch: bool = True):
         est_row = max(1, n_req // max(1, r.num_segments * r.model.channels
                                       * max(1, min(r.model.lines_per_block, 8))))
         groups.setdefault((r.model, _chunk_bucket_len(est_row)), []).append(i)
+    # Pipelined dispatch: start every group (host prep + async scan) before
+    # finishing any, then drain singles, then extract. Each group's host
+    # bookkeeping — and the singles — overlaps the earlier groups' device
+    # scans (JAX dispatch is async); grouping never changes results, so the
+    # pipelining is timing-only. On a single-CPU host there is nothing to
+    # overlap with — the extra in-flight state just thrashes the one core —
+    # so each group finishes before the next starts.
+    pipelined = (os.cpu_count() or 1) > 1
+    singles: "list[int]" = []
+    started = []
     for (model, _), idxs in groups.items():
         if len(idxs) == 1:
-            out[idxs[0]] = dram_timing_single(requests[idxs[0]])
+            singles.append(idxs[0])
             continue
         reqs = [requests[i] for i in idxs]
         with stage("dram"):
@@ -845,16 +1082,28 @@ def dram_timing_many(requests: "list[DramRequest]", batch: bool = True):
                 np.asarray(r.lines, dtype=np.int64).reshape(-1) for r in reqs
             ])
             seg = np.concatenate([
-                np.asarray(r.seg, dtype=np.int64).reshape(-1) + off
-                for r, off in zip(reqs, offsets[:-1])
+                np.asarray(r.seg, dtype=np.int64).reshape(-1) for r in reqs
             ])
+            # One in-place remap pass instead of per-request temporaries.
+            seg += np.repeat(
+                offsets[:-1],
+                [np.asarray(r.seg).size for r in reqs],
+            )
             src = np.concatenate([
                 np.asarray(r.src, dtype=np.int64).reshape(-1) for r in reqs
             ])
             num_sources = max(r.num_sources for r in reqs)
-        results, finish = dram_timing_contended(
+        st = _timing_contended_start(
             lines, seg, src, int(offsets[-1]), num_sources, model
         )
+        if pipelined:
+            started.append((idxs, reqs, offsets, st))
+        else:
+            started.append((idxs, reqs, offsets, _timing_contended_finish(st)))
+    for i in singles:
+        out[i] = dram_timing_single(requests[i])
+    for idxs, reqs, offsets, st in started:
+        results, finish = _timing_contended_finish(st) if pipelined else st
         for i, r, lo, hi in zip(idxs, reqs, offsets[:-1], offsets[1:]):
             out[i] = (results[lo:hi], finish[lo:hi, :r.num_sources].copy())
     return out

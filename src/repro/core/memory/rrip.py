@@ -1,0 +1,347 @@
+"""Analytic SRRIP/FIFO classification engines (compressed per-set state,
+no full-trace sequential scan).
+
+The Mattson stack-distance engine (``stack.py``) classifies LRU for every
+associativity from one shared pass per (stream, num_sets), but SRRIP and
+FIFO are not stack algorithms: their hit sets are not nested in ``ways``,
+so no single distance number classifies all associativities. Until this
+module existed they fell back to the sequential ``lax.scan`` engine, which
+scans the whole trace once per config and dominated the sweep's
+``cache_scan`` stage.
+
+This module retires that fallback. Sets are independent under both
+policies, so instead of one O(n)-step scan over the interleaved trace we
+run one *short* scan per set, batched across every set of every config in
+the call:
+
+* **shared presort** per (stream, num_sets): one stable sort into
+  (set, time) order, run-compression of consecutive same-line accesses
+  within a set (guaranteed hits: FIFO keeps only the first access of a
+  run — FIFO hits never touch state; SRRIP keeps the first two — position
+  1 refreshes the key, positions >= 2 are idempotent), and dense per-set
+  segment ids. Every ways-variant of the same (stream, num_sets) reuses
+  the pass, mirroring ``classify_lru_stack_many``; ``analytic_pass_count``
+  exposes the counter so tests can assert sharing.
+* **vectorized flat packing**: per-set rows from *all* configs of the call
+  are bucketed by (ways, pow2 row length) and scattered into one flat
+  buffer with a single vectorized pass per config — no per-row host loop.
+  Each bucket dispatches one jitted batched ``lax.scan`` whose step costs
+  O(rows x ways); total device work is ~(kept accesses) x ways instead of
+  (trace length) x ways per config, and rows from different configs share
+  dispatches.
+* **compressed per-set state**:
+  - FIFO: a ring buffer of ``ways`` tags plus a head pointer. Fills land
+    at the head in arrival order, so the head is always the oldest fill —
+    exactly ChampSim's min-fill-timestamp victim (invalid ways fill in
+    index order during warmup).
+  - SRRIP: ``ways`` (tag, key) pairs plus a scalar age ``A`` with
+    ``rrpv_w = A - key_w``. Hit: ``key = A``. Miss with an invalid way:
+    fill ``key = A - 2`` (rrpv 2). Warm miss: ``m = min(keys)``, evict the
+    *first* argmin way (ChampSim's first-rrpv-3-after-aging victim), set
+    ``A = m + 3`` (the persistent aging increment) and fill ``key = m +
+    1``. ``A`` grows at most 3 per miss, so int32 state is exact for any
+    trace that passes the int32 line guard.
+
+Evictions for both policies are ``sum_s max(0, misses_s - ways)``: ways
+fill once and never go invalid again, so every warm miss evicts. Both
+engines are bit-exact against the ChampSim-semantics golden model
+(``golden.py``) and the sequential scan engine (``cache.py``); the
+differential suite locks that per PR.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Dict, List, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..profiling import is_active as _profiling_active, stage
+
+ITYPE = jnp.int32
+_MIN_ROW_BUCKET = 8   # pow-2 floor for compressed per-set row length
+_MIN_ROWS = 8         # pow-2 floor for rows per device dispatch
+_SCAN_UNROLL = 8
+_PAD_TAG = -2         # never matches a real tag (>=0) nor invalid (-1)
+
+_POW2 = 1 << np.arange(31, dtype=np.int64)
+
+_passes = 0
+
+
+def analytic_pass_count() -> int:
+    """Total shared presort passes computed (monotone; tests read deltas)."""
+    return _passes
+
+
+def _check_int32(lines: np.ndarray) -> np.ndarray:
+    lines = np.ascontiguousarray(lines).astype(np.int64, copy=False)
+    if lines.size and (lines.max() >= 2**31 or lines.min() < 0):
+        raise ValueError("line numbers exceed int32 range; rebase the trace")
+    return lines
+
+
+def _pow2_at_least(n: int, floor: int) -> int:
+    return max(floor, 1 << (max(1, int(n)) - 1).bit_length())
+
+
+def _pow2_bucket(lens: np.ndarray, floor: int) -> np.ndarray:
+    """Vectorized pow-2 round-up with a floor (exact, no float log)."""
+    return _POW2[np.searchsorted(_POW2, np.maximum(lens, floor))]
+
+
+class _Presort:
+    """Shared per-(stream, num_sets, depth) compression of a stream into
+    dense per-set segments of kept accesses."""
+
+    __slots__ = ("kept_pos", "kept_tag", "sg", "ps", "seg_len", "n")
+
+    def __init__(self, lines: np.ndarray, num_sets: int, depth: int):
+        n = lines.size
+        self.n = n
+        if n == 0:
+            z = np.zeros(0, np.int64)
+            self.kept_pos, self.sg, self.ps = z, z, z
+            self.kept_tag = z.astype(np.int32)
+            self.seg_len = z
+            return
+        set_idx = lines % num_sets
+        ord_set = np.argsort(set_idx, kind="stable")
+        ss = set_idx[ord_set]
+        lso = lines[ord_set]
+        new_set = np.empty(n, bool)
+        new_set[0] = True
+        np.not_equal(ss[1:], ss[:-1], out=new_set[1:])
+        new_run = new_set.copy()
+        np.logical_or(new_run[1:], lso[1:] != lso[:-1], out=new_run[1:])
+        idx = np.arange(n)
+        run_start = np.maximum.accumulate(np.where(new_run, idx, 0))
+        keep = (idx - run_start) < depth
+        self.kept_pos = ord_set[keep]
+        self.kept_tag = lso[keep].astype(np.int32)
+        k_new_set = new_set[keep]
+        k_idx = np.arange(self.kept_pos.size)
+        self.sg = np.cumsum(k_new_set) - 1
+        seg_base = np.maximum.accumulate(np.where(k_new_set, k_idx, 0))
+        self.ps = k_idx - seg_base
+        self.seg_len = np.bincount(self.sg)
+
+
+# ---------------------------------------------------------------------------
+# Batched per-set scans (device)
+# ---------------------------------------------------------------------------
+
+
+@functools.partial(jax.jit, static_argnames=("ways",))
+def _fifo_scan_rows(tags_in, valid, ways: int):
+    """FIFO over (B, L) per-set rows: ring buffer of ``ways`` tags whose
+    head is always the oldest fill. Returns per-position hit flags."""
+    B, _ = tags_in.shape
+    iota = jnp.arange(ways, dtype=ITYPE)[None, :]
+
+    def step(carry, x):
+        tags, head = carry
+        tag, v = x
+        hit = jnp.any(tags == tag[:, None], axis=1)
+        missb = (~hit) & v
+        oh = iota == head[:, None]
+        tags = jnp.where(missb[:, None] & oh, tag[:, None], tags)
+        nxt = head + 1
+        head = jnp.where(missb, jnp.where(nxt == ways, 0, nxt), head)
+        return (tags, head), hit & v
+
+    init = (jnp.full((B, ways), -1, ITYPE), jnp.zeros((B,), ITYPE))
+    _, hits = jax.lax.scan(
+        step, init, (tags_in.T, valid.T), unroll=_SCAN_UNROLL
+    )
+    return hits.T
+
+
+@functools.partial(jax.jit, static_argnames=("ways",))
+def _srrip_scan_rows(tags_in, valid, ways: int):
+    """SRRIP over (B, L) per-set rows (compressed-key state; see module
+    docstring). Returns per-position hit flags."""
+    B, _ = tags_in.shape
+    iota = jnp.arange(ways, dtype=ITYPE)[None, :]
+
+    def step(carry, x):
+        tags, keys, A, nf = carry
+        tag, v = x
+        hv = tags == tag[:, None]
+        hit = jnp.any(hv, axis=1)
+        m = jnp.min(keys, axis=1)
+        warm = nf >= ways
+        vic = jnp.where(warm, jnp.argmin(keys, axis=1).astype(ITYPE), nf)
+        fill_key = jnp.where(warm, m + 1, A - 2)
+        oh = iota == vic[:, None]
+        hitb = hit & v
+        missb = (~hit) & v
+        tags = jnp.where(missb[:, None] & oh, tag[:, None], tags)
+        keys = jnp.where(
+            hitb[:, None] & hv,
+            A[:, None],
+            jnp.where(missb[:, None] & oh, fill_key[:, None], keys),
+        )
+        A = jnp.where(missb & warm, m + 3, A)
+        nf = jnp.where(missb & ~warm, nf + 1, nf)
+        return (tags, keys, A, nf), hitb
+
+    init = (
+        jnp.full((B, ways), -1, ITYPE),
+        jnp.zeros((B, ways), ITYPE),
+        jnp.zeros((B,), ITYPE),
+        jnp.zeros((B,), ITYPE),
+    )
+    _, hits = jax.lax.scan(
+        step, init, (tags_in.T, valid.T), unroll=_SCAN_UNROLL
+    )
+    return hits.T
+
+
+_SCANS = {"fifo": (_fifo_scan_rows, 1), "srrip": (_srrip_scan_rows, 2)}
+
+
+# ---------------------------------------------------------------------------
+# Many-stream driver
+# ---------------------------------------------------------------------------
+
+
+def _stream_id(arr: np.ndarray) -> tuple:
+    i = arr.__array_interface__
+    return (i["data"][0], arr.shape, arr.dtype.str, i.get("strides"))
+
+
+def _classify_many(
+    streams: Sequence[np.ndarray],
+    geometries: Sequence[Tuple[int, int]],
+    policy: str,
+) -> List[Tuple[np.ndarray, int]]:
+    global _passes
+    scan_fn, depth = _SCANS[policy]
+    out: List = [None] * len(streams)
+
+    # unique configs + shared presorts
+    presorts: Dict[tuple, _Presort] = {}
+    cfg_idx: Dict[tuple, int] = {}
+    cfg_sid: List[tuple] = []
+    cfg_ways: List[int] = []
+    cfg_out: List[List[int]] = []
+    with stage("stack_distance"):
+        for i, (s, (num_sets, ways)) in enumerate(zip(streams, geometries)):
+            lines = _check_int32(s)
+            sid = (_stream_id(lines), int(num_sets))
+            if sid not in presorts:
+                presorts[sid] = _Presort(lines, int(num_sets), depth)
+                _passes += 1
+            c = cfg_idx.get((sid, int(ways)))
+            if c is None:
+                c = cfg_idx[(sid, int(ways))] = len(cfg_sid)
+                cfg_sid.append(sid)
+                cfg_ways.append(int(ways))
+                cfg_out.append([])
+            cfg_out[c].append(i)
+
+    with stage("cache_scan"):
+        # global row table: every per-set segment of every config
+        n_cfg = len(cfg_sid)
+        seg_counts = [presorts[sid].seg_len.size for sid in cfg_sid]
+        row_base = np.cumsum([0] + seg_counts)
+        n_rows = int(row_base[-1])
+        if n_rows:
+            row_len = np.concatenate(
+                [presorts[sid].seg_len for sid in cfg_sid]
+            )
+            row_ways = np.repeat(
+                np.asarray(cfg_ways, np.int64), seg_counts
+            )
+            row_lb = _pow2_bucket(row_len, _MIN_ROW_BUCKET)
+            # bucket = (ways, Lb); group rows contiguously per bucket
+            kb = row_ways * (np.int64(1) << 40) + row_lb
+            order_rows = np.argsort(kb, kind="stable")
+            lb_sorted = row_lb[order_rows]
+            off_sorted = np.cumsum(lb_sorted) - lb_sorted
+            total = int(off_sorted[-1] + lb_sorted[-1])
+            off_row = np.empty(n_rows, np.int64)
+            off_row[order_rows] = off_sorted
+            tags_flat = np.full(total, _PAD_TAG, np.int32)
+            valid_flat = np.zeros(total, bool)
+            elem_pos: List[np.ndarray] = []
+            for c, sid in enumerate(cfg_sid):
+                p = presorts[sid]
+                pos = off_row[row_base[c] + p.sg] + p.ps
+                tags_flat[pos] = p.kept_tag
+                valid_flat[pos] = True
+                elem_pos.append(pos)
+            # dispatch one batched scan per bucket
+            kb_sorted = kb[order_rows]
+            bnd = np.flatnonzero(
+                np.concatenate(([True], kb_sorted[1:] != kb_sorted[:-1]))
+            )
+            bnd = np.append(bnd, n_rows)
+            hits_flat = np.zeros(total, bool)
+            for i0, i1 in zip(bnd[:-1], bnd[1:]):
+                B = int(i1 - i0)
+                Lb = int(lb_sorted[i0])
+                ways = int(row_ways[order_rows[i0]])
+                e0 = int(off_sorted[i0])
+                e1 = e0 + B * Lb
+                Bp = _pow2_at_least(B, _MIN_ROWS)
+                tags_m = np.full((Bp, Lb), _PAD_TAG, np.int32)
+                valid_m = np.zeros((Bp, Lb), bool)
+                tags_m[:B] = tags_flat[e0:e1].reshape(B, Lb)
+                valid_m[:B] = valid_flat[e0:e1].reshape(B, Lb)
+                hits_d = scan_fn(tags_m, valid_m, ways)
+                if _profiling_active():
+                    hits_d.block_until_ready()
+                with stage("host_sync"):
+                    hits_h = np.asarray(hits_d)
+                hits_flat[e0:e1] = hits_h[:B].reshape(-1)
+        # per-config gather + eviction counts
+        for c, sid in enumerate(cfg_sid):
+            p = presorts[sid]
+            ways = cfg_ways[c]
+            if p.n == 0:
+                res = (np.zeros(0, bool), 0)
+            else:
+                h_kept = hits_flat[elem_pos[c]]
+                hits = np.ones(p.n, bool)   # dropped positions surely hit
+                hits[p.kept_pos] = h_kept
+                # misses only occur at kept positions; count per segment
+                mc = np.bincount(
+                    p.sg[~h_kept], minlength=p.seg_len.size or 1
+                )
+                ev = int(np.maximum(mc - ways, 0).sum())
+                res = (hits, ev)
+            for i in cfg_out[c]:
+                out[i] = res
+    return out
+
+
+def classify_fifo_many(
+    streams: Sequence[np.ndarray],
+    geometries: Sequence[Tuple[int, int]],
+) -> List[Tuple[np.ndarray, int]]:
+    """FIFO-classify ``streams[i]`` under ``geometries[i] = (num_sets,
+    ways)``; returns ``[(hits bool (n,), evictions int)]``."""
+    return _classify_many(streams, geometries, "fifo")
+
+
+def classify_srrip_many(
+    streams: Sequence[np.ndarray],
+    geometries: Sequence[Tuple[int, int]],
+) -> List[Tuple[np.ndarray, int]]:
+    """SRRIP-classify ``streams[i]`` under ``geometries[i]``; see
+    ``classify_fifo_many``."""
+    return _classify_many(streams, geometries, "srrip")
+
+
+def classify_analytic_many(
+    streams: Sequence[np.ndarray],
+    geometries: Sequence[Tuple[int, int]],
+    policy: str,
+) -> List[Tuple[np.ndarray, int]]:
+    """Dispatch to the policy-specific analytic engine."""
+    if policy not in _SCANS:
+        raise ValueError(f"no analytic engine for policy {policy!r}")
+    return _classify_many(streams, geometries, policy)

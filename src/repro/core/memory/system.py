@@ -58,7 +58,7 @@ entirely and is bitwise identical to the historical engine (test-enforced).
 """
 from __future__ import annotations
 
-from dataclasses import dataclass
+from dataclasses import dataclass, field
 from typing import Callable, Dict, List, Optional, Sequence, Union
 
 import numpy as np
@@ -248,6 +248,9 @@ class ClassifiedStream:
     miss_lines: np.ndarray           # (M,) line addresses, stream order
     miss_batch: np.ndarray           # (M,) batch of each miss line
     miss_pos: Optional[np.ndarray] = None   # (M,) global line-slot
+    # Shared memo for the group-independent half of the placement transform
+    # (PlacementMap.place), reused across placement siblings of this stream.
+    place_cache: dict = field(default_factory=dict)
 
 
 def _lane_context(
@@ -317,6 +320,25 @@ class _PreparedStream:
     acc_batch: np.ndarray            # batch of each stream access
     use_lane: bool
     at: Optional[AddressTrace]       # line trace (line-granular path only)
+
+
+@dataclass
+class _ClusterClassified:
+    """Placement-invariant classification of a multi-core cluster.
+
+    Everything ``MultiCoreMemorySystem.pending_from`` needs to fan out into
+    placement-specific DRAM requests: the merged miss stream, the per-miss
+    source-core tags, and the stats-assembly closure (which reads only
+    placement-invariant hardware fields, so it is shared verbatim across
+    placement siblings)."""
+
+    merged: "ClassifiedStream"
+    miss_src: np.ndarray
+    finalize: Callable
+    # Shared memo for the group-independent half of the placement transform
+    # (PlacementMap.place) — scoped to this classification's miss stream, so
+    # placement siblings reuse the per-line base instead of recomputing it.
+    place_cache: dict = field(default_factory=dict)
 
 
 @dataclass
@@ -598,6 +620,30 @@ class MemorySystem:
         return stats
 
     # -- deferred-DRAM pipeline ---------------------------------------------
+    def classify_for_pending(
+        self,
+        etrace: EmbeddingTrace,
+        pinned_lines: Optional[np.ndarray] = None,
+        allow_lane: bool = True,
+    ) -> ClassifiedStream:
+        """The placement-invariant half of ``prepare_embedding``.
+
+        Classification never reads the NUMA axes (``channel_affinity`` /
+        ``placement``) — those only remap miss-line addresses on the way to
+        DRAM — so a sweep shares ONE classified stream across every placement
+        variant of a config and fans out with ``pending_from`` per variant.
+        """
+        return self.classify_embedding(etrace, pinned_lines, allow_lane)
+
+    def pending_from(
+        self, etrace: EmbeddingTrace, cs: ClassifiedStream
+    ) -> PendingEmbedding:
+        """Apply THIS config's placement transform to an already classified
+        stream and package the deferred DRAM dispatch. ``cs`` may come from a
+        placement sibling (same config up to affinity/placement) — bit-exact
+        with classifying under this config directly (test-enforced)."""
+        return self._pending(etrace, cs)
+
     def prepare_embedding(
         self,
         etrace: EmbeddingTrace,
@@ -624,15 +670,18 @@ class MemorySystem:
         etrace: EmbeddingTrace,
         miss_lines: np.ndarray,
         miss_src: Optional[np.ndarray],
+        place_cache: Optional[dict] = None,
     ) -> np.ndarray:
         pm = self.placement_map(etrace)
         if pm is None:
             return miss_lines
-        return pm.place(miss_lines, miss_src)
+        return pm.place(miss_lines, miss_src, cache=place_cache)
 
     def _pending(self, etrace: EmbeddingTrace, cs: ClassifiedStream) -> PendingEmbedding:
         req = DramRequest(
-            lines=self._place_misses(etrace, cs.miss_lines, None),
+            lines=self._place_misses(
+                etrace, cs.miss_lines, None, place_cache=cs.place_cache
+            ),
             seg=cs.miss_batch,
             src=np.zeros(cs.miss_lines.size, dtype=np.int64),
             num_segments=cs.num_batches,
@@ -661,33 +710,48 @@ class MemorySystem:
         return p.finalize(*dram_timing_single(p.request))
 
 
-def prepare_embedding_many(
+def classify_embedding_many(
     systems: Sequence[MemorySystem],
     etrace: EmbeddingTrace,
     allow_lane: bool = True,
-) -> List[PendingEmbedding]:
-    """Batched classification across configurations of ONE policy, with DRAM
-    timing deferred.
+) -> List[ClassifiedStream]:
+    """Batched classification across configurations of ONE policy — the
+    placement-invariant half of ``prepare_embedding_many``.
 
     All systems must share the same registered policy (and carry no policy
     mix); their classification runs through ``MemoryPolicy.run_many``, which
     fuses same-shape cache scans into single vmapped dispatches and shares
     stack-distance passes (the DSE sweep fast path). Per-system results are
-    bit-exact with independent ``prepare_embedding`` calls — tests enforce
+    bit-exact with independent ``classify_embedding`` calls — tests enforce
     this end to end.
     """
     if not systems:
         return []
     policy = systems[0].policy
     if any(ms.policy is not policy for ms in systems):
-        raise ValueError("prepare_embedding_many requires one shared policy")
+        raise ValueError("classify_embedding_many requires one shared policy")
     if any(ms.hw.onchip.policy_mix for ms in systems):
         raise ValueError("policy-mix configs must use the unbatched path")
     preps = [ms._prepare_stream(etrace, None, allow_lane) for ms in systems]
     outs = policy.run_many([p.stream for p in preps], [p.ctx for p in preps])
     return [
-        ms._pending(etrace, ms._account(etrace, prep, out, None))
+        ms._account(etrace, prep, out, None)
         for ms, prep, out in zip(systems, preps, outs)
+    ]
+
+
+def prepare_embedding_many(
+    systems: Sequence[MemorySystem],
+    etrace: EmbeddingTrace,
+    allow_lane: bool = True,
+) -> List[PendingEmbedding]:
+    """Batched classification across configurations of ONE policy, with DRAM
+    timing deferred (``classify_embedding_many`` + per-system packaging)."""
+    return [
+        ms._pending(etrace, cs)
+        for ms, cs in zip(
+            systems, classify_embedding_many(systems, etrace, allow_lane)
+        )
     ]
 
 
@@ -741,20 +805,23 @@ class MultiCoreMemorySystem:
     def dram(self) -> DramModel:
         return self.core.dram
 
-    def prepare_embedding(
+    def classify_for_pending(
         self,
         etrace: EmbeddingTrace,
         pinned_lines: Optional[np.ndarray] = None,
         allow_lane: bool = True,
-    ) -> PendingEmbedding:
-        """Classify every core's shard (or the shared stream) and package the
-        deferred contended-DRAM dispatch; ``finalize`` assembles the cluster
-        stats including the per-core detail."""
+    ) -> Union[ClassifiedStream, "_ClusterClassified"]:
+        """Classify every core's shard (or the shared stream) WITHOUT the
+        placement transform or DRAM request — the placement-invariant half of
+        ``prepare_embedding``, shareable across placement siblings (the
+        cluster stats assembly reads only placement-invariant hardware
+        fields). Returns a plain ``ClassifiedStream`` for the degenerate
+        single-core cluster."""
         hw = self.hw
         n = hw.num_cores
         if n == 1 and hw.topology == Topology.PRIVATE:
             # Degenerate cluster == the single-core path, bit-exact.
-            return self.core.prepare_embedding(etrace, pinned_lines, allow_lane)
+            return self.core.classify_for_pending(etrace, pinned_lines, allow_lane)
 
         spec = etrace.spec
         concat = etrace.concat
@@ -853,21 +920,53 @@ class MultiCoreMemorySystem:
                 s.cycles = max(s.onchip_cycles, s.dram_cycles, s.vector_cycles)
             return stats
 
-        miss_src = np.asarray(miss_core, dtype=np.int64)
+        return _ClusterClassified(
+            merged=merged,
+            miss_src=np.asarray(miss_core, dtype=np.int64),
+            finalize=finalize,
+        )
+
+    def pending_from(
+        self,
+        etrace: EmbeddingTrace,
+        clas: Union[ClassifiedStream, "_ClusterClassified"],
+    ) -> PendingEmbedding:
+        """Apply THIS config's placement transform to an already classified
+        cluster and package the deferred contended-DRAM dispatch (see
+        ``MemorySystem.pending_from``)."""
+        if isinstance(clas, ClassifiedStream):
+            # Degenerate single-core cluster.
+            return self.core.pending_from(etrace, clas)
         return PendingEmbedding(
             request=DramRequest(
                 # Placement routes each core's misses to its affine channel
                 # group (per_core) or each table's home group (per_table);
                 # the contended scan then only sees cross-core contention
                 # where channel groups actually overlap.
-                lines=self.core._place_misses(etrace, merged.miss_lines, miss_src),
-                seg=merged.miss_batch,
-                src=miss_src,
-                num_segments=B,
-                num_sources=n,
+                lines=self.core._place_misses(
+                    etrace, clas.merged.miss_lines, clas.miss_src,
+                    place_cache=clas.place_cache,
+                ),
+                seg=clas.merged.miss_batch,
+                src=clas.miss_src,
+                num_segments=etrace.num_batches,
+                num_sources=self.hw.num_cores,
                 model=self.dram,
             ),
-            _finalize=finalize,
+            _finalize=clas.finalize,
+        )
+
+    def prepare_embedding(
+        self,
+        etrace: EmbeddingTrace,
+        pinned_lines: Optional[np.ndarray] = None,
+        allow_lane: bool = True,
+    ) -> PendingEmbedding:
+        """Classify every core's shard (or the shared stream) and package the
+        deferred contended-DRAM dispatch; ``finalize`` assembles the cluster
+        stats including the per-core detail."""
+        return self.pending_from(
+            etrace, self.classify_for_pending(etrace, pinned_lines, allow_lane)
         )
 
     def simulate_embedding(

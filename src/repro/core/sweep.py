@@ -21,16 +21,24 @@ one pass while staying **bit-exact** with independent ``simulate()`` calls
     way, so JAX jit caches are shared across grid points with the same
     (ways, policy) shape signature instead of recompiling per config.
   * **Vmapped scan batching** — all distinct single-core grid points of one
-    cache-engine policy classify through ``prepare_embedding_many``: their
+    cache-engine policy classify through ``classify_embedding_many``: their
     set-group sub-scans are bucketed by padded shape and each bucket runs as
     ONE vmapped dispatch instead of one dispatch per (config, group)
     (``batch_scans=False`` falls back to per-config scans; results are
     bit-exact either way).
-  * **Stack-distance sharing** — under the default ``cache_backend="stack"``
-    the LRU grid points classify analytically: one stack-distance pass per
-    (stream, num_sets) covers EVERY associativity in the grid (Mattson
-    inclusion), no sequential scan at all; srrip/fifo fall back to the scan
-    engine transparently.
+  * **Analytic classification sharing** — under the default
+    ``cache_backend="stack"`` every cache-engine policy classifies
+    analytically: LRU from one stack-distance pass per (stream, num_sets)
+    covering EVERY associativity in the grid (Mattson inclusion), srrip/fifo
+    from shared compressed per-set passes (``memory.rrip``) batched across
+    configs — no sequential scan on the sweep path at all.
+  * **Placement-invariant classification** — the NUMA axes
+    (``channel_affinity`` / ``placement``) only remap miss-line addresses on
+    the way to DRAM, so grid points differing only in those axes share ONE
+    classification (``classify_for_pending``) and fan out per-placement DRAM
+    requests from it (``pending_from``); configs whose placement transform
+    is provably the identity for the topology collapse onto the base-grid
+    memo entry outright.
   * **Cross-config DRAM batching** — classification and DRAM timing are
     decoupled (``PendingEmbedding``): every memo key's miss-trace dispatch
     of a (workload, zipf) slice runs through ONE ``dram_timing_many`` call,
@@ -78,8 +86,8 @@ from .memory.dram import dram_timing_many
 from .memory.policies import available_policies
 from .memory.system import (
     MemorySystem,
+    classify_embedding_many,
     memory_system_for,
-    prepare_embedding_many,
 )
 from .results import SimResult
 from .workload import Workload
@@ -252,7 +260,17 @@ def sweep(
             # classification + DRAM run once per key.
             stats_memo: Dict[tuple, list] = {}
             grid = []
-            pending: Dict[tuple, object] = {}   # key -> memory system
+            pending: Dict[tuple, tuple] = {}    # key -> (ms, class_key)
+            class_systems: Dict[tuple, object] = {}  # class_key -> system
+            # Placement-collapse preconditions for this (workload, zipf)
+            # slice: a single rank and a single table make the table_rank
+            # transform provably equal to plain interleave for EVERY op
+            # (PlacementMap.effective_placement — the transform itself
+            # dispatches on the same rule, so the collapse is bitwise).
+            plc_collapses = (
+                base_hw.offchip.banks_per_channel == 1
+                and all(et.spec.num_tables == 1 for et in etraces)
+            )
             for pol, cap, w, nc, topo, aff, plc in itertools.product(
                 pol_names, caps, ways_t, cores_t, topo_t, aff_t, plc_t
             ):
@@ -260,61 +278,84 @@ def sweep(
                     OnChipPolicy(pol), capacity_bytes=cap, ways=w
                 ).with_cluster(nc, topo).with_placement(aff, plc)
                 ms = memory_system_for(hw)
-                # Placement only redirects DRAM traffic, but it redirects it
-                # per config — the memo key must carry both axes so a
-                # per_core grid point never reuses symmetric DRAM timing.
-                # Canonicalize first: with one core every affinity collapses
-                # to a single channel group (PlacementMap degenerates
-                # identically), so keying those points apart would recompute
-                # provably identical classification + DRAM timing.
-                key_aff = "symmetric" if nc == 1 else aff
-                key = (pol, nc, topo, hw.lookup_sharding.value, hw.onchip.policy_mix,
-                       key_aff, plc)
-                key += tuple(getattr(hw.onchip, p) for p in ms.policy.sensitive_params)
+                # The memo key splits into the placement-INVARIANT class key
+                # (classification + stats assembly never read the NUMA axes)
+                # plus the canonicalized placement axes. Classification runs
+                # once per class key; DRAM timing once per full key.
+                class_key = (pol, nc, topo, hw.lookup_sharding.value,
+                             hw.onchip.policy_mix)
+                class_key += tuple(
+                    getattr(hw.onchip, p) for p in ms.policy.sensitive_params
+                )
                 if ms.policy.uses_cache_engine:
                     # Backends are bit-exact, but memoization must not hand a
                     # "pallas" grid point stats computed by "scan" — the knob
                     # is part of what the config requests.
-                    key += (hw.cache_backend,)
+                    class_key += (hw.cache_backend,)
                 if hw.onchip.policy_mix:
                     # Mix groups may read parameters the default policy does
                     # not (e.g. pinned tables under an SPM default).
-                    key += (cap, w)
+                    class_key += (cap, w)
+                # Canonicalize the placement axes: with one core every
+                # affinity collapses to a single channel group, and a
+                # degenerate table_rank collapses to interleave — keying
+                # such points apart would re-time provably identical DRAM
+                # traffic (e.g. the base-grid entry).
+                key_aff = "symmetric" if nc == 1 else aff
+                key_plc = plc
+                if key_plc == "table_rank" and plc_collapses:
+                    key_plc = "interleave"
+                key = class_key + (key_aff, key_plc)
                 grid.append((pol, cap, w, nc, topo, aff, plc, hw, key))
-                if key not in stats_memo and key not in pending:
-                    pending[key] = ms
+                if key not in pending:
+                    pending[key] = (ms, class_key)
+                    class_systems.setdefault(class_key, ms)
 
-            # Batched classification: distinct single-core cache-engine keys
-            # of ONE policy share a vmapped dispatch per scan shape — and,
-            # under the stack backend, one stack-distance pass per
-            # (stream, num_sets) (prepare_embedding_many); everything else
-            # classifies per key. DRAM timing is deferred throughout.
-            prepared: Dict[tuple, list] = {}   # key -> PendingEmbedding/etrace
+            # Batched classification: distinct single-core cache-engine class
+            # keys of ONE policy share a vmapped dispatch per scan shape —
+            # and, under the stack backend, one analytic pass per
+            # (stream, num_sets) (classify_embedding_many); everything else
+            # classifies per class key. DRAM timing is deferred throughout.
+            classified: Dict[tuple, list] = {}  # class_key -> per-etrace
             by_policy: Dict[str, list] = {}
-            for key, ms in pending.items():
+            for ck, ms in class_systems.items():
                 if (
                     batch_scans
                     and isinstance(ms, MemorySystem)
                     and ms.policy.uses_cache_engine
                     and not ms.hw.onchip.policy_mix
                 ):
-                    by_policy.setdefault(ms.policy.name, []).append((key, ms))
+                    by_policy.setdefault(ms.policy.name, []).append((ck, ms))
             for batch in by_policy.values():
                 if len(batch) < 2:
                     continue
-                keys = [k for k, _ in batch]
+                cks = [k for k, _ in batch]
                 systems = [m for _, m in batch]
-                per_key = [[] for _ in systems]
+                per_ck = [[] for _ in systems]
                 for et in etraces:
-                    for i, p in enumerate(
-                        prepare_embedding_many(systems, et)
+                    for i, cs in enumerate(
+                        classify_embedding_many(systems, et)
                     ):
-                        per_key[i].append(p)
-                for k, ps in zip(keys, per_key):
-                    prepared[k] = ps
-                    del pending[k]
-            for key, ms in pending.items():
-                prepared[key] = [ms.prepare_embedding(et) for et in etraces]
+                        per_ck[i].append(cs)
+                for ck, css in zip(cks, per_ck):
+                    classified[ck] = css
+            for ck, ms in class_systems.items():
+                if ck not in classified:
+                    classified[ck] = [
+                        ms.classify_for_pending(et) for et in etraces
+                    ]
+
+            # Placement fan-out: every full key packages ITS OWN placement
+            # transform of the shared classification into a deferred DRAM
+            # request — so placement siblings ride the same size-bucketed
+            # dram_timing_many dispatch as the base grid.
+            prepared: Dict[tuple, list] = {
+                key: [
+                    ms.pending_from(et, cl)
+                    for et, cl in zip(etraces, classified[ck])
+                ]
+                for key, (ms, ck) in pending.items()
+            }
 
             # Cross-memo-key DRAM batching: every deferred miss-trace dispatch
             # of this (workload, zipf) slice — all policies, geometries, and

@@ -212,6 +212,21 @@ class ConcatTrace:
 _TABLE_HASH_MULT = 2654435761
 
 
+def _div_fast(x: np.ndarray, d: int) -> np.ndarray:
+    """``x // d`` for non-negative ints; power-of-two divisors use a shift
+    (int64 division is the hot op in per-line address transforms)."""
+    if d & (d - 1) == 0:
+        return x >> (d.bit_length() - 1)
+    return x // d
+
+
+def _divmod_fast(x: np.ndarray, d: int):
+    """``(x // d, x % d)`` for non-negative ints; pow2 uses shift/mask."""
+    if d & (d - 1) == 0:
+        return x >> (d.bit_length() - 1), x & (d - 1)
+    return x // d, x % d
+
+
 def table_core_of(table_ids: np.ndarray, num_cores: int) -> np.ndarray:
     """Deterministic table_id -> core hash (model-parallel table sharding)."""
     t = np.asarray(table_ids, dtype=np.uint64)
@@ -449,9 +464,36 @@ class PlacementMap:
         return self.channels // self.num_groups
 
     @property
+    def effective_placement(self) -> str:
+        """The placement mode after degeneracy collapse.
+
+        Modes whose address transform provably equals a simpler mode's for
+        this topology canonicalize to that mode, so memo layers (the sweep)
+        can collapse such configs onto one entry instead of re-simulating:
+
+        * ``hot_replicate`` with no hot vectors is exactly ``table_rank``
+          (the replica branch can never fire).
+        * ``table_rank`` (and hot-set-free ``hot_replicate``) with a single
+          rank AND a single table is exactly ``interleave``: the rank home
+          degenerates to the only bank, table 0's private block range starts
+          at q == 0, and ``pack`` reproduces the plain group striping.
+
+        ``place`` dispatches on this property, so the collapse is bitwise by
+        construction, not merely approximate.
+        """
+        plc = self.placement
+        if plc == "hot_replicate" and (
+            self.hot_vecs is None or self.hot_vecs.size == 0
+        ):
+            plc = "table_rank"
+        if plc == "table_rank" and self.banks == 1 and self.num_tables == 1:
+            plc = "interleave"
+        return plc
+
+    @property
     def is_identity(self) -> bool:
         """True when ``place`` is the exact identity (the degenerate config)."""
-        return self.num_groups == 1 and self.placement == "interleave"
+        return self.num_groups == 1 and self.effective_placement == "interleave"
 
     # q-space spans: each table owns a private range of block-sequence ids so
     # tables (and the replicated hot set) can never alias rows of each other.
@@ -482,9 +524,16 @@ class PlacementMap:
         return table_core_of(table_ids, self.banks).astype(np.int64)
 
     def group_of(
-        self, lines: np.ndarray, src: Optional[np.ndarray] = None
+        self,
+        lines: np.ndarray,
+        src: Optional[np.ndarray] = None,
+        table_ids: Optional[np.ndarray] = None,
     ) -> np.ndarray:
-        """Affine channel-group of each request (total: every line maps)."""
+        """Affine channel-group of each request (total: every line maps).
+
+        ``table_ids`` optionally passes precomputed ``table_of(lines)`` so
+        hot-path callers (``place``) don't rederive the per-line division.
+        """
         lines = np.asarray(lines, dtype=np.int64).reshape(-1)
         if self.num_groups == 1:
             return np.zeros(lines.size, dtype=np.int64)
@@ -500,60 +549,131 @@ class PlacementMap:
             return np.asarray(src, dtype=np.int64).reshape(-1) % self.num_groups
         # per_table: the table's home group, independent of the issuing core
         # (same hash as table_hash lookup sharding, so a table's core and its
-        # channel group coincide under model-parallel sharding).
-        return table_core_of(self.table_of(lines), self.num_groups).astype(np.int64)
+        # channel group coincide under model-parallel sharding). The hash is
+        # a function of the (few) table ids — gathered, not rederived.
+        t = self.table_of(lines) if table_ids is None else table_ids
+        tmap = table_core_of(
+            np.arange(self.num_tables + 1), self.num_groups
+        ).astype(np.int64)
+        return tmap[t]
 
     def place(
-        self, lines: np.ndarray, src: Optional[np.ndarray] = None
+        self,
+        lines: np.ndarray,
+        src: Optional[np.ndarray] = None,
+        cache: Optional[dict] = None,
     ) -> np.ndarray:
         """Placed line addresses: ``DramModel.decompose`` of the result lands
         on the request's affine channels with the mode's (rank, row) home.
         Identity (input returned unchanged) for ``symmetric``/``interleave``.
+
+        ``cache`` (optional dict) memoizes the group-independent half of the
+        transform across placement siblings that share one classified miss
+        stream: for a fixed (effective placement, num_groups) the placed
+        address is ``base(lines) + g*lines_per_block`` and only ``g`` reads
+        the channel affinity, so siblings reuse ``base`` (and the per-line
+        table ids) verbatim. Callers own the cache's lifetime — it must be
+        scoped to ONE ``lines`` array.
         """
         lines = np.asarray(lines, dtype=np.int64).reshape(-1)
         if self.is_identity or lines.size == 0:
             return lines
+        G = self.num_groups
+        plc = self.effective_placement
+        t = None
+        if plc != "interleave" or self.affinity == "per_table":
+            if cache is not None:
+                t = cache.get("t")
+            if t is None:
+                t = self.table_of(lines)
+                if cache is not None:
+                    cache["t"] = t
+        base = cache.get((plc, G)) if cache is not None else None
+        if base is None:
+            base = self._place_base(lines, plc, t)
+            if cache is not None:
+                cache[(plc, G)] = base
+        if G == 1:
+            return base                   # g == 0 everywhere
+        g = self.group_of(lines, src, table_ids=t)
+        return base + g * self.lines_per_block
+
+    def _place_base(
+        self, lines: np.ndarray, plc: str, t: Optional[np.ndarray]
+    ) -> np.ndarray:
+        """The group-independent part of ``place``: the placed address with
+        ``g == 0`` (adding ``g*lines_per_block`` yields the full transform).
+        """
         lpb = self.lines_per_block
         C, B, G = self.channels, self.banks, self.num_groups
         Cg = self.group_size
-        blk = lines // lpb
-        off = lines - blk * lpb
-        g = self.group_of(lines, src)
+        blk, off = _divmod_fast(lines, lpb)
 
-        def pack(q: np.ndarray, bk: np.ndarray, ch_idx: np.ndarray) -> np.ndarray:
-            # q = block-sequence id within (channel, bank): decompose derives
-            # row = q // blocks_per_row and block-in-row = q % blocks_per_row,
-            # so this is the exact inverse of decompose_blocks.
-            new_blk = (q * B + bk) * C + (ch_idx * G + g)
-            return new_blk * lpb + off
+        # The canonical layout is new_blk = (q*B + bk)*C + (ch*G + g), with
+        # q the block-sequence id within (channel, bank) — the exact inverse
+        # of decompose_blocks.  Because C == Cg*G the (q, bk, ch) splits fold
+        # algebraically; each branch notes its fold from the canonical form,
+        # so what remains is a handful of per-line vector ops.
 
-        if self.placement == "interleave":
-            # The symmetric layout restricted to the group's channels.
-            q = blk // Cg
-            return pack(q // B, q % B, blk % Cg)
+        if plc == "interleave":
+            # q, ch = divmod(blk, Cg); qb, bk = divmod(q, B):
+            #   (qb*B + bk)*C + ch*G + g == q*C + ch*G + g == blk*G + g.
+            return blk * (G * lpb) + off
 
-        t = self.table_of(lines)
-        tstart = (t * self.table_bytes) // (lpb * self.line_bytes)
+        # Table homes (private q span, rank) are functions of the few table
+        # ids — the per-table head (span*B + rank)*C is gathered; only the
+        # within-table remainder is per-line arithmetic.
+        tab = np.arange(self.num_tables + 1, dtype=np.int64)
+        tstart = ((tab * self.table_bytes) // (lpb * self.line_bytes))[t]
         blk_local = blk - tstart
-        q_cold = t * self._table_span + blk_local // Cg
-        placed = pack(q_cold, self.rank_of_table(t), blk_local % Cg)
+        if Cg & (Cg - 1) == 0:
+            ch_idx = blk_local & (Cg - 1)
+        else:
+            ch_idx = blk_local % Cg
+        # ql, ch = divmod(blk_local, Cg); q = span_t + ql:
+        #   (q*B + rank_t)*C + ch*G + g
+        #     == (span_t*B + rank_t)*C + (ql*Cg*B + ch)*G + g,
+        # and ql*Cg == blk_local - ch.
+        head = ((tab * self._table_span) * B + self.rank_of_table(tab)) * C
+        base = (
+            head[t] + ((blk_local - ch_idx) * B + ch_idx) * G
+        ) * lpb + off
         if (
-            self.placement == "hot_replicate"
+            plc == "hot_replicate"
             and self.hot_vecs is not None
             and self.hot_vecs.size
         ):
-            vec = (lines * self.line_bytes) // self.vector_bytes
-            idx = np.clip(np.searchsorted(self.hot_vecs, vec), 0,
-                          self.hot_vecs.size - 1)
-            hot = self.hot_vecs[idx] == vec
+            lpv = self.vector_bytes // self.line_bytes
+            if lpv * self.line_bytes == self.vector_bytes:
+                vec = _div_fast(lines, lpv)
+            else:
+                vec = (lines * self.line_bytes) // self.vector_bytes
+            mask = self._hot_mask
+            hot = mask[np.minimum(vec, mask.size - 1)]
             if np.any(hot):
-                qh = blk // Cg
-                placed = np.where(
+                # qh, ch = divmod(blk, Cg); qhb, bk = divmod(qh, B):
+                #   ((hot_q_base + qhb)*B + bk)*C + ch*G + g
+                #     == hot_q_base*B*C + blk*G + g.
+                base = np.where(
                     hot,
-                    pack(self._hot_q_base + qh // B, qh % B, blk % Cg),
-                    placed,
+                    (blk * G + self._hot_q_base * B * C) * lpb + off,
+                    base,
                 )
-        return placed
+        return base
+
+    @property
+    def _hot_mask(self) -> np.ndarray:
+        """Membership mask over vector ids for the (sorted) hot set.
+
+        One boolean gather per ``place`` call instead of a searchsorted;
+        built lazily and cached on the instance (frozen dataclass, so via
+        ``object.__setattr__``)."""
+        cached = self.__dict__.get("_hot_mask_cache")
+        if cached is None:
+            cached = np.zeros(int(self.hot_vecs.max()) + 2, dtype=bool)
+            cached[np.asarray(self.hot_vecs, dtype=np.int64)] = True
+            object.__setattr__(self, "_hot_mask_cache", cached)
+        return cached
 
 
 # --------------------------------------------------------------------------

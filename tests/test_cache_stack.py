@@ -15,7 +15,7 @@ import numpy as np
 import pytest
 from _hypothesis_compat import given, settings, st
 
-from differential import assert_bitwise_equal_results
+from differential import assert_bitwise_equal_results, golden_pair
 from repro.core import dlrm_rmc2_small, simulate, sweep, tpuv6e
 from repro.core.hardware import OnChipPolicy
 from repro.core.memory import stack as stack_mod
@@ -119,7 +119,9 @@ def test_one_distance_pass_classifies_every_ways(rng):
         assert not np.any(a.hits & ~b.hits)
 
 
-def test_stack_backend_falls_back_for_non_stack_policies(rng):
+def test_stack_backend_analytic_for_non_stack_policies(rng):
+    """srrip/fifo under the stack variants run the analytic per-set engines
+    (no sequential full-trace scan) and stay bit-exact vs scan."""
     lines = rng.integers(0, 600, size=400)
     geom = CacheGeometry(num_sets=8, ways=4, line_bytes=64)
     for policy in ("srrip", "fifo"):
@@ -130,36 +132,68 @@ def test_stack_backend_falls_back_for_non_stack_policies(rng):
             assert got.num_evictions == ref.num_evictions
 
 
-def test_stack_fallback_selection_and_one_time_warning(caplog):
-    """Regression: srrip/fifo resolve stack->scan / stack_pallas->pallas
-    (lru keeps the stack variants), and the silent fallback now logs exactly
-    ONE warning per (policy, backend) — a user profiling an srrip sweep must
-    learn they are timing the scan engine."""
-    from repro.core.memory.cache import _FALLBACK_WARNED, _effective_backend
+def test_stack_backend_selection_and_no_fallback_warning(caplog):
+    """Every policy resolves to an analytic engine under "stack" (the
+    srrip/fifo stack->scan fallback — and its warning — is retired);
+    "stack_pallas" differs from "stack" only for LRU's distance pass."""
+    from repro.core.memory.cache import _effective_backend
 
-    # selection table (the knob can never change results, only execution)
     assert _effective_backend("lru", "stack") == "stack"
     assert _effective_backend("lru", "stack_pallas") == "stack_pallas"
-    assert _effective_backend("srrip", "stack") == "scan"
-    assert _effective_backend("fifo", "stack") == "scan"
-    assert _effective_backend("srrip", "stack_pallas") == "pallas"
+    assert _effective_backend("srrip", "stack") == "stack"
+    assert _effective_backend("fifo", "stack") == "stack"
+    assert _effective_backend("srrip", "stack_pallas") == "stack"
+    assert _effective_backend("fifo", "stack_pallas") == "stack"
     assert _effective_backend("fifo", "scan") == "scan"
     assert _effective_backend("srrip", "pallas") == "pallas"
 
-    _FALLBACK_WARNED.clear()   # other tests may have tripped it already
     logger = "repro.core.memory.cache"
+    rng = np.random.default_rng(5)
+    lines = rng.integers(0, 300, size=256)
+    geom = CacheGeometry(num_sets=8, ways=4, line_bytes=64)
     with caplog.at_level(logging.WARNING, logger=logger):
-        _effective_backend("srrip", "stack")
-        _effective_backend("srrip", "stack")     # second call: silent
-        _effective_backend("lru", "stack")       # no fallback: silent
-    warned = [r for r in caplog.records if r.name == logger]
-    assert len(warned) == 1
-    assert "srrip" in warned[0].getMessage()
-    assert "bit-exact" in warned[0].getMessage()
-    caplog.clear()
-    with caplog.at_level(logging.WARNING, logger=logger):
-        _effective_backend("fifo", "stack_pallas")   # distinct pair: warns
-    assert len([r for r in caplog.records if r.name == logger]) == 1
+        for policy in ("srrip", "fifo", "lru"):
+            simulate_cache(lines, geom, policy, backend="stack")
+    assert not [r for r in caplog.records if r.name == logger]
+
+
+def test_analytic_engines_share_presort_across_ways(rng):
+    """rrip sharing: all ways values of one (stream, num_sets) classify from
+    ONE compression presort, each bit-exact vs an independent golden run."""
+    from repro.core.memory.rrip import analytic_pass_count
+
+    stream = rng.integers(0, 4000, size=3000).astype(np.int64)
+    ways_axis = (1, 2, 3, 4, 7, 8, 16)
+    geoms = [CacheGeometry(num_sets=32, ways=w, line_bytes=64)
+             for w in ways_axis]
+    for policy in ("srrip", "fifo"):
+        before = analytic_pass_count()
+        results = simulate_cache_many([stream] * len(geoms), geoms, policy,
+                                      backend="stack")
+        assert analytic_pass_count() - before == 1       # shared presort
+        for geom, res in zip(geoms, results):
+            gold = GoldenCache(geom, policy)
+            gold_hits = gold.run(stream)
+            assert np.array_equal(res.hits, gold_hits), (policy, geom.ways)
+            assert res.num_evictions == gold.num_evictions
+
+
+@pytest.mark.parametrize("policy", ["srrip", "fifo"])
+def test_analytic_engine_corpus_differential(policy):
+    """tests/differential.py lock: the analytic srrip/fifo engines are
+    bitwise identical to the scan engine across the seeded trace corpus."""
+    geoms = [CacheGeometry(num_sets=64, ways=4, line_bytes=64),
+             CacheGeometry(num_sets=128, ways=8, line_bytes=64)]
+
+    def classify(backend):
+        def run(et):
+            stream = et.address_trace(64).lines
+            return simulate_cache_many([stream] * len(geoms), geoms,
+                                       policy, backend=backend)
+        return run
+
+    golden_pair(classify("stack"), classify("scan"),
+                label=f"analytic-{policy}")()
 
 
 def test_sweep_grid_stack_vs_scan_and_independent_simulate():
@@ -167,7 +201,7 @@ def test_sweep_grid_stack_vs_scan_and_independent_simulate():
     sweep and an independent simulate() run, bit for bit."""
     wl = dlrm_rmc2_small(num_tables=2, rows_per_table=2000, dim=128,
                          lookups=4, batch_size=8, num_batches=2)
-    grid = dict(policies=("spm", "lru", "srrip"),
+    grid = dict(policies=("spm", "lru", "srrip", "fifo"),
                 capacities=(1 << 16, 1 << 17), ways=(2, 4),
                 zipf_s=0.9, seed=0)
     hw_stack = tpuv6e().with_cache_backend("stack")

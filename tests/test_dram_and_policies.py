@@ -4,7 +4,12 @@ import numpy as np
 import pytest
 
 from repro.core.hardware import OnChipPolicy, tpuv6e
-from repro.core.memory.dram import DramModel, estimate_dram_fast, simulate_dram
+from repro.core.memory.dram import (
+    DramModel,
+    estimate_dram_fast,
+    simulate_dram,
+    simulate_dram_contended,
+)
 from repro.core.memory.golden_dram import golden_dram
 from repro.core.memory.policies import profile_hot_lines, run_policy
 from repro.core.trace import (
@@ -55,6 +60,75 @@ def test_dram_streaming_beats_random(dm, rng):
     rand = simulate_dram(_vec_trace(rng, 2500, 10_000_000), dm)
     assert stream.finish_cycle < rand.finish_cycle
     assert stream.row_hit_rate > rand.row_hit_rate
+
+
+@pytest.mark.parametrize("num_sources", [1, 3])
+@pytest.mark.parametrize("pattern", ["vectors", "random"])
+def test_dram_device_aggregates_match_host_reference(
+    pattern, num_sources, dm, rng
+):
+    """In-scan carry aggregates vs independent host re-derivation, bitwise.
+
+    The host mode replays the same IEEE f32 op chains from the per-chunk scan
+    outputs with a separate implementation — any drift in the device-resident
+    bookkeeping (latency chain, row-hit fold, completion maxima, per-source
+    finish) shows up as an exact-compare failure here.
+    """
+    from differential import assert_bitwise_equal_results
+
+    if pattern == "vectors":
+        lines = _vec_trace(rng, 6000, 50_000)
+    else:
+        lines = rng.integers(0, 400_000, size=48_000)
+    num_segments = 4
+    seg = np.sort(rng.integers(0, num_segments, size=lines.size))
+    seg[seg == 2] = 3                     # leave one segment empty
+    src = rng.integers(0, num_sources, size=lines.size)
+    dev = simulate_dram_contended(
+        lines, seg, src, num_segments, num_sources, dm, aggregate="device")
+    host = simulate_dram_contended(
+        lines, seg, src, num_segments, num_sources, dm, aggregate="host")
+    assert_bitwise_equal_results(dev, host)
+
+
+def test_dram_contended_tiny_and_empty(dm):
+    """Degenerate shapes: empty trace, one access, one chunk per mode."""
+    from differential import assert_bitwise_equal_results
+
+    empty = np.zeros(0, dtype=np.int64)
+    res, fin = simulate_dram_contended(empty, empty, empty, 2, 2, dm)
+    assert all(r.accesses == 0 for r in res) and not fin.any()
+    for lines in ([5], [5, 5, 5], list(range(8)), [9, 1000, 9]):
+        arr = np.asarray(lines, dtype=np.int64)
+        z = np.zeros(arr.size, dtype=np.int64)
+        assert_bitwise_equal_results(
+            simulate_dram_contended(arr, z, z, 1, 1, dm, aggregate="device"),
+            simulate_dram_contended(arr, z, z, 1, 1, dm, aggregate="host"),
+        )
+
+
+def test_radix_argsort_matches_numpy_stable(rng):
+    """_argsort_stable must be THE stable permutation for every key width
+    (single uint16 pass, two-pass, three-pass) including heavy ties."""
+    from repro.core.memory.dram import _argsort_stable
+
+    for kmax in (1, 100, 1 << 15, (1 << 16) - 1, 1 << 16, 1 << 20,
+                 1 << 31, 1 << 40, 1 << 50):
+        for n in (0, 1, 7, 5000):
+            key = rng.integers(0, kmax + 1, n).astype(np.int64)
+            np.testing.assert_array_equal(
+                _argsort_stable(key), np.argsort(key, kind="stable"),
+                err_msg=f"kmax={kmax} n={n}")
+    few = rng.integers(0, 3, 4096).astype(np.int64) * (1 << 33)
+    np.testing.assert_array_equal(
+        _argsort_stable(few), np.argsort(few, kind="stable"))
+
+
+def test_dram_contended_rejects_unknown_aggregate(dm):
+    with pytest.raises(ValueError, match="aggregate"):
+        simulate_dram_contended(
+            np.array([1]), np.array([0]), np.array([0]), 1, 1, dm,
+            aggregate="gpu")
 
 
 def _atrace(rng, hw, n=2000):

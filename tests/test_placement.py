@@ -295,6 +295,147 @@ def test_single_core_placement_rides_batched_classification():
         )
 
 
+def test_effective_placement_degeneracy_collapse(rng):
+    """table_rank with a single rank AND a single table is provably the plain
+    interleave transform (PlacementMap.effective_placement), and with one
+    channel group that makes it the exact identity."""
+    from dataclasses import replace
+
+    spec1 = EmbeddingOpSpec(num_tables=1, rows_per_table=4000, dim=128,
+                            lookups_per_sample=6, dtype_bytes=4)
+    base = tpuv6e()
+    hw1 = replace(base, offchip=replace(base.offchip, banks_per_channel=1))
+
+    pm = _pmap(hw1.with_placement("symmetric", "table_rank"), spec=spec1)
+    assert pm.effective_placement == "interleave"
+    assert pm.is_identity
+    lines = rng.integers(0, spec1.table_bytes // 64, size=4000).astype(np.int64)
+    assert np.array_equal(pm.place(lines), lines)
+
+    # multi-group: table_rank still equals interleave under the SAME groups
+    hw_g = hw1.with_cluster(2, "private", "table_hash").with_placement(
+        "per_core", "table_rank")
+    src = rng.integers(0, 2, size=lines.size).astype(np.int64)
+    pm_tr = _pmap(hw_g, spec=spec1)
+    pm_il = _pmap(hw_g.with_placement("per_core", "interleave"), spec=spec1)
+    assert pm_tr.effective_placement == "interleave"
+    assert not pm_tr.is_identity
+    assert np.array_equal(pm_tr.place(lines, src), pm_il.place(lines, src))
+
+    # but each degeneracy alone is NOT enough: two tables or two ranks keep
+    # the table_rank transform distinct from interleave
+    assert _pmap(hw1.with_placement("symmetric", "table_rank")
+                 ).effective_placement == "table_rank"
+    assert _pmap(base.with_placement("symmetric", "table_rank"), spec=spec1
+                 ).effective_placement == "table_rank"
+    # hot_replicate with an empty hot set is exactly table_rank
+    assert _pmap(base.with_placement("symmetric", "hot_replicate"), spec=spec1,
+                 hot_vecs=np.zeros(0, dtype=np.int64)
+                 ).effective_placement == "table_rank"
+
+
+def test_sweep_collapses_degenerate_table_rank_onto_base_entry(monkeypatch):
+    """A placement config whose transform is the identity for the topology
+    (table_rank, one rank, one table) must collapse onto the base-grid memo
+    entry — one DRAM request for both grid points, bitwise-equal results."""
+    import importlib
+    from dataclasses import replace
+
+    sweep_mod = importlib.import_module("repro.core.sweep")
+
+    wl = dlrm_rmc2_small(num_tables=1, rows_per_table=1500, dim=128,
+                         lookups=3, batch_size=6, num_batches=2)
+    base = tpuv6e()
+    hw1 = replace(base, offchip=replace(base.offchip, banks_per_channel=1))
+
+    calls = []
+    orig = sweep_mod.dram_timing_many
+    monkeypatch.setattr(
+        sweep_mod, "dram_timing_many",
+        lambda reqs, batch=True: calls.append(len(reqs)) or orig(reqs, batch=batch),
+    )
+    sr = sweep(wl, hw1, policies=("lru",), capacities=(1 << 16,), ways=(4,),
+               zipf_s=1.0, seed=0, placements=("interleave", "table_rank"))
+    assert sr.num_configs == 2
+    assert sum(calls) == 1          # ONE memo key -> one deferred request
+    by = {e.config.placement: e.result for e in sr.entries}
+    assert_bitwise_equal_results(by["table_rank"], by["interleave"])
+    hw_tr = hw1.with_policy("lru", capacity_bytes=1 << 16, ways=4
+                            ).with_placement("symmetric", "table_rank")
+    assert_bitwise_equal_results(
+        by["table_rank"], simulate(wl, hw_tr, seed=0, zipf_s=1.0))
+
+
+def test_placement_siblings_share_classification(monkeypatch):
+    """Grid points differing only in (affinity, placement) classify ONCE per
+    placement-invariant class key — the NUMA axes only remap miss addresses
+    downstream (classify_for_pending / pending_from split)."""
+    from repro.core.memory.system import MultiCoreMemorySystem
+
+    count = {"n": 0}
+    orig = MultiCoreMemorySystem.classify_for_pending
+
+    def spy(self, *a, **k):
+        count["n"] += 1
+        return orig(self, *a, **k)
+
+    monkeypatch.setattr(MultiCoreMemorySystem, "classify_for_pending", spy)
+    wl = dlrm_rmc2_small(num_tables=6, rows_per_table=1500, dim=128,
+                         lookups=3, batch_size=6, num_batches=2)
+    base = tpuv6e().with_cluster(2, "private", "table_hash")
+    sr = sweep(wl, base, policies=("spm", "lru"), capacities=(1 << 16,),
+               ways=(4,), zipf_s=1.0, seed=0,
+               channel_affinities=("symmetric", "per_core", "per_table"),
+               placements=("interleave", "table_rank", "hot_replicate"))
+    assert sr.num_configs == 2 * 3 * 3
+    # one classification per policy class key, not one per (aff, plc) point
+    assert count["n"] == 2
+
+
+def test_dram_timing_many_placement_edge_cases(rng):
+    """Satellite: batched dram_timing_many over placement-transformed
+    requests vs the unbatched reference path (batch=False), bitwise —
+    covering empty per-channel groups (restrictive affinity leaves 15/16
+    channel groups untouched), single-request buckets, and an all-hot
+    hot_replicate trace (every line lands in the replica region)."""
+    from repro.core.memory.dram import DramRequest, dram_timing_many
+
+    hw = tpuv6e().with_cluster(16, "private", "table_hash").with_placement(
+        "per_core", "interleave")
+    dm = DramModel.from_hardware(hw)
+
+    reqs = []
+    # (a) restrictive affinity: every request from ONE core -> one channel
+    #     group busy, all other (segment, channel) rows empty in the scan
+    pm = _pmap(hw)
+    lines = _vector_lines(rng, 300)
+    src = np.zeros(lines.size, dtype=np.int64)
+    seg = np.sort(rng.integers(0, 2, size=lines.size))
+    reqs.append(DramRequest(pm.place(lines, src), seg, src, 2, 16, dm))
+    # (b) single-request buckets: 1-line and 1-vector requests
+    one = _vector_lines(rng, 1)[:1]
+    z1 = np.zeros(1, dtype=np.int64)
+    reqs.append(DramRequest(one, z1, z1, 1, 1, dm))
+    vec = _vector_lines(rng, 1)
+    zv = np.zeros(vec.size, dtype=np.int64)
+    reqs.append(DramRequest(vec, zv, zv, 1, 1, dm))
+    # (c) all-hot hot_replicate: the hot set covers every vector in the trace
+    hw_hot = hw.with_placement("per_core", "hot_replicate")
+    lines_h = _vector_lines(rng, 400)
+    all_vecs = np.unique((lines_h * 64) // _SPEC.vector_bytes)
+    pm_hot = _pmap(hw_hot, hot_vecs=all_vecs)
+    src_h = rng.integers(0, 16, size=lines_h.size).astype(np.int64)
+    placed_h = pm_hot.place(lines_h, src_h)
+    seg_h = np.sort(rng.integers(0, 2, size=lines_h.size))
+    reqs.append(DramRequest(placed_h, seg_h, src_h, 2, 16, dm))
+
+    batched = dram_timing_many(reqs, batch=True)
+    ref = dram_timing_many(reqs, batch=False)
+    for (rb, fb), (rr, fr) in zip(batched, ref):
+        assert_bitwise_equal_results(rb, rr)
+        assert np.array_equal(fb, fr)
+
+
 def test_hot_replicate_deterministic_and_conserves_accesses():
     """hot_replicate profiles its hot set from the trace deterministically:
     repeated runs are bitwise identical, and placement never changes HOW MUCH
