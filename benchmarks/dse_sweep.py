@@ -9,6 +9,11 @@ per grid point, saved BOTH under results/bench/ and as BENCH_sweep.json at
 the repo root — the root copy is checked in (and uploaded by CI every run)
 so the per-config perf trajectory is tracked across PRs.
 
+Every timed slice is best-of-2 (single-shot walls on small shared runners
+carry ~20% scheduler noise, enough to fake a regression), and the perf row
+records ``device_count`` / ``host_cpus`` / ``sharded`` so trajectories from
+different runners stay comparable.
+
 ``--profile`` re-times the sweep inside a stage-profiling session
 (``repro.core.profiling``) and adds a per-stage wall-time breakdown to the
 perf record — trace gen / classify / cache scan / DRAM / host sync — so the
@@ -17,11 +22,23 @@ next perf PR starts from data instead of guesses.
 A separate NUMA placement-axes slice (channel_affinity x placement on a
 2-core table_hash cluster) is timed into ``placement_per_config_ms`` without
 touching the historical perf-gate grid.
+
+The **sharded probe** measures the device-sharded sweep: a subprocess under
+``XLA_FLAGS=--xla_force_host_platform_device_count=8`` (so the parent's
+numbers keep the real single-device runtime) runs a 96-config grid unsharded
+and sharded over 8 host devices, asserts bitwise equality, and reports
+``sharded_speedup`` into the perf row. Host "devices" are threads over the
+same cores, so the speedup ceiling is ``host_cpus`` — the recorded
+``host_cpus`` makes a 1-core CI runner's ~1x honest rather than alarming.
 """
 from __future__ import annotations
 
+import json
+import os
+import subprocess
+import sys
 import time
-from typing import Dict, List
+from typing import Dict, List, Optional
 
 from repro.core import OnChipPolicy, dlrm_rmc2_small, simulate, sweep, tpuv6e
 from repro.core import profiling
@@ -42,22 +59,42 @@ PLACEMENT_AXES = dict(
     placements=("interleave", "table_rank", "hot_replicate"),
 )
 
+# The sharded probe's grid: the perf-gate grid widened by zipf x cores to
+# 96 configs (4 x 3 x 2 x 2 x 2) so the shard partition has enough memo-key
+# groups to spread across 8 devices.
+SHARDED_AXES = dict(
+    policies=POLICIES, capacities=CAPACITIES, ways=WAYS,
+    zipf_s=(0.8, 1.0), num_cores=(1, 2), seed=0,
+)
+SHARDED_DEVICES = 8
+_PROBE_MARKER = "SHARDED_PROBE_JSON:"
+
+
+def _best_of(n: int, fn):
+    """Best-of-n wall clock: returns the fastest run's result."""
+    return min((fn() for _ in range(n)), key=lambda s: s.wall_seconds)
+
 
 def run(profile: bool = False) -> List[Dict]:
     wl = dlrm_rmc2_small(num_tables=TABLES, rows_per_table=ROWS, batch_size=BATCH,
                          num_batches=2)
     base_hw = tpuv6e()
 
-    # Warm pass compiles every scan shape; the timed pass measures steady state
-    # (the regime a DSE study with hundreds of points actually lives in).
-    sweep(wl, base_hw, policies=POLICIES, capacities=CAPACITIES, ways=WAYS,
-          zipf_s=ZIPF, seed=0)
+    def base_grid(**kw):
+        return sweep(wl, base_hw, policies=POLICIES, capacities=CAPACITIES,
+                     ways=WAYS, zipf_s=ZIPF, seed=0, **kw)
+
+    # Warm pass compiles every scan shape; the timed passes measure steady
+    # state (the regime a DSE study with hundreds of points actually lives
+    # in). Best-of-2 like the placement slice — the perf gate compares these
+    # numbers across runners.
+    base_grid()
     from repro.core.memory import stack as _stack
 
     dp0 = _stack.distance_pass_count()
-    sr = sweep(wl, base_hw, policies=POLICIES, capacities=CAPACITIES,
-               ways=WAYS, zipf_s=ZIPF, seed=0)
+    sr = base_grid()
     stack_passes = _stack.distance_pass_count() - dp0
+    sr = min(sr, base_grid(), key=lambda s: s.wall_seconds)
     prof = None
     if profile:
         # Separate profiled pass: an active session adds per-stage
@@ -66,16 +103,13 @@ def run(profile: bool = False) -> List[Dict]:
         # the breakdown below attributes a dedicated run.
         with profiling.collect() as prof:
             t_prof = time.perf_counter()
-            sweep(wl, base_hw, policies=POLICIES, capacities=CAPACITIES,
-                  ways=WAYS, zipf_s=ZIPF, seed=0)
+            base_grid()
             profiled_wall = time.perf_counter() - t_prof
 
     # Same grid with per-config scans (no vmapped batching): isolates the
     # batched-classification speedup from trace/matrix sharing.
-    sweep(wl, base_hw, policies=POLICIES, capacities=CAPACITIES, ways=WAYS,
-          zipf_s=ZIPF, seed=0, batch_scans=False)
-    sr_nb = sweep(wl, base_hw, policies=POLICIES, capacities=CAPACITIES,
-                  ways=WAYS, zipf_s=ZIPF, seed=0, batch_scans=False)
+    base_grid(batch_scans=False)
+    sr_nb = _best_of(2, lambda: base_grid(batch_scans=False))
 
     # NUMA placement-axes slice: the (affinity x placement) grid on a
     # 2-core table_hash cluster, timed separately so the headline
@@ -85,13 +119,7 @@ def run(profile: bool = False) -> List[Dict]:
     hw_p = base_hw.with_cluster(2, "private", "table_hash")
     placement_axes = PLACEMENT_AXES
     sweep(wl_p, hw_p, **placement_axes)          # warm
-    # Best-of-2: the placement slice feeds a ratio gate (perf_smoke) and
-    # single-shot walls on small shared runners carry ~20% scheduler noise,
-    # enough to flip the gate without any code change.
-    sr_p = min(
-        (sweep(wl_p, hw_p, **placement_axes) for _ in range(2)),
-        key=lambda s: s.wall_seconds,
-    )
+    sr_p = _best_of(2, lambda: sweep(wl_p, hw_p, **placement_axes))
 
     sample = sr.entries[:: max(1, len(sr.entries) // N_INDEPENDENT_SAMPLE)]
     t0 = time.perf_counter()
@@ -118,6 +146,12 @@ def run(profile: bool = False) -> List[Dict]:
         "batched_scan_speedup": sr_nb.wall_seconds / max(sr.wall_seconds, 1e-9),
         "cache_backend": base_hw.cache_backend,
         "stack_distance_passes": stack_passes,
+        "distinct_memo_keys": sr.distinct_memo_keys,
+        # Runner context: the headline grid runs unsharded on one device, and
+        # cross-runner trajectory comparisons need to know both.
+        "sharded": sr.sharded,
+        "device_count": sr.device_count,
+        "host_cpus": os.cpu_count() or 1,
         "placement_configs": sr_p.num_configs,
         "placement_per_config_ms": sr_p.wall_seconds / sr_p.num_configs * 1e3,
         "bitexact_sample": len(sample),
@@ -137,6 +171,71 @@ def run(profile: bool = False) -> List[Dict]:
     return rows
 
 
+def sharded_probe() -> Dict:
+    """The 96-config grid, unsharded vs sharded over the forced host devices
+    (run this under ``XLA_FLAGS=--xla_force_host_platform_device_count=8``)
+    — asserts bitwise equality, reports the wall-clock ratio."""
+    import jax
+
+    wl = dlrm_rmc2_small(num_tables=TABLES, rows_per_table=ROWS,
+                         batch_size=BATCH, num_batches=2)
+    base_hw = tpuv6e()
+    sweep(wl, base_hw, **SHARDED_AXES)                       # warm
+    ref = _best_of(2, lambda: sweep(wl, base_hw, **SHARDED_AXES))
+    sweep(wl, base_hw, devices=SHARDED_DEVICES, **SHARDED_AXES)   # warm
+    sh = _best_of(
+        2, lambda: sweep(wl, base_hw, devices=SHARDED_DEVICES, **SHARDED_AXES)
+    )
+    for a, b in zip(ref.entries, sh.entries):
+        assert a.config == b.config
+        mism = a.result.diff(b.result)
+        assert not mism, (a.config.label, mism)
+    return {
+        "sharded_configs": sh.num_configs,
+        "sharded_distinct_memo_keys": sh.distinct_memo_keys,
+        "sharded_device_count": sh.device_count,
+        "sharded_bitexact": True,
+        "sharded_unsharded_s": ref.wall_seconds,
+        "sharded_sweep_s": sh.wall_seconds,
+        "sharded_speedup": ref.wall_seconds / max(sh.wall_seconds, 1e-9),
+        "sharded_per_config_ms": sh.wall_seconds / sh.num_configs * 1e3,
+        "host_devices": len(jax.devices()),
+    }
+
+
+def run_sharded_subprocess() -> Optional[Dict]:
+    """Run the sharded probe in a child process with 8 forced host devices —
+    XLA device topology is fixed at backend init, so the parent process
+    (whose headline numbers must reflect the real device) cannot host it.
+    Returns None (with a note) if the child fails; the benchmark's other
+    rows still save."""
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = (
+        env.get("XLA_FLAGS", "")
+        + f" --xla_force_host_platform_device_count={SHARDED_DEVICES}"
+    ).strip()
+    repo_root = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+    env["PYTHONPATH"] = os.pathsep.join(
+        p for p in (os.path.join(repo_root, "src"),
+                    env.get("PYTHONPATH", "")) if p
+    )
+    try:
+        proc = subprocess.run(
+            [sys.executable, "-m", "benchmarks.dse_sweep", "--sharded-probe"],
+            cwd=repo_root, env=env, capture_output=True, text=True,
+            timeout=1800,
+        )
+    except (OSError, subprocess.TimeoutExpired) as exc:
+        print(f"sharded probe failed to run: {exc}", file=sys.stderr)
+        return None
+    for line in proc.stdout.splitlines():
+        if line.startswith(_PROBE_MARKER):
+            return json.loads(line[len(_PROBE_MARKER):])
+    print("sharded probe produced no result:\n"
+          f"{proc.stdout}\n{proc.stderr}", file=sys.stderr)
+    return None
+
+
 if __name__ == "__main__":
     import argparse
 
@@ -145,16 +244,33 @@ if __name__ == "__main__":
     ap = argparse.ArgumentParser(description=__doc__)
     ap.add_argument("--profile", action="store_true",
                     help="add a per-stage wall-time breakdown to the perf row")
+    ap.add_argument("--no-sharded", action="store_true",
+                    help="skip the sharded-sweep probe subprocess")
+    ap.add_argument("--sharded-probe", action="store_true",
+                    help=argparse.SUPPRESS)   # internal: child-process mode
     args = ap.parse_args()
 
+    if args.sharded_probe:
+        print(_PROBE_MARKER + json.dumps(sharded_probe()))
+        sys.exit(0)
+
     bench_rows = run(profile=args.profile)
-    path = common.save_rows("BENCH_sweep", bench_rows, repo_root=True)
     perf = next(r for r in bench_rows if r["kind"] == "perf")
+    if not args.no_sharded:
+        probe = run_sharded_subprocess()
+        if probe is not None:
+            perf.update(probe)
+    path = common.save_rows("BENCH_sweep", bench_rows, repo_root=True)
     print(f"saved {path}")
     print(f"configs={perf['configs']} sweep_s={perf['sweep_s']:.2f} "
           f"per_config_ms={perf['per_config_ms']:.1f} "
           f"speedup_vs_independent={perf['speedup_vs_independent']:.2f} "
           f"batched_scan_speedup={perf['batched_scan_speedup']:.2f}")
+    if "sharded_speedup" in perf:
+        print(f"sharded: {perf['sharded_configs']} configs on "
+              f"{perf['sharded_device_count']} host devices "
+              f"(host_cpus={perf['host_cpus']}) "
+              f"speedup={perf['sharded_speedup']:.2f}x bitexact=True")
     if args.profile:
         for k, v in perf["stage_ms_per_config"].items():
             print(f"  stage {k:<12s} {v:8.2f} ms/config")

@@ -155,6 +155,24 @@ def placement_smoke() -> None:
           "bit-exact vs the axes-free sweep")
 
 
+def sharded_smoke() -> None:
+    """The sharded sweep path must stay bitwise identical to the plain pass
+    even on this job's single real device (4 oversubscribed shards — the
+    full 8-device run lives in the dse-scale job)."""
+    wl = dlrm_rmc2_small(num_tables=2, rows_per_table=300, batch_size=2,
+                         num_batches=2)
+    grids = dict(policies=("spm", "lru", "pinning"), capacities=(1 << 14,),
+                 ways=(4, 8), zipf_s=0.9, seed=0)
+    ref = sweep(wl, tpuv6e(), **grids)
+    got = sweep(wl, tpuv6e(), devices=4, **grids)
+    assert got.sharded
+    for a, b in zip(ref.entries, got.entries):
+        mism = a.result.diff(b.result)
+        assert not mism, (a.config.label, mism)
+    print(f"sharded smoke: {got.num_configs} configs over 4 shards "
+          f"({got.device_count} device) bit-exact vs unsharded")
+
+
 def main() -> int:
     ap = argparse.ArgumentParser(description=__doc__)
     ap.add_argument("--update-baseline", action="store_true",
@@ -163,6 +181,7 @@ def main() -> int:
 
     backend_smoke()
     placement_smoke()
+    sharded_smoke()
     per_config_ms, num_configs, stages = measure()
     placement_ms, placement_configs = measure_placement()
     ratio = placement_ms / per_config_ms

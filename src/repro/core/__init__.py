@@ -33,7 +33,9 @@ from .memory import (
     register_policy,
 )
 from .results import BatchResult, SimResult
-from .sweep import SweepConfig, SweepEntry, SweepResult, sweep
+from .sweep import SweepConfig, SweepEntry, SweepResult, grid_configs, sweep
+from .sweep_ckpt import SweepCheckpoint
+from .search import SearchResult, pareto_front, search
 
 __all__ = [
     "CHANNEL_AFFINITIES",
@@ -67,5 +69,10 @@ __all__ = [
     "SweepConfig",
     "SweepEntry",
     "SweepResult",
+    "SweepCheckpoint",
+    "SearchResult",
+    "grid_configs",
+    "pareto_front",
+    "search",
     "sweep",
 ]

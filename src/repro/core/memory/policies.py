@@ -130,6 +130,11 @@ class MemoryPolicy(abc.ABC):
     # only reads capacity), so declaring a narrower set makes sweeps cheaper
     # — never different.
     sensitive_params: ClassVar[Tuple[str, ...]] = ("capacity_bytes", "ways")
+    # Classification saturates once capacity covers the trace's whole line
+    # footprint: every capacity at or above it is provably identical (e.g.
+    # PINNING pins ALL unique lines — all hits, setup writes equal the
+    # footprint). The sweep canonicalizes such capacities onto one memo key.
+    capacity_saturates: ClassVar[bool] = False
     # Safe to classify at vector granularity through the lane decomposition
     # (bit-exact only when classification is independent of line/vector
     # granularity tie-breaking — true for stateless staging and for
@@ -339,6 +344,10 @@ class PinningPolicy(MemoryPolicy):
     name = "pinning"
     enum = OnChipPolicy.PINNING
     sensitive_params = ("capacity_bytes",)
+    # profile_hot_lines(lines, cap) with cap >= the unique-line footprint
+    # pins every line regardless of cap — classification is capacity-
+    # invariant from the footprint up (collapse-is-bitwise test-enforced).
+    capacity_saturates = True
 
     def prepare(self, lines: np.ndarray, ctx: PolicyContext) -> PolicyContext:
         if ctx.pinned_lines is None:

@@ -172,6 +172,7 @@ class EmbeddingTrace:
         self._lookup_batch: Optional[np.ndarray] = None
         self._atraces: Dict[int, AddressTrace] = {}
         self._hot_vecs: Optional[np.ndarray] = None
+        self._unique_lines: Dict[int, int] = {}
 
     @classmethod
     def from_concat(cls, spec: EmbeddingOpSpec, concat: ConcatTrace) -> "EmbeddingTrace":
@@ -183,6 +184,7 @@ class EmbeddingTrace:
         et._lookup_batch = None
         et._atraces = {}
         et._hot_vecs = None
+        et._unique_lines = {}
         return et
 
     @property
@@ -213,6 +215,18 @@ class EmbeddingTrace:
                 at = translate(self.concat, self.spec, line_bytes)
             self._atraces[line_bytes] = at
         return at
+
+    def unique_line_count(self, line_bytes: int) -> int:
+        """Distinct on-chip lines this op's whole trace touches — the line
+        footprint. The sweep's memo-key canonicalization compares it against
+        a ``capacity_saturates`` policy's capacity: any capacity at or above
+        the footprint classifies identically (e.g. PINNING pins every line).
+        Hardware-independent apart from the line geometry, so cached."""
+        n = self._unique_lines.get(line_bytes)
+        if n is None:
+            n = int(np.unique(self.address_trace(line_bytes).lines).size)
+            self._unique_lines[line_bytes] = n
+        return n
 
     @property
     def hot_vec_ids(self) -> np.ndarray:

@@ -27,6 +27,7 @@ Canonical stage names used by the memory pipeline:
 """
 from __future__ import annotations
 
+import threading
 import time
 from contextlib import contextmanager
 from typing import Dict, Iterator, List, Optional
@@ -35,11 +36,29 @@ __all__ = ["stage", "collect", "is_active", "StageProfile"]
 
 
 class StageProfile:
-    """Accumulated exclusive seconds per stage for one profiling session."""
+    """Accumulated exclusive seconds per stage for one profiling session.
+
+    Thread-safe: the sharded sweep runs stages on several worker threads at
+    once, so nesting state lives per thread (a shared stack would attribute
+    one thread's children to another's parent frame) and the accumulator
+    takes a lock. Concurrent stages both count their own wall time — the
+    breakdown is attribution, not a partition of the session's wall clock.
+    """
 
     def __init__(self) -> None:
         self.seconds: Dict[str, float] = {}
-        self._stack: List[list] = []  # [name, started_at, child_seconds]
+        self._lock = threading.Lock()
+        self._local = threading.local()  # .stack: [name, started, child_s]
+
+    def _stack(self) -> List[list]:
+        st = getattr(self._local, "stack", None)
+        if st is None:
+            st = self._local.stack = []
+        return st
+
+    def _add(self, name: str, seconds: float) -> None:
+        with self._lock:
+            self.seconds[name] = self.seconds.get(name, 0.0) + seconds
 
     def breakdown(self, total_seconds: Optional[float] = None) -> Dict[str, float]:
         """Stage -> seconds, with ``other`` filling up to ``total_seconds``."""
@@ -71,15 +90,16 @@ def stage(name: str) -> Iterator[None]:
     if prof is None:
         yield
         return
-    prof._stack.append([name, time.perf_counter(), 0.0])
+    stack = prof._stack()
+    stack.append([name, time.perf_counter(), 0.0])
     try:
         yield
     finally:
-        frame = prof._stack.pop()
+        frame = stack.pop()
         elapsed = time.perf_counter() - frame[1]
-        prof.seconds[name] = prof.seconds.get(name, 0.0) + elapsed - frame[2]
-        if prof._stack:
-            prof._stack[-1][2] += elapsed
+        prof._add(name, elapsed - frame[2])
+        if stack:
+            stack[-1][2] += elapsed
 
 
 @contextmanager

@@ -39,6 +39,13 @@ one pass while staying **bit-exact** with independent ``simulate()`` calls
     requests from it (``pending_from``); configs whose placement transform
     is provably the identity for the topology collapse onto the base-grid
     memo entry outright.
+  * **Degenerate memo-key canonicalization** — grid points whose swept
+    parameters provably cannot change classification collapse onto one memo
+    key: SPM reads neither capacity nor ways (``sensitive_params = ()``),
+    PINNING never reads ways, and a PINNING capacity large enough to pin the
+    slice's whole line footprint is canonicalized to a saturation marker so
+    every such capacity shares one classification + DRAM timing
+    (``MemoryPolicy.capacity_saturates``; collapse-is-bitwise test-enforced).
   * **Cross-config DRAM batching** — classification and DRAM timing are
     decoupled (``PendingEmbedding``): every memo key's miss-trace dispatch
     of a (workload, zipf) slice runs through ONE ``dram_timing_many`` call,
@@ -52,6 +59,26 @@ MemorySystem with shared-DRAM contention — and the NUMA placement axes
 interleave | table_rank | hot_replicate), which participate in the memo keys
 and ride the same batched ``dram_timing_many`` dispatch (placement is pure
 address remapping upstream of DRAM timing).
+
+Scaling the sweep itself (the "week-long sweeps that survive preemption"
+posture — see docs/architecture.md "Scaling the DSE"):
+
+  * **Device sharding** (``devices=``) — the memo-key space partitions into
+    shards (whole class-key groups, so placement siblings stay co-located
+    with their shared classification); each shard runs its own batched
+    stack-distance passes and ``dram_timing_many`` dispatch pinned to one
+    JAX device, concurrently with the others, and the per-key stats gather
+    back into the single result. Because every batching layer is bit-exact
+    regardless of batch composition, the sharded sweep is bitwise identical
+    to the single-device path (differential-enforced).
+  * **Checkpointed resumability** (``checkpoint=``) — completed memo keys
+    journal to a ``SweepCheckpoint`` (``core.sweep_ckpt``) in cadence-sized
+    rounds; a killed sweep resumes by restoring journaled keys and
+    re-evaluating only the remainder, and the resumed ``SweepResult`` is
+    bitwise identical to an uninterrupted run (differential-enforced).
+  * **Explicit config lists** (``configs=``) — the search driver
+    (``core.search``) evaluates arbitrary subsets of the grid through the
+    same memoized engine; ``grid_configs()`` exposes the exhaustive list.
 
 Typical use (the paper's Fig. 4 case study is one call — see
 ``examples/fig4_sweep.py``)::
@@ -71,7 +98,7 @@ import itertools
 import json
 import time
 from dataclasses import asdict, dataclass, field
-from typing import Dict, List, Optional, Sequence, Union
+from typing import Dict, List, Optional, Sequence, Tuple, Union
 
 import numpy as np
 
@@ -90,9 +117,16 @@ from .memory.system import (
     memory_system_for,
 )
 from .results import SimResult
+from .sweep_ckpt import SweepCheckpoint
 from .workload import Workload
 
 DEFAULT_POLICIES = ("spm", "lru", "srrip", "fifo", "pinning")
+
+# Canonical memo-key marker for a capacity that saturates classification
+# (``MemoryPolicy.capacity_saturates`` + capacity >= the slice's whole line
+# footprint): every such capacity classifies identically, so they share one
+# key instead of re-timing byte-identical stats per capacity.
+_CAP_SATURATED = "cap_saturated"
 
 
 @dataclass(frozen=True)
@@ -124,6 +158,10 @@ class SweepConfig:
 class SweepEntry:
     config: SweepConfig
     result: SimResult
+    # The (workload, zipf)-scoped memo key this entry's embedding stats came
+    # from — engine metadata (search groups by it; differential comparisons
+    # ignore it), NOT part of the row() record.
+    memo_key: Optional[tuple] = None
 
     def row(self) -> Dict:
         """Flat record: config fields + result summary (JSON/CSV friendly)."""
@@ -136,6 +174,11 @@ class SweepEntry:
 class SweepResult:
     entries: List[SweepEntry] = field(default_factory=list)
     wall_seconds: float = 0.0
+    # Engine metadata (how the grid was evaluated — never affects entries):
+    device_count: int = 1          # distinct JAX devices the sweep ran on
+    sharded: bool = False          # memo-key space partitioned across devices
+    distinct_memo_keys: int = 0    # classification+DRAM evaluations performed
+    resumed_keys: int = 0          # memo keys restored from a checkpoint
 
     @property
     def num_configs(self) -> int:
@@ -178,6 +221,10 @@ class SweepResult:
         payload = {
             "num_configs": self.num_configs,
             "wall_seconds": self.wall_seconds,
+            "device_count": self.device_count,
+            "sharded": self.sharded,
+            "distinct_memo_keys": self.distinct_memo_keys,
+            "resumed_keys": self.resumed_keys,
             "rows": self.rows(),
         }
         text = json.dumps(payload, indent=2)
@@ -193,6 +240,320 @@ def _as_tuple(x, default):
     if isinstance(x, (str, bytes)) or not isinstance(x, (list, tuple)):
         return (x,)
     return tuple(x)
+
+
+def _resolve_axes(
+    base_hw: HardwareConfig,
+    policies,
+    capacities,
+    ways,
+    num_cores,
+    topologies,
+    channel_affinities,
+    placements,
+) -> Tuple[tuple, ...]:
+    """Normalize + validate the seven hardware axes (shared by ``sweep`` and
+    ``grid_configs`` so the exhaustive list can never drift from the engine)."""
+    pol_names = tuple(
+        p.value if isinstance(p, OnChipPolicy) else str(p)
+        for p in _as_tuple(policies, DEFAULT_POLICIES)
+    )
+    unknown = set(pol_names) - set(available_policies())
+    if unknown:
+        raise ValueError(f"unregistered policies: {sorted(unknown)}")
+    caps = _as_tuple(capacities, (base_hw.onchip.capacity_bytes,))
+    ways_t = _as_tuple(ways, (base_hw.onchip.ways,))
+    cores_t = tuple(int(c) for c in _as_tuple(num_cores, (base_hw.num_cores,)))
+    topo_t = tuple(
+        Topology(t).value for t in _as_tuple(topologies, (base_hw.topology.value,))
+    )
+    aff_t = tuple(
+        str(a) for a in _as_tuple(channel_affinities, (base_hw.channel_affinity,))
+    )
+    plc_t = tuple(str(p) for p in _as_tuple(placements, (base_hw.placement,)))
+    return pol_names, caps, ways_t, cores_t, topo_t, aff_t, plc_t
+
+
+def grid_configs(
+    workloads: Union[Workload, Sequence[Workload]],
+    base_hw: Optional[HardwareConfig] = None,
+    policies: Sequence[Union[str, OnChipPolicy]] = DEFAULT_POLICIES,
+    capacities: Optional[Sequence[int]] = None,
+    ways: Optional[Sequence[int]] = None,
+    zipf_s: Union[float, Sequence[float]] = 0.8,
+    num_cores: Optional[Sequence[int]] = None,
+    topologies: Optional[Sequence[Union[str, Topology]]] = None,
+    channel_affinities: Optional[Sequence[str]] = None,
+    placements: Optional[Sequence[str]] = None,
+) -> List[SweepConfig]:
+    """The exhaustive ``SweepConfig`` list ``sweep()`` evaluates for these
+    axes, in sweep entry order — ``sweep(wls, hw, configs=grid_configs(...))``
+    is bitwise identical to the axes call (test-enforced). The search driver
+    builds its starting population from this."""
+    base_hw = base_hw or tpuv6e()
+    wls = _as_tuple(workloads, ())
+    if not wls:
+        raise ValueError("need at least one workload")
+    axes = _resolve_axes(base_hw, policies, capacities, ways, num_cores,
+                         topologies, channel_affinities, placements)
+    zipfs = _as_tuple(zipf_s, (0.8,))
+    return [
+        SweepConfig(
+            policy=pol, capacity_bytes=cap, ways=w, workload=wl.name,
+            zipf_s=z, num_cores=nc, topology=topo,
+            channel_affinity=aff, placement=plc,
+        )
+        for wl in wls
+        for z in zipfs
+        for pol, cap, w, nc, topo, aff, plc in itertools.product(*axes)
+    ]
+
+
+# --------------------------------------------------------------------------
+# Slice planning: (workload, zipf) slices of the grid
+# --------------------------------------------------------------------------
+
+# One slice = every grid point sharing (workload, zipf): they share traces,
+# the matrix summary, and the memo-key space. ``combos`` are the seven
+# hardware-axis values per grid point; ``indices`` the entries' positions in
+# the final result (so an explicit ``configs`` list keeps its order).
+_Combo = Tuple[str, int, int, int, str, str, str]
+
+
+@dataclass
+class _Slice:
+    workload: Workload
+    zipf_s: float
+    combos: List[_Combo]
+    indices: List[int]
+
+    @property
+    def slice_id(self) -> tuple:
+        return (self.workload.name, float(self.zipf_s))
+
+
+def _slices_from_axes(wls, zipfs, axes) -> List[_Slice]:
+    combos = list(itertools.product(*axes))
+    out, pos = [], 0
+    for wl in wls:
+        for z in zipfs:
+            out.append(_Slice(wl, float(z), list(combos),
+                              list(range(pos, pos + len(combos)))))
+            pos += len(combos)
+    return out
+
+
+def _slices_from_configs(wls, configs: Sequence[SweepConfig]) -> List[_Slice]:
+    by_name: Dict[str, Workload] = {}
+    for wl in wls:
+        if wl.name in by_name and by_name[wl.name] is not wl:
+            raise ValueError(f"ambiguous workload name {wl.name!r}")
+        by_name[wl.name] = wl
+    unknown_pols = {c.policy for c in configs} - set(available_policies())
+    if unknown_pols:
+        raise ValueError(f"unregistered policies: {sorted(unknown_pols)}")
+    slices: Dict[tuple, _Slice] = {}
+    for i, c in enumerate(configs):
+        wl = by_name.get(c.workload)
+        if wl is None:
+            raise ValueError(
+                f"config references unknown workload {c.workload!r}; "
+                f"known: {sorted(by_name)}"
+            )
+        sid = (c.workload, float(c.zipf_s))
+        sl = slices.get(sid)
+        if sl is None:
+            sl = slices[sid] = _Slice(wl, float(c.zipf_s), [], [])
+        sl.combos.append((c.policy, c.capacity_bytes, c.ways, c.num_cores,
+                          Topology(c.topology).value, str(c.channel_affinity),
+                          str(c.placement)))
+        sl.indices.append(i)
+    return list(slices.values())
+
+
+# --------------------------------------------------------------------------
+# Memo-key grid construction (per slice)
+# --------------------------------------------------------------------------
+
+def _capacity_saturated(etraces, hw: HardwareConfig) -> bool:
+    """True when ``hw``'s capacity covers every etrace's whole line footprint
+    — a ``capacity_saturates`` policy then classifies identically for ANY
+    capacity at or above it (PINNING pins all unique lines: every access
+    hits, setup writes equal the footprint), so such capacities share one
+    canonical memo key. Per-core shards only shrink the footprint, so the
+    collapse holds for every cluster shape."""
+    cap_units = hw.onchip.num_lines
+    line = hw.onchip.line_bytes
+    return all(et.unique_line_count(line) <= cap_units for et in etraces)
+
+
+def _build_grid(base_hw: HardwareConfig, combos: Sequence[_Combo], etraces):
+    """Resolve each combo to (hw, memo key); dedupe keys into ``pending``.
+
+    The memo key splits into the placement-INVARIANT class key
+    (classification + stats assembly never read the NUMA axes) plus the
+    canonicalized placement axes. Classification runs once per class key;
+    DRAM timing once per full key.
+    """
+    grid = []                        # (combo..., hw, key)
+    pending: Dict[tuple, tuple] = {}  # key -> (ms, class_key)
+    # Placement-collapse preconditions for this (workload, zipf) slice: a
+    # single rank and a single table make the table_rank transform provably
+    # equal to plain interleave for EVERY op (PlacementMap.effective_placement
+    # — the transform itself dispatches on the same rule, so the collapse is
+    # bitwise).
+    plc_collapses = (
+        base_hw.offchip.banks_per_channel == 1
+        and all(et.spec.num_tables == 1 for et in etraces)
+    )
+    sat_memo: Dict[int, bool] = {}   # capacity -> footprint saturation
+    for pol, cap, w, nc, topo, aff, plc in combos:
+        hw = base_hw.with_policy(
+            OnChipPolicy(pol), capacity_bytes=cap, ways=w
+        ).with_cluster(nc, topo).with_placement(aff, plc)
+        ms = memory_system_for(hw)
+        class_key = (pol, nc, topo, hw.lookup_sharding.value,
+                     hw.onchip.policy_mix)
+        # Canonicalize the sensitive parameters: a saturating policy's
+        # capacity collapses to one marker once it covers the slice's whole
+        # footprint (provably identical classification — test-enforced).
+        sens = []
+        for p in ms.policy.sensitive_params:
+            v = getattr(hw.onchip, p)
+            if (
+                p == "capacity_bytes"
+                and ms.policy.capacity_saturates
+                and not hw.onchip.policy_mix
+            ):
+                sat = sat_memo.get(cap)
+                if sat is None:
+                    sat = sat_memo[cap] = _capacity_saturated(etraces, hw)
+                if sat:
+                    v = _CAP_SATURATED
+            sens.append(v)
+        class_key += tuple(sens)
+        if ms.policy.uses_cache_engine:
+            # Backends are bit-exact, but memoization must not hand a
+            # "pallas" grid point stats computed by "scan" — the knob
+            # is part of what the config requests.
+            class_key += (hw.cache_backend,)
+        if hw.onchip.policy_mix:
+            # Mix groups may read parameters the default policy does
+            # not (e.g. pinned tables under an SPM default).
+            class_key += (cap, w)
+        # Canonicalize the placement axes: with one core every affinity
+        # collapses to a single channel group, and a degenerate table_rank
+        # collapses to interleave — keying such points apart would re-time
+        # provably identical DRAM traffic (e.g. the base-grid entry).
+        key_aff = "symmetric" if nc == 1 else aff
+        key_plc = plc
+        if key_plc == "table_rank" and plc_collapses:
+            key_plc = "interleave"
+        key = class_key + (key_aff, key_plc)
+        grid.append((pol, cap, w, nc, topo, aff, plc, hw, key))
+        if key not in pending:
+            pending[key] = (ms, class_key)
+    return grid, pending
+
+
+# --------------------------------------------------------------------------
+# Memo-key evaluation (classification + batched DRAM timing)
+# --------------------------------------------------------------------------
+
+def _evaluate_keys(
+    etraces, items: Dict[tuple, tuple], batch_scans: bool, batch_dram: bool
+) -> Dict[tuple, list]:
+    """Evaluate a subset of memo keys: shared classification per class key,
+    placement fan-out per full key, ONE batched DRAM dispatch for the lot.
+
+    Self-contained in ``items`` — the sharded sweep calls it once per shard
+    and the checkpointed sweep once per cadence round; results are bit-exact
+    regardless of how the key space is split (every batching layer is
+    composition-invariant, test-enforced).
+    """
+    class_systems: Dict[tuple, object] = {}
+    for key, (ms, ck) in items.items():
+        class_systems.setdefault(ck, ms)
+
+    # Batched classification: distinct single-core cache-engine class keys of
+    # ONE policy share a vmapped dispatch per scan shape — and, under the
+    # stack backend, one analytic pass per (stream, num_sets)
+    # (classify_embedding_many); everything else classifies per class key.
+    # DRAM timing is deferred throughout.
+    classified: Dict[tuple, list] = {}  # class_key -> per-etrace
+    by_policy: Dict[str, list] = {}
+    for ck, ms in class_systems.items():
+        if (
+            batch_scans
+            and isinstance(ms, MemorySystem)
+            and ms.policy.uses_cache_engine
+            and not ms.hw.onchip.policy_mix
+        ):
+            by_policy.setdefault(ms.policy.name, []).append((ck, ms))
+    for batch in by_policy.values():
+        if len(batch) < 2:
+            continue
+        cks = [k for k, _ in batch]
+        systems = [m for _, m in batch]
+        per_ck = [[] for _ in systems]
+        for et in etraces:
+            for i, cs in enumerate(classify_embedding_many(systems, et)):
+                per_ck[i].append(cs)
+        for ck, css in zip(cks, per_ck):
+            classified[ck] = css
+    for ck, ms in class_systems.items():
+        if ck not in classified:
+            classified[ck] = [ms.classify_for_pending(et) for et in etraces]
+
+    # Placement fan-out: every full key packages ITS OWN placement transform
+    # of the shared classification into a deferred DRAM request — so
+    # placement siblings ride the same size-bucketed dram_timing_many
+    # dispatch as the base grid.
+    prepared: Dict[tuple, list] = {
+        key: [
+            ms.pending_from(et, cl)
+            for et, cl in zip(etraces, classified[ck])
+        ]
+        for key, (ms, ck) in items.items()
+    }
+
+    # Cross-memo-key DRAM batching: every deferred miss-trace dispatch of
+    # this key subset — all policies, geometries, and cluster shapes — runs
+    # through ONE dram_timing_many call. Per-request results are bitwise
+    # identical to unbatched dispatch (batch_dram=False is that reference
+    # path; test-enforced).
+    key_order = list(prepared)
+    all_pending = [p for k in key_order for p in prepared[k]]
+    outs = iter(dram_timing_many(
+        [p.request for p in all_pending], batch=batch_dram
+    ))
+    return {k: [p.finalize(*next(outs)) for p in prepared[k]] for k in key_order}
+
+
+def _chunks(items: Dict[tuple, tuple], cadence: Optional[int]):
+    """Split the todo keys into cadence-sized rounds (insertion order)."""
+    keys = list(items)
+    if not cadence or cadence <= 0 or cadence >= len(keys):
+        if keys:
+            yield items
+        return
+    for i in range(0, len(keys), cadence):
+        yield {k: items[k] for k in keys[i:i + cadence]}
+
+
+def _prewarm_traces(etraces, base_hw: HardwareConfig, combos) -> None:
+    """Materialize the lazily cached derived streams BEFORE shard threads
+    start, so concurrent workers never duplicate the (deterministic but
+    expensive) trace work. Line geometry is grid-invariant (``with_policy``
+    never touches ``line_bytes``)."""
+    line = base_hw.onchip.line_bytes
+    any_hot = any(c[6] == "hot_replicate" for c in combos)
+    for et in etraces:
+        et.lookup_batch
+        et.vec_ids
+        et.address_trace(line)
+        if any_hot:
+            et.hot_vec_ids
 
 
 def sweep(
@@ -211,6 +572,9 @@ def sweep(
     placements: Optional[Sequence[str]] = None,
     batch_scans: bool = True,
     batch_dram: bool = True,
+    configs: Optional[Sequence[SweepConfig]] = None,
+    devices=None,
+    checkpoint: Union[SweepCheckpoint, str, None] = None,
 ) -> SweepResult:
     """Evaluate the (workload x zipf x policy x capacity x ways x num_cores
     x topology x channel_affinity x placement) grid.
@@ -220,161 +584,106 @@ def sweep(
     ways=...).with_cluster(num_cores, topology).with_placement(affinity,
     placement), seed=seed, zipf_s=z)`` — the sweep only removes redundant
     work, never changes the model.
+
+    ``configs`` replaces the axis grid with an explicit ``SweepConfig`` list
+    (entry order preserved; the search driver's evaluation path).
+
+    ``devices`` shards the memo-key space: an int takes that many shards over
+    the local JAX devices (cycled when fewer exist), a device sequence pins
+    one shard per device. Shards evaluate concurrently (one thread per
+    shard, jit dispatch pinned via ``jax.default_device``) and results are
+    bitwise identical to the unsharded path.
+
+    ``checkpoint`` (a ``SweepCheckpoint`` or journal path) makes the sweep
+    restartable: memo keys journal in ``cadence``-sized rounds, a resumed
+    sweep restores finished keys and is bitwise identical to an
+    uninterrupted run.
     """
     base_hw = base_hw or tpuv6e()
     wls = _as_tuple(workloads, ())
     if not wls:
         raise ValueError("need at least one workload")
-    pol_names = tuple(
-        p.value if isinstance(p, OnChipPolicy) else str(p)
-        for p in _as_tuple(policies, DEFAULT_POLICIES)
-    )
-    unknown = set(pol_names) - set(available_policies())
-    if unknown:
-        raise ValueError(f"unregistered policies: {sorted(unknown)}")
-    caps = _as_tuple(capacities, (base_hw.onchip.capacity_bytes,))
-    ways_t = _as_tuple(ways, (base_hw.onchip.ways,))
-    zipfs = _as_tuple(zipf_s, (0.8,))
-    cores_t = tuple(int(c) for c in _as_tuple(num_cores, (base_hw.num_cores,)))
-    topo_t = tuple(
-        Topology(t).value for t in _as_tuple(topologies, (base_hw.topology.value,))
-    )
-    aff_t = tuple(
-        str(a) for a in _as_tuple(channel_affinities, (base_hw.channel_affinity,))
-    )
-    plc_t = tuple(str(p) for p in _as_tuple(placements, (base_hw.placement,)))
+
+    if configs is not None:
+        slices = _slices_from_configs(wls, list(configs))
+        num_entries = len(configs)
+    else:
+        axes = _resolve_axes(base_hw, policies, capacities, ways, num_cores,
+                             topologies, channel_affinities, placements)
+        zipfs = _as_tuple(zipf_s, (0.8,))
+        slices = _slices_from_axes(wls, zipfs, axes)
+        num_entries = sum(len(s.combos) for s in slices)
+
+    ckpt: Optional[SweepCheckpoint] = None
+    if checkpoint is not None:
+        ckpt = (checkpoint if isinstance(checkpoint, SweepCheckpoint)
+                else SweepCheckpoint(checkpoint))
+        ckpt.open(_fingerprint(wls, base_hw, seed, slices, index_trace,
+                               energy_table))
+
+    shard_plan = None
+    if devices is not None:
+        from ..distributed.sweep_shard import resolve_shard_plan
+        shard_plan = resolve_shard_plan(devices)
 
     t0 = time.perf_counter()
     out = SweepResult()
-    for wl in wls:
-        # Matrix side ignores the swept on-chip parameters — once per workload.
-        matrix = summarize_matrix_ops(wl, base_hw)
-        for z in zipfs:
+    if shard_plan is not None:
+        out.sharded = True
+        out.device_count = shard_plan.distinct_devices
+    entries: List[Optional[SweepEntry]] = [None] * num_entries
+    matrix_memo: Dict[int, object] = {}
+    try:
+        for sl in slices:
+            wl, z = sl.workload, sl.zipf_s
+            # Matrix side ignores the swept on-chip parameters — once per
+            # workload.
+            matrix = matrix_memo.get(id(wl))
+            if matrix is None:
+                matrix = matrix_memo[id(wl)] = summarize_matrix_ops(wl, base_hw)
             # Traces depend only on (workload, seed, zipf) — shared across
             # every grid point below.
             etraces = build_embedding_traces(wl, index_trace, seed, z)
-            # Grid points that agree on every parameter the policy actually
-            # reads (MemoryPolicy.sensitive_params) plus the cluster shape
-            # produce byte-identical embedding stats — e.g. single-core SPM
-            # is capacity/ways-invariant, PINNING ways-invariant — so
-            # classification + DRAM run once per key.
+            grid, pending = _build_grid(base_hw, sl.combos, etraces)
+            out.distinct_memo_keys += len(pending)
+
+            # Restore journaled keys; only the remainder is (re)evaluated.
             stats_memo: Dict[tuple, list] = {}
-            grid = []
-            pending: Dict[tuple, tuple] = {}    # key -> (ms, class_key)
-            class_systems: Dict[tuple, object] = {}  # class_key -> system
-            # Placement-collapse preconditions for this (workload, zipf)
-            # slice: a single rank and a single table make the table_rank
-            # transform provably equal to plain interleave for EVERY op
-            # (PlacementMap.effective_placement — the transform itself
-            # dispatches on the same rule, so the collapse is bitwise).
-            plc_collapses = (
-                base_hw.offchip.banks_per_channel == 1
-                and all(et.spec.num_tables == 1 for et in etraces)
-            )
-            for pol, cap, w, nc, topo, aff, plc in itertools.product(
-                pol_names, caps, ways_t, cores_t, topo_t, aff_t, plc_t
+            if ckpt is not None:
+                for key in pending:
+                    restored = ckpt.lookup(sl.slice_id, key)
+                    if restored is not None:
+                        stats_memo[key] = restored
+                out.resumed_keys += len(stats_memo)
+            todo = {k: v for k, v in pending.items() if k not in stats_memo}
+
+            if shard_plan is not None and todo:
+                _prewarm_traces(etraces, base_hw, sl.combos)
+            cadence = ckpt.cadence if ckpt is not None else None
+            for round_items in _chunks(todo, cadence):
+                if shard_plan is not None and len(round_items) > 1:
+                    from ..distributed.sweep_shard import evaluate_sharded
+                    results = evaluate_sharded(
+                        round_items, shard_plan,
+                        lambda sub: _evaluate_keys(
+                            etraces, sub, batch_scans, batch_dram
+                        ),
+                    )
+                else:
+                    results = _evaluate_keys(
+                        etraces, round_items, batch_scans, batch_dram
+                    )
+                stats_memo.update(results)
+                if ckpt is not None:
+                    ckpt.record(sl.slice_id, results)
+
+            for idx, (pol, cap, w, nc, topo, aff, plc, hw, key) in zip(
+                sl.indices, grid
             ):
-                hw = base_hw.with_policy(
-                    OnChipPolicy(pol), capacity_bytes=cap, ways=w
-                ).with_cluster(nc, topo).with_placement(aff, plc)
-                ms = memory_system_for(hw)
-                # The memo key splits into the placement-INVARIANT class key
-                # (classification + stats assembly never read the NUMA axes)
-                # plus the canonicalized placement axes. Classification runs
-                # once per class key; DRAM timing once per full key.
-                class_key = (pol, nc, topo, hw.lookup_sharding.value,
-                             hw.onchip.policy_mix)
-                class_key += tuple(
-                    getattr(hw.onchip, p) for p in ms.policy.sensitive_params
-                )
-                if ms.policy.uses_cache_engine:
-                    # Backends are bit-exact, but memoization must not hand a
-                    # "pallas" grid point stats computed by "scan" — the knob
-                    # is part of what the config requests.
-                    class_key += (hw.cache_backend,)
-                if hw.onchip.policy_mix:
-                    # Mix groups may read parameters the default policy does
-                    # not (e.g. pinned tables under an SPM default).
-                    class_key += (cap, w)
-                # Canonicalize the placement axes: with one core every
-                # affinity collapses to a single channel group, and a
-                # degenerate table_rank collapses to interleave — keying
-                # such points apart would re-time provably identical DRAM
-                # traffic (e.g. the base-grid entry).
-                key_aff = "symmetric" if nc == 1 else aff
-                key_plc = plc
-                if key_plc == "table_rank" and plc_collapses:
-                    key_plc = "interleave"
-                key = class_key + (key_aff, key_plc)
-                grid.append((pol, cap, w, nc, topo, aff, plc, hw, key))
-                if key not in pending:
-                    pending[key] = (ms, class_key)
-                    class_systems.setdefault(class_key, ms)
-
-            # Batched classification: distinct single-core cache-engine class
-            # keys of ONE policy share a vmapped dispatch per scan shape —
-            # and, under the stack backend, one analytic pass per
-            # (stream, num_sets) (classify_embedding_many); everything else
-            # classifies per class key. DRAM timing is deferred throughout.
-            classified: Dict[tuple, list] = {}  # class_key -> per-etrace
-            by_policy: Dict[str, list] = {}
-            for ck, ms in class_systems.items():
-                if (
-                    batch_scans
-                    and isinstance(ms, MemorySystem)
-                    and ms.policy.uses_cache_engine
-                    and not ms.hw.onchip.policy_mix
-                ):
-                    by_policy.setdefault(ms.policy.name, []).append((ck, ms))
-            for batch in by_policy.values():
-                if len(batch) < 2:
-                    continue
-                cks = [k for k, _ in batch]
-                systems = [m for _, m in batch]
-                per_ck = [[] for _ in systems]
-                for et in etraces:
-                    for i, cs in enumerate(
-                        classify_embedding_many(systems, et)
-                    ):
-                        per_ck[i].append(cs)
-                for ck, css in zip(cks, per_ck):
-                    classified[ck] = css
-            for ck, ms in class_systems.items():
-                if ck not in classified:
-                    classified[ck] = [
-                        ms.classify_for_pending(et) for et in etraces
-                    ]
-
-            # Placement fan-out: every full key packages ITS OWN placement
-            # transform of the shared classification into a deferred DRAM
-            # request — so placement siblings ride the same size-bucketed
-            # dram_timing_many dispatch as the base grid.
-            prepared: Dict[tuple, list] = {
-                key: [
-                    ms.pending_from(et, cl)
-                    for et, cl in zip(etraces, classified[ck])
-                ]
-                for key, (ms, ck) in pending.items()
-            }
-
-            # Cross-memo-key DRAM batching: every deferred miss-trace dispatch
-            # of this (workload, zipf) slice — all policies, geometries, and
-            # cluster shapes — runs through ONE dram_timing_many call.
-            # Per-request results are bitwise identical to unbatched dispatch
-            # (batch_dram=False is that reference path; test-enforced).
-            key_order = list(prepared)
-            all_pending = [p for k in key_order for p in prepared[k]]
-            outs = iter(dram_timing_many(
-                [p.request for p in all_pending], batch=batch_dram
-            ))
-            for k in key_order:
-                stats_memo[k] = [p.finalize(*next(outs)) for p in prepared[k]]
-
-            for pol, cap, w, nc, topo, aff, plc, hw, key in grid:
                 res = assemble_result(
                     wl, hw, matrix, stats_memo[key], energy_table
                 )
-                out.entries.append(SweepEntry(
+                entries[idx] = SweepEntry(
                     config=SweepConfig(
                         policy=pol,
                         capacity_bytes=cap,
@@ -387,6 +696,37 @@ def sweep(
                         placement=plc,
                     ),
                     result=res,
-                ))
+                    memo_key=sl.slice_id + key,
+                )
+        out.entries = [e for e in entries if e is not None]
+        if ckpt is not None:
+            ckpt.mark_complete(len(out.entries))
+    finally:
+        if ckpt is not None and not isinstance(checkpoint, SweepCheckpoint):
+            ckpt.close()
     out.wall_seconds = time.perf_counter() - t0
     return out
+
+
+def _fingerprint(wls, base_hw, seed, slices, index_trace, energy_table) -> Dict:
+    """Everything that determines sweep RESULTS (not how they are computed:
+    batching, sharding, and cadence are bit-exact and excluded) — a resumed
+    checkpoint must match it exactly."""
+    import hashlib
+
+    it_digest = None
+    if index_trace is not None:
+        it_digest = hashlib.sha256(
+            np.ascontiguousarray(index_trace).tobytes()
+        ).hexdigest()
+    return {
+        "workloads": sorted(repr(wl) for wl in wls),
+        "base_hw": repr(base_hw),
+        "seed": int(seed),
+        "slices": [
+            [sl.slice_id[0], sl.slice_id[1], sorted(map(list, set(sl.combos)))]
+            for sl in slices
+        ],
+        "index_trace": it_digest,
+        "energy_table": repr(energy_table),
+    }

@@ -23,16 +23,20 @@ from jax.sharding import Mesh, PartitionSpec as P
 
 # jax >= 0.6 exposes shard_map at the top level (replication check spelled
 # `check_vma`); older releases keep it in jax.experimental with `check_rep`.
+# Exported as ``shard_map_compat`` so other distributed layers (the sharded
+# DSE sweep's cross-device gather) reuse ONE version shim.
 if hasattr(jax, "shard_map"):
-    def _shard_map(body, mesh, in_specs, out_specs):
+    def shard_map_compat(body, mesh, in_specs, out_specs):
         return jax.shard_map(body, mesh=mesh, in_specs=in_specs,
                              out_specs=out_specs, check_vma=False)
 else:
     from jax.experimental.shard_map import shard_map as _experimental_shard_map
 
-    def _shard_map(body, mesh, in_specs, out_specs):
+    def shard_map_compat(body, mesh, in_specs, out_specs):
         return _experimental_shard_map(body, mesh=mesh, in_specs=in_specs,
                                        out_specs=out_specs, check_rep=False)
+
+_shard_map = shard_map_compat    # internal alias (tests patch/import this)
 
 
 def _own_chunk(x_loc, w_loc, c, n_chunks):

@@ -1,0 +1,171 @@
+"""Device sharding for the DSE sweep's memo-key space.
+
+The sweep engine reduces a config grid to a set of memo keys (distinct
+classification + DRAM-timing evaluations). Those keys are embarrassingly
+parallel — every batching layer underneath (`classify_embedding_many`, the
+stack/rrip analytic passes, ``dram_timing_many``) is bit-exact regardless of
+batch composition — so scaling out is a pure partitioning problem:
+
+  * **Partition by class-key group**, not by key: placement siblings share
+    ONE classification with their class key, so splitting a group across
+    shards would re-classify it per shard. Whole groups round-robin across
+    shards by size (largest first) for balance, deterministically.
+  * **One worker thread per shard**, each evaluating its key subset through
+    the regular engine with jit dispatch pinned to its device via
+    ``jax.default_device`` (thread-local in jax, so shards target distinct
+    devices concurrently; the GIL releases inside XLA executions). The
+    per-shard stats dicts merge back into the single memo table — bitwise
+    identical to the unsharded pass, differential-enforced.
+  * **Cross-device gather check** through the ``shard_map_compat`` version
+    shim (the same one the collective matmul uses): each shard contributes
+    its key count on its mesh position and a psum must see every shard —
+    a cheap end-to-end assertion that the mesh actually spans the devices
+    the plan claims (validated on CPU CI under
+    ``XLA_FLAGS=--xla_force_host_platform_device_count=8``).
+
+``sweep(devices=8)`` is the user surface; this module only plans and
+executes the partition.
+"""
+from __future__ import annotations
+
+import itertools
+from concurrent.futures import ThreadPoolExecutor
+from dataclasses import dataclass
+from typing import Callable, Dict, List, Sequence
+
+import jax
+import numpy as np
+
+from .collective_matmul import shard_map_compat
+
+__all__ = [
+    "ShardPlan",
+    "resolve_shard_plan",
+    "partition_by_class_key",
+    "evaluate_sharded",
+    "shard_key_totals",
+]
+
+
+@dataclass(frozen=True)
+class ShardPlan:
+    """How to split one evaluation round: ``devices[i]`` hosts shard i."""
+
+    devices: tuple            # one jax.Device per shard (may repeat)
+
+    @property
+    def num_shards(self) -> int:
+        return len(self.devices)
+
+    @property
+    def distinct_devices(self) -> int:
+        return len({id(d) for d in self.devices})
+
+
+def resolve_shard_plan(devices) -> ShardPlan:
+    """``devices`` as an int takes that many shards cycled over the local
+    jax devices (oversubscribing when fewer exist — still bit-exact, just
+    less parallel); a device sequence pins one shard per device."""
+    if isinstance(devices, int):
+        if devices < 1:
+            raise ValueError(f"need >= 1 shard, got {devices}")
+        local = jax.devices()
+        devs = tuple(itertools.islice(itertools.cycle(local), devices))
+    else:
+        devs = tuple(devices)
+        if not devs:
+            raise ValueError("empty device sequence")
+    return ShardPlan(devices=devs)
+
+
+def partition_by_class_key(
+    items: Dict[tuple, tuple], num_shards: int
+) -> List[Dict[tuple, tuple]]:
+    """Split ``{key: (ms, class_key)}`` into per-shard dicts, keeping every
+    class-key group whole (placement siblings share one classification) and
+    balancing by group size, largest first. Deterministic in the input
+    order, so resumed/re-run sweeps partition identically."""
+    groups: Dict[tuple, List[tuple]] = {}
+    for key, (_, ck) in items.items():
+        groups.setdefault(ck, []).append(key)
+    # Stable balance: largest groups first (ties keep insertion order), each
+    # onto the currently lightest shard (ties -> lowest index).
+    order = sorted(groups, key=lambda ck: -len(groups[ck]))
+    loads = [0] * num_shards
+    parts: List[Dict[tuple, tuple]] = [dict() for _ in range(num_shards)]
+    for ck in order:
+        i = loads.index(min(loads))
+        for key in groups[ck]:
+            parts[i][key] = items[key]
+        loads[i] += len(groups[ck])
+    return parts
+
+
+def evaluate_sharded(
+    items: Dict[tuple, tuple],
+    plan: ShardPlan,
+    eval_fn: Callable[[Dict[tuple, tuple]], Dict[tuple, list]],
+) -> Dict[tuple, list]:
+    """Partition ``items``, evaluate each shard on its device concurrently,
+    and merge the per-key stats back (original key order preserved)."""
+    parts = partition_by_class_key(items, plan.num_shards)
+
+    def run(part, dev):
+        if not part:
+            return {}
+        with jax.default_device(dev):
+            return eval_fn(part)
+
+    with ThreadPoolExecutor(max_workers=plan.num_shards) as pool:
+        shard_results = list(pool.map(run, parts, plan.devices))
+
+    # Cross-device participation check: every shard's key count must arrive
+    # in the psum-ed total. Cheap, and it exercises the real collective
+    # (shard_map over the plan's device mesh) rather than trusting the
+    # thread pool.
+    counts = [len(p) for p in parts]
+    total = shard_key_totals(counts, plan)
+    if total != len(items):
+        raise RuntimeError(
+            f"sharded gather dropped keys: psum saw {total}, "
+            f"expected {len(items)}"
+        )
+
+    merged: Dict[tuple, list] = {}
+    for res in shard_results:
+        merged.update(res)
+    return {k: merged[k] for k in items}
+
+
+def shard_key_totals(counts: Sequence[int], plan: ShardPlan) -> int:
+    """psum the per-shard key counts across the plan's devices through the
+    ``shard_map_compat`` shim. With repeated devices (oversubscribed
+    shards) the mesh would alias, so the collective runs over the distinct
+    device set with per-device subtotals — the returned total is the same
+    either way."""
+    # Fold shard counts onto their distinct devices (a mesh needs unique
+    # devices; oversubscribed plans stack their counts per device).
+    dev_ids: Dict[int, int] = {}
+    dev_list = []
+    per_dev: List[int] = []
+    for dev, n in zip(plan.devices, counts):
+        i = dev_ids.get(id(dev))
+        if i is None:
+            i = dev_ids[id(dev)] = len(dev_list)
+            dev_list.append(dev)
+            per_dev.append(0)
+        per_dev[i] += int(n)
+    if len(dev_list) < 2:
+        return int(sum(per_dev))
+
+    from jax.sharding import Mesh, PartitionSpec as P
+
+    mesh = Mesh(np.array(dev_list, dtype=object), ("shard",))
+
+    def body(x):
+        return jax.lax.psum(x, "shard")
+
+    fn = shard_map_compat(body, mesh, in_specs=P("shard"), out_specs=P())
+    arr = np.asarray(per_dev, dtype=np.int64)
+    # body returns the (1,)-shaped replicated total per device.
+    return int(np.asarray(fn(arr)).ravel()[0])

@@ -1,0 +1,320 @@
+"""Scaling layer of the DSE engine: explicit config lists, device-sharded
+evaluation, checkpointed kill-and-resume, degenerate memo-key collapses, and
+the successive-halving Pareto search — every path bitwise identical to the
+plain single-pass sweep (the differential comparator enforces it)."""
+import json
+import os
+import zlib
+
+import pytest
+
+from differential import assert_bitwise_equal_results
+from repro.core import (
+    OnChipPolicy,
+    SweepCheckpoint,
+    dlrm_rmc2_small,
+    grid_configs,
+    search,
+    simulate,
+    sweep,
+    tpuv6e,
+)
+from repro.core.search import nondominated_ranks, pareto_front
+from repro.core.sweep_ckpt import fingerprint_digest
+
+POLICIES = ("spm", "lru", "srrip", "pinning")
+CAPACITIES = (1 << 16, 1 << 17, 1 << 18)
+WAYS = (4, 8)
+GRID = dict(policies=POLICIES, capacities=CAPACITIES, ways=WAYS,
+            zipf_s=0.9, seed=0)
+
+
+@pytest.fixture(scope="module")
+def small_wl():
+    return dlrm_rmc2_small(num_tables=2, rows_per_table=2000, dim=128,
+                           lookups=4, batch_size=8, num_batches=2)
+
+
+@pytest.fixture(scope="module")
+def grid_result(small_wl):
+    return sweep(small_wl, tpuv6e(), **GRID)
+
+
+# --------------------------------------------------------------------------
+# Explicit config lists
+# --------------------------------------------------------------------------
+
+def test_grid_configs_matches_axes_sweep(grid_result, small_wl):
+    """sweep(configs=grid_configs(...)) must be the axes sweep, bitwise and
+    in the same entry order."""
+    cfgs = grid_configs(small_wl, tpuv6e(), policies=POLICIES,
+                        capacities=CAPACITIES, ways=WAYS, zipf_s=0.9)
+    assert [e.config for e in grid_result.entries] == cfgs
+    got = sweep(small_wl, tpuv6e(), configs=cfgs, seed=0)
+    assert_bitwise_equal_results(grid_result, got, "configs= path")
+
+
+def test_configs_subset_and_order_preserved(grid_result, small_wl):
+    """An arbitrary subset keeps ITS order and each entry stays bitwise
+    equal to the corresponding full-grid entry."""
+    picks = [grid_result.entries[i] for i in (17, 3, 11, 3, 0)]
+    got = sweep(small_wl, tpuv6e(), configs=[e.config for e in picks], seed=0)
+    assert [e.config for e in got.entries] == [e.config for e in picks]
+    for want, have in zip(picks, got.entries):
+        assert not want.result.diff(have.result), want.config.label
+
+
+def test_configs_unknown_workload_rejected(small_wl):
+    cfgs = grid_configs(small_wl, tpuv6e(), policies=("spm",), zipf_s=0.9)
+    bad = [c.__class__(**{**c.__dict__, "workload": "nope"}) for c in cfgs]
+    with pytest.raises(ValueError, match="unknown workload"):
+        sweep(small_wl, tpuv6e(), configs=bad, seed=0)
+
+
+# --------------------------------------------------------------------------
+# Degenerate memo-key collapses (satellite: canonicalization)
+# --------------------------------------------------------------------------
+
+def test_spm_collapses_to_one_memo_key(small_wl):
+    """SPM reads neither capacity nor ways: the whole spm sub-grid is ONE
+    memo key, and the collapse is observable + bitwise vs simulate()."""
+    sr = sweep(small_wl, tpuv6e(), policies=("spm",), capacities=CAPACITIES,
+               ways=WAYS, zipf_s=0.9, seed=0)
+    assert sr.num_configs == len(CAPACITIES) * len(WAYS)
+    assert sr.distinct_memo_keys == 1
+    assert len({e.memo_key for e in sr.entries}) == 1
+    ref = simulate(small_wl, tpuv6e().with_policy(OnChipPolicy("spm")),
+                   seed=0, zipf_s=0.9)
+    for e in sr.entries:
+        assert not e.result.diff(ref), e.config.label
+
+
+def test_pinning_capacity_saturation_collapse(small_wl):
+    """Capacities at/above the slice's line footprint pin EVERY line —
+    provably identical classification — so they share one canonical memo
+    key, and every entry stays bitwise vs independent simulate()."""
+    caps = (1 << 12, 4 << 20, 16 << 20)     # tiny + two saturating
+    sr = sweep(small_wl, tpuv6e(), policies=("pinning",), capacities=caps,
+               ways=(4, 8), zipf_s=0.9, seed=0)
+    # ways always collapse for pinning (sensitive_params); the two big
+    # capacities collapse onto the saturation marker: 2 keys, not 3 (or 6).
+    assert sr.distinct_memo_keys == 2
+    sat_keys = {e.memo_key for e in sr.entries
+                if e.config.capacity_bytes >= (4 << 20)}
+    assert len(sat_keys) == 1
+    assert any("cap_saturated" in k for k in sat_keys)
+    for e in sr.entries:
+        c = e.config
+        hw = tpuv6e().with_policy(OnChipPolicy("pinning"),
+                                  capacity_bytes=c.capacity_bytes, ways=c.ways)
+        ref = simulate(small_wl, hw, seed=0, zipf_s=0.9)
+        assert not e.result.diff(ref), c.label
+
+
+def test_saturation_not_applied_below_footprint(small_wl):
+    """A capacity below the footprint must NOT collapse (the pinned top-K
+    differs per capacity)."""
+    sr = sweep(small_wl, tpuv6e(), policies=("pinning",),
+               capacities=(1 << 12, 1 << 13), ways=(4,), zipf_s=0.9, seed=0)
+    assert sr.distinct_memo_keys == 2
+
+
+# --------------------------------------------------------------------------
+# Sharded evaluation (multi-shard on however many devices this host has;
+# the 8-device run lives in the dse-scale CI job / scripts/dse_scale_smoke)
+# --------------------------------------------------------------------------
+
+def test_sharded_sweep_bitwise_equal(grid_result, small_wl):
+    got = sweep(small_wl, tpuv6e(), devices=4, **GRID)
+    assert got.sharded and got.device_count >= 1
+    assert_bitwise_equal_results(grid_result, got, "sharded")
+
+
+def test_shard_partition_keeps_class_groups_whole():
+    from repro.distributed.sweep_shard import partition_by_class_key
+
+    items = {("k", i, p): (None, ("ck", i % 3)) for i in range(9)
+             for p in ("a", "b")}
+    parts = partition_by_class_key(items, 4)
+    assert sum(len(p) for p in parts) == len(items)
+    for ck in range(3):
+        owners = [i for i, p in enumerate(parts)
+                  if any(v[1] == ("ck", ck) for v in p.values())]
+        assert len(owners) == 1, f"class group {ck} split across {owners}"
+    # Deterministic: same input -> same partition.
+    assert parts == partition_by_class_key(dict(items), 4)
+
+
+# --------------------------------------------------------------------------
+# Checkpointed resumability (+ corruption satellite)
+# --------------------------------------------------------------------------
+
+def _ckpt_grid(wl, hw, path, cadence=2, **extra):
+    return sweep(wl, hw, checkpoint=SweepCheckpoint(path, cadence=cadence)
+                 if cadence else path, **GRID, **extra)
+
+
+def test_checkpoint_resume_bitwise(grid_result, small_wl, tmp_path):
+    p = str(tmp_path / "sweep.ckpt")
+    first = _ckpt_grid(small_wl, tpuv6e(), p)
+    assert_bitwise_equal_results(grid_result, first, "checkpointed run")
+    resumed = _ckpt_grid(small_wl, tpuv6e(), p)
+    assert resumed.resumed_keys == resumed.distinct_memo_keys
+    assert_bitwise_equal_results(grid_result, resumed, "resumed run")
+
+
+class _KillAfter(SweepCheckpoint):
+    """Simulated preemption: die after N journal rounds (the journaled
+    rounds are already on disk, exactly like a SIGKILL between rounds)."""
+
+    def __init__(self, path, cadence, rounds):
+        super().__init__(path, cadence=cadence)
+        self._rounds = rounds
+
+    def record(self, slice_id, results):
+        if self._rounds <= 0:
+            raise KeyboardInterrupt("simulated preemption")
+        self._rounds -= 1
+        super().record(slice_id, results)
+
+
+def test_kill_and_resume_bitwise(grid_result, small_wl, tmp_path):
+    """Acceptance criterion: a sweep killed mid-run resumes to a bitwise-
+    identical SweepResult, re-evaluating only the unfinished keys."""
+    p = str(tmp_path / "killed.ckpt")
+    ck = _KillAfter(p, cadence=2, rounds=2)
+    with pytest.raises(KeyboardInterrupt):
+        sweep(small_wl, tpuv6e(), checkpoint=ck, **GRID)
+    ck.close()
+    resumed = sweep(small_wl, tpuv6e(), checkpoint=p, **GRID)
+    assert 0 < resumed.resumed_keys < resumed.distinct_memo_keys
+    assert_bitwise_equal_results(grid_result, resumed, "kill+resume")
+
+
+def test_truncated_journal_line_reevaluated(grid_result, small_wl, tmp_path):
+    """Satellite: a torn tail (partial write at kill time) must be detected
+    and its keys re-evaluated — never silently skipped or half-restored."""
+    p = str(tmp_path / "torn.ckpt")
+    sweep(small_wl, tpuv6e(), checkpoint=p, **GRID)
+    raw = open(p, "rb").read()
+    lines = raw.splitlines(keepends=True)
+    assert len(lines) >= 4
+    torn = b"".join(lines[:-2]) + lines[-2][: len(lines[-2]) // 2]
+    open(p, "wb").write(torn)
+    resumed = sweep(small_wl, tpuv6e(), checkpoint=p, **GRID)
+    # The torn key (+ the dropped complete record's key, if any) re-ran.
+    assert resumed.resumed_keys < resumed.distinct_memo_keys
+    assert_bitwise_equal_results(grid_result, resumed, "torn-tail resume")
+    # The rewritten journal is valid again: full restore on the next open.
+    again = sweep(small_wl, tpuv6e(), checkpoint=p, **GRID)
+    assert again.resumed_keys == again.distinct_memo_keys
+
+
+def test_corrupt_crc_line_truncates_tail(grid_result, small_wl, tmp_path):
+    """Bit-rot inside a line (CRC mismatch) drops that line AND everything
+    after it — journal replay must never resync past a corrupt record."""
+    p = str(tmp_path / "crc.ckpt")
+    sweep(small_wl, tpuv6e(), checkpoint=p, **GRID)
+    lines = open(p, "rb").read().splitlines(keepends=True)
+    mid = len(lines) // 2
+    corrupted = bytearray(lines[mid])
+    corrupted[10] ^= 0xFF
+    open(p, "wb").write(b"".join(lines[:mid]) + bytes(corrupted)
+                        + b"".join(lines[mid + 1:]))
+    resumed = sweep(small_wl, tpuv6e(), checkpoint=p, **GRID)
+    assert resumed.resumed_keys <= mid - 1   # header + keys before the flip
+    assert_bitwise_equal_results(grid_result, resumed, "crc-corrupt resume")
+
+
+def test_fingerprint_mismatch_raises(small_wl, tmp_path):
+    """Resuming against a different sweep spec must refuse, not mix stats."""
+    p = str(tmp_path / "fp.ckpt")
+    sweep(small_wl, tpuv6e(), checkpoint=p, **GRID)
+    with pytest.raises(ValueError, match="fingerprint mismatch"):
+        sweep(small_wl, tpuv6e(), checkpoint=p,
+              **{**GRID, "seed": 1})
+
+
+def test_checkpoint_frame_roundtrip():
+    rec = {"kind": "key", "k": "x", "stats": [[{"cycles": 1.25}]]}
+    framed = SweepCheckpoint._frame(rec)
+    assert SweepCheckpoint._parse_line(framed) == rec
+    assert SweepCheckpoint._parse_line(framed[:-1]) is None     # no newline
+    bad = bytearray(framed)
+    bad[2] ^= 0x01
+    assert SweepCheckpoint._parse_line(bytes(bad)) is None      # CRC catches
+    assert zlib.crc32(b"") == 0         # sanity: zlib present on this runner
+
+
+def test_fingerprint_digest_stable():
+    d1 = fingerprint_digest({"a": (1, 2), "b": "x"})
+    d2 = fingerprint_digest({"b": "x", "a": [1, 2]})
+    assert d1 == d2                      # order/tuple-vs-list canonicalized
+    assert d1 != fingerprint_digest({"a": (1, 3), "b": "x"})
+
+
+# --------------------------------------------------------------------------
+# Pareto search
+# --------------------------------------------------------------------------
+
+def test_nondominated_ranks():
+    pts = [(1.0, 5.0), (2.0, 2.0), (5.0, 1.0),    # rank 0 (frontier)
+           (2.0, 6.0), (3.0, 3.0),                # rank 1
+           (4.0, 7.0)]                            # rank 2
+    assert nondominated_ranks(pts) == [0, 0, 0, 1, 1, 2]
+
+
+def test_pareto_front_keeps_ties(grid_result):
+    front = pareto_front(grid_result.entries)
+    pts = {(e.result.summary()["total_cycles"], e.result.summary()["energy_pj"])
+           for e in front}
+    # Every entry with a frontier value is ON the front (ties included).
+    for e in grid_result.entries:
+        s = e.result.summary()
+        if (s["total_cycles"], s["energy_pj"]) in pts:
+            assert e in front
+
+
+def test_search_recovers_exact_front_within_budget(grid_result, small_wl):
+    """Acceptance criterion on the 24-config reference grid shape: the
+    driver's front equals the exhaustive front exactly (same configs, same
+    bits) within <=50% of the exhaustive full-fidelity evaluations."""
+    assert grid_result.num_configs == 24
+    res = search(small_wl, tpuv6e(), policies=POLICIES,
+                 capacities=CAPACITIES, ways=WAYS, zipf_s=0.9, seed=0)
+    exhaustive = pareto_front(grid_result.entries)
+    assert res.front_labels() == sorted(e.config.label for e in exhaustive)
+    by_cfg = {e.config: e for e in grid_result.entries}
+    for e in res.pareto:
+        assert not e.result.diff(by_cfg[e.config].result), e.config.label
+    assert res.full_evals <= 0.5 * grid_result.distinct_memo_keys, (
+        res.full_evals, grid_result.distinct_memo_keys)
+    # Survivors' full-fidelity entries are the exhaustive entries, bitwise.
+    for e in res.population:
+        assert not e.result.diff(by_cfg[e.config].result), e.config.label
+
+
+def test_search_checkpointed_rungs_resume(small_wl, tmp_path):
+    d = str(tmp_path / "rungs")
+    res1 = search(small_wl, tpuv6e(), policies=POLICIES,
+                  capacities=CAPACITIES, ways=WAYS, zipf_s=0.9, seed=0,
+                  checkpoint_dir=d)
+    assert os.path.isdir(d) and os.listdir(d)
+    res2 = search(small_wl, tpuv6e(), policies=POLICIES,
+                  capacities=CAPACITIES, ways=WAYS, zipf_s=0.9, seed=0,
+                  checkpoint_dir=d)
+    assert res1.front_labels() == res2.front_labels()
+    for a, b in zip(res1.population, res2.population):
+        assert a.config == b.config and not a.result.diff(b.result)
+
+
+# --------------------------------------------------------------------------
+# Result metadata
+# --------------------------------------------------------------------------
+
+def test_result_metadata_in_json(grid_result):
+    payload = json.loads(grid_result.to_json())
+    assert payload["device_count"] == 1
+    assert payload["sharded"] is False
+    assert payload["distinct_memo_keys"] == grid_result.distinct_memo_keys
+    assert payload["resumed_keys"] == 0
