@@ -157,6 +157,10 @@ def run(profile: bool = False) -> List[Dict]:
         "bitexact_sample": len(sample),
         "best_config": best.config.label,
         "best_total_cycles": best.result.total_cycles,
+        # Failure telemetry (core.faults): all-zero on this fault-free run —
+        # nonzero counters in a perf trajectory mean the runner degraded
+        # (retries/failovers) and its walls are not comparable.
+        "fault_telemetry": sr.telemetry.brief(),
     }
     if profile:
         breakdown = prof.breakdown(total_seconds=profiled_wall)
@@ -190,7 +194,11 @@ def sharded_probe() -> Dict:
         assert a.config == b.config
         mism = a.result.diff(b.result)
         assert not mism, (a.config.label, mism)
+    # The probe runs fault-free: any retry/failover here is a bug in the
+    # supervision layer, not runner noise.
+    assert not sh.telemetry.any_faults, sh.telemetry.to_dict()
     return {
+        "sharded_fault_telemetry": sh.telemetry.brief(),
         "sharded_configs": sh.num_configs,
         "sharded_distinct_memo_keys": sh.distinct_memo_keys,
         "sharded_device_count": sh.device_count,

@@ -1,0 +1,130 @@
+"""Chaos CI smoke: the sharded sweep under an injected fault schedule.
+
+Launch under ``XLA_FLAGS=--xla_force_host_platform_device_count=8`` (the
+chaos CI job does). One checkpointed sweep is hit with every fault kind the
+harness schedules — a double transient (retried in place), a worker crash
+(failed over), a hung shard (watchdog-abandoned, failed over) and a torn
+journal append (process "dies" mid-write) — then resumed, and the final
+result must be **bitwise identical** to the fault-free sweep through
+``tests/differential.py``'s exact comparator. Fault telemetry is written to
+``--out-dir`` (default results/chaos) on every run, pass or fail, so a CI
+failure uploads the counters that explain it.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+
+_REPO_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+sys.path.insert(0, os.path.join(_REPO_ROOT, "tests"))   # differential.py
+
+import jax                                              # noqa: E402
+
+from differential import assert_bitwise_equal_results   # noqa: E402
+from repro.core import (                                # noqa: E402
+    FaultEvent,
+    FaultPlan,
+    FaultTelemetry,
+    FaultTolerance,
+    SweepCheckpoint,
+    dlrm_rmc2_small,
+    sweep,
+    tpuv6e,
+)
+from repro.core.faults import InjectedKill              # noqa: E402
+
+GRID = dict(policies=("spm", "lru", "srrip", "pinning"),
+            capacities=(1 << 16, 1 << 17, 1 << 18), ways=(4, 8),
+            zipf_s=0.9, seed=0)
+SHARDS = 4
+CADENCE = 8          # 14 memo keys -> 2 evaluation rounds
+# Generous vs the warm per-wave evaluation time: a too-tight bound marks
+# legitimately-busy shards hung (bitwise-safe but noisy on slow runners).
+HANG_TIMEOUT_S = 15.0
+
+# The full schedule: every fault kind, across both rounds. Round 1 both
+# hangs a shard AND tears the journal append, so the resume starts from a
+# journal written mid-failover.
+PLAN = FaultPlan(events=(
+    FaultEvent("transient", shard=0, round=0, count=2),
+    FaultEvent("crash", shard=1, round=0),
+    FaultEvent("hang", shard=2, round=1),
+    FaultEvent("torn_write", round=1),
+))
+TOLERANCE = FaultTolerance(max_retries=2, backoff_base_s=0.02,
+                           shard_timeout_s=HANG_TIMEOUT_S)
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out-dir",
+                    default=os.path.join(_REPO_ROOT, "results", "chaos"))
+    args = ap.parse_args()
+    os.makedirs(args.out_dir, exist_ok=True)
+    tele_path = os.path.join(args.out_dir, "fault_telemetry.json")
+
+    ndev = len(jax.devices())
+    if ndev < 2:
+        print("chaos_smoke needs multiple devices — launch under "
+              "XLA_FLAGS=--xla_force_host_platform_device_count=8",
+              file=sys.stderr)
+        return 1
+
+    wl = dlrm_rmc2_small(num_tables=2, rows_per_table=2000, dim=128,
+                         lookups=4, batch_size=8, num_batches=2)
+    hw = tpuv6e()
+
+    ref = sweep(wl, hw, **GRID)
+    warm = sweep(wl, hw, devices=SHARDS, **GRID)   # compile per-device paths
+    assert_bitwise_equal_results(ref, warm, "fault-free sharded")
+
+    ckpt_path = os.path.join(args.out_dir, "chaos.ckpt")
+    if os.path.exists(ckpt_path):
+        os.unlink(ckpt_path)
+    tele = FaultTelemetry()
+    outcome = {"plan": [vars(e) for e in PLAN.events], "killed": False,
+               "bitwise_identical": False}
+    try:
+        ck = SweepCheckpoint(ckpt_path, cadence=CADENCE)
+        try:
+            sweep(wl, hw, devices=SHARDS, checkpoint=ck, fault_plan=PLAN,
+                  fault_tolerance=TOLERANCE, fault_telemetry=tele, **GRID)
+            raise AssertionError(
+                "the torn-write InjectedKill never fired — the schedule did "
+                "not reach round 1")
+        except InjectedKill:
+            outcome["killed"] = True
+        finally:
+            ck.close()
+
+        resumed = sweep(wl, hw, devices=SHARDS, checkpoint=ckpt_path, **GRID)
+        assert_bitwise_equal_results(ref, resumed, "chaos resume")
+        outcome["bitwise_identical"] = True
+        outcome["resumed_keys"] = resumed.resumed_keys
+        outcome["distinct_memo_keys"] = resumed.distinct_memo_keys
+
+        b = tele.brief()
+        assert b["retries"] == 2, b
+        assert b["worker_crashes"] == 1, b
+        assert b["hung_shards"] == 1, b
+        assert b["failovers"] == 2, b
+        assert b["torn_writes"] == 1, b
+        assert 0 < resumed.resumed_keys < resumed.distinct_memo_keys
+    finally:
+        # Telemetry lands on disk pass or fail — CI uploads it on failure.
+        outcome["fault_telemetry"] = tele.to_dict()
+        with open(tele_path, "w") as f:
+            json.dump(outcome, f, indent=2)
+
+    print(f"chaos smoke OK: transient x2 retried, 1 crash + 1 hang failed "
+          f"over, torn journal killed + resumed "
+          f"({resumed.resumed_keys}/{resumed.distinct_memo_keys} keys "
+          f"restored) — bitwise identical to the fault-free sweep; "
+          f"telemetry -> {tele_path}")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

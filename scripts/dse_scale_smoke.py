@@ -69,9 +69,14 @@ def main() -> int:
     sharded = sweep(wl, hw, devices=ndev, **GRID)
     assert sharded.sharded and sharded.device_count == ndev
     assert_bitwise_equal_results(ref, sharded, "sharded vs unsharded")
+    # The fault-free production path must report zero fault telemetry:
+    # spurious retries/failovers here are a supervision bug (and would make
+    # perf trajectories incomparable).
+    assert not sharded.telemetry.any_faults, sharded.telemetry.to_dict()
     print(f"sharded smoke OK: {ref.num_configs} configs "
           f"({ref.distinct_memo_keys} memo keys) on {ndev} host devices, "
-          "bitwise identical to the single-device sweep")
+          "bitwise identical to the single-device sweep, zero fault "
+          "telemetry")
 
     # 2. Kill-and-resume (sharded, journaled): preempt after 2 rounds, then
     #    resume — bitwise; then tear the journal tail and resume again.

@@ -18,7 +18,10 @@ sweep) so the 1.5x gate and the exactness checks cover the placement layer.
 The benchmark's placement-axes slice is additionally gated as a RATIO: its
 per-config wall must stay within 2x of the base grid's (both best-of-3), so
 the batched placement dispatch can't silently decay back toward the old
-per-config path.
+per-config path. A fault-tolerance overhead gate runs the base grid sharded
+under a fully armed ``FaultTolerance`` (retry budget + heartbeat watchdog,
+nothing firing) and asserts <5% extra wall vs the minimal policy — recovery
+machinery must be free when nothing fails.
 
 Usage:  PYTHONPATH=src python scripts/perf_smoke.py [--update-baseline]
 Baseline: benchmarks/perf_baseline.json (checked in; results/ is gitignored).
@@ -36,6 +39,7 @@ sys.path.insert(0, _REPO_ROOT)     # for the benchmarks package
 
 from benchmarks import dse_sweep as _bench          # noqa: E402
 from repro.core import (                            # noqa: E402
+    FaultTolerance,
     OnChipPolicy,
     dlrm_rmc2_small,
     profiling,
@@ -173,6 +177,49 @@ def sharded_smoke() -> None:
           f"({got.device_count} device) bit-exact vs unsharded")
 
 
+# Fault-tolerance overhead gate: a fully armed recovery policy (retry budget
+# + heartbeat watchdog polling, none of it firing) must cost <5% extra wall
+# on the fault-free base grid vs the minimal policy. The absolute floor
+# absorbs scheduler noise on sub-second walls without hiding a structural
+# cost (a busy watchdog would blow through both bounds).
+FAULT_OVERHEAD_FRAC = 0.05
+FAULT_OVERHEAD_FLOOR_S = 0.015
+
+
+def fault_overhead_smoke() -> None:
+    """The fault-tolerance wrapper must be ~free when nothing fails: the
+    base grid sharded under a fully armed ``FaultTolerance`` (watchdog
+    polling, retry budget live) stays within 5% of the minimal policy
+    (no retries, no watchdog). The unsharded 1.5x baseline gate in
+    ``measure()`` separately pins the headline per-config number."""
+    wl = dlrm_rmc2_small(num_tables=_bench.TABLES, rows_per_table=_bench.ROWS,
+                         batch_size=_bench.BATCH, num_batches=2)
+    hw = tpuv6e()
+    minimal = FaultTolerance(max_retries=0, shard_timeout_s=None)
+    armed = FaultTolerance(shard_timeout_s=30.0)   # armed, never fires
+
+    def timed(tol):
+        best = float("inf")
+        for _ in range(3):
+            sr = sweep(wl, hw, devices=2, fault_tolerance=tol, **GRID)
+            assert not sr.telemetry.any_faults, sr.telemetry.to_dict()
+            best = min(best, sr.wall_seconds)
+        return best
+
+    sweep(wl, hw, devices=2, **GRID)               # warm per-device compiles
+    base_s = timed(minimal)
+    armed_s = timed(armed)
+    limit = base_s * (1 + FAULT_OVERHEAD_FRAC) + FAULT_OVERHEAD_FLOOR_S
+    print(f"fault-tolerance overhead smoke: minimal={base_s * 1e3:.1f} ms "
+          f"armed={armed_s * 1e3:.1f} ms "
+          f"limit={limit * 1e3:.1f} ms (+{FAULT_OVERHEAD_FRAC:.0%} "
+          f"+ {FAULT_OVERHEAD_FLOOR_S * 1e3:.0f} ms floor)")
+    assert armed_s <= limit, (
+        f"fault-tolerance wrapper costs {armed_s - base_s:.3f}s on the "
+        f"fault-free base grid (>{FAULT_OVERHEAD_FRAC:.0%} + floor): the "
+        "watchdog/retry machinery is no longer free when idle")
+
+
 def main() -> int:
     ap = argparse.ArgumentParser(description=__doc__)
     ap.add_argument("--update-baseline", action="store_true",
@@ -182,6 +229,7 @@ def main() -> int:
     backend_smoke()
     placement_smoke()
     sharded_smoke()
+    fault_overhead_smoke()
     per_config_ms, num_configs, stages = measure()
     placement_ms, placement_configs = measure_placement()
     ratio = placement_ms / per_config_ms

@@ -24,6 +24,10 @@ Canonical stage names used by the memory pipeline:
   * ``host_sync``   — blocking device->host result extraction (np.asarray
                       of JAX arrays; the cost the device-resident pipeline
                       is designed to keep out of the inner loop)
+  * ``fault_wait``  — fault-tolerance stalls: retry backoff sleeps in the
+                      sharded sweep's workers (core.faults). Separated out
+                      so an injected-fault run's breakdown shows recovery
+                      overhead as waiting, not as inflated engine stages.
 """
 from __future__ import annotations
 

@@ -139,6 +139,8 @@ def search(
     zipf_s=0.8,
     devices=None,
     checkpoint_dir: Optional[str] = None,
+    fault_tolerance=None,
+    fault_plan=None,
     **grid_axes,
 ) -> SearchResult:
     """Find the exact Pareto front in ``objectives`` over the config grid.
@@ -150,6 +152,13 @@ def search(
     The front is exact for the survivors by construction (final rung runs
     full fidelity); recovery of the full grid's front is a property of the
     pruning schedule, enforced on the reference grid by tests.
+
+    ``fault_tolerance`` applies to every rung's sweep; rung-level recovery
+    composes with per-rung checkpoints — a crashed rung resumes from its
+    own journal, shard failures within a rung fail over and stay bitwise.
+    ``fault_plan`` (tests/chaos only) is handed to each rung's sweep with a
+    fresh injector, so its (shard, round) coordinates are *per rung*, not
+    global across the search.
     """
     base_hw = base_hw or tpuv6e()
     wls: List[Workload] = list(workloads) if isinstance(
@@ -171,6 +180,7 @@ def search(
         return sweep(
             _fidelity_workloads(wls, k), base_hw, configs=pop, seed=seed,
             devices=devices, checkpoint=ckpt,
+            fault_tolerance=fault_tolerance, fault_plan=fault_plan,
         )
 
     t0 = time.perf_counter()

@@ -103,6 +103,13 @@ from typing import Dict, List, Optional, Sequence, Tuple, Union
 import numpy as np
 
 from .energy import EnergyTable
+from .faults import (
+    FaultInjector,
+    FaultPlan,
+    FaultTelemetry,
+    FaultTolerance,
+    ShardEvaluationError,
+)
 from .engine import (
     assemble_result,
     build_embedding_traces,
@@ -179,6 +186,10 @@ class SweepResult:
     sharded: bool = False          # memo-key space partitioned across devices
     distinct_memo_keys: int = 0    # classification+DRAM evaluations performed
     resumed_keys: int = 0          # memo keys restored from a checkpoint
+    # How the sweep survived (or didn't need to survive) faults: retry /
+    # failover / degraded-device counters + per-shard wall/retry stats.
+    # All-zero on a fault-free run; never affects entries.
+    telemetry: FaultTelemetry = field(default_factory=FaultTelemetry)
 
     @property
     def num_configs(self) -> int:
@@ -225,6 +236,7 @@ class SweepResult:
             "sharded": self.sharded,
             "distinct_memo_keys": self.distinct_memo_keys,
             "resumed_keys": self.resumed_keys,
+            "fault_telemetry": self.telemetry.to_dict(),
             "rows": self.rows(),
         }
         text = json.dumps(payload, indent=2)
@@ -575,6 +587,9 @@ def sweep(
     configs: Optional[Sequence[SweepConfig]] = None,
     devices=None,
     checkpoint: Union[SweepCheckpoint, str, None] = None,
+    fault_tolerance: Optional[FaultTolerance] = None,
+    fault_plan: Optional[FaultPlan] = None,
+    fault_telemetry: Optional[FaultTelemetry] = None,
 ) -> SweepResult:
     """Evaluate the (workload x zipf x policy x capacity x ways x num_cores
     x topology x channel_affinity x placement) grid.
@@ -598,6 +613,17 @@ def sweep(
     restartable: memo keys journal in ``cadence``-sized rounds, a resumed
     sweep restores finished keys and is bitwise identical to an
     uninterrupted run.
+
+    ``fault_tolerance`` (default ``FaultTolerance()``) sets the recovery
+    policy for sharded execution: transient retries with seeded backoff,
+    the per-shard heartbeat watchdog (``shard_timeout_s``), and failover of
+    crashed/hung shards onto surviving devices — every recovery path
+    bitwise identical to the fault-free run (``strict=True`` raises
+    instead of degrading). ``fault_plan`` injects a deterministic fault
+    schedule (tests / chaos CI only — see ``core.faults``); ``fault_
+    telemetry`` supplies the counter sink (pass one in to read telemetry
+    even when the sweep raises), otherwise a fresh ``FaultTelemetry`` is
+    created. Either way the counters land on ``SweepResult.telemetry``.
     """
     base_hw = base_hw or tpuv6e()
     wls = _as_tuple(workloads, ())
@@ -614,20 +640,38 @@ def sweep(
         slices = _slices_from_axes(wls, zipfs, axes)
         num_entries = sum(len(s.combos) for s in slices)
 
+    shard_plan = None
+    if devices is not None:
+        from ..distributed.sweep_shard import resolve_shard_plan
+        shard_plan = resolve_shard_plan(devices)
+
+    tol = fault_tolerance if fault_tolerance is not None else FaultTolerance()
+    telemetry = (fault_telemetry if fault_telemetry is not None
+                 else FaultTelemetry())
+    injector: Optional[FaultInjector] = None
+    if fault_plan is not None:
+        if shard_plan is None and fault_plan.has_shard_events():
+            raise ValueError(
+                "fault_plan schedules shard events but the sweep is not "
+                "sharded — pass devices= so the plan's shard coordinates "
+                "mean something")
+        if fault_plan.has_kind("hang") and tol.shard_timeout_s is None:
+            raise ValueError(
+                "fault_plan injects hangs but no watchdog is armed — set "
+                "FaultTolerance.shard_timeout_s or the sweep deadlocks")
+        injector = FaultInjector(fault_plan, telemetry)
+
     ckpt: Optional[SweepCheckpoint] = None
     if checkpoint is not None:
         ckpt = (checkpoint if isinstance(checkpoint, SweepCheckpoint)
                 else SweepCheckpoint(checkpoint))
         ckpt.open(_fingerprint(wls, base_hw, seed, slices, index_trace,
                                energy_table))
-
-    shard_plan = None
-    if devices is not None:
-        from ..distributed.sweep_shard import resolve_shard_plan
-        shard_plan = resolve_shard_plan(devices)
+        ckpt.fault_injector = injector
 
     t0 = time.perf_counter()
     out = SweepResult()
+    out.telemetry = telemetry
     if shard_plan is not None:
         out.sharded = True
         out.device_count = shard_plan.distinct_devices
@@ -661,14 +705,32 @@ def sweep(
                 _prewarm_traces(etraces, base_hw, sl.combos)
             cadence = ckpt.cadence if ckpt is not None else None
             for round_items in _chunks(todo, cadence):
-                if shard_plan is not None and len(round_items) > 1:
+                if injector is not None:
+                    injector.begin_round()
+                # Single-key rounds normally skip sharding (thread overhead
+                # for nothing), but an armed injector forces the supervised
+                # path so (shard, round) coordinates stay meaningful.
+                if shard_plan is not None and (
+                    len(round_items) > 1 or injector is not None
+                ):
                     from ..distributed.sweep_shard import evaluate_sharded
-                    results = evaluate_sharded(
-                        round_items, shard_plan,
-                        lambda sub: _evaluate_keys(
-                            etraces, sub, batch_scans, batch_dram
-                        ),
-                    )
+                    try:
+                        results = evaluate_sharded(
+                            round_items, shard_plan,
+                            lambda sub: _evaluate_keys(
+                                etraces, sub, batch_scans, batch_dram
+                            ),
+                            tolerance=tol,
+                            injector=injector,
+                            telemetry=telemetry,
+                        )
+                    except ShardEvaluationError as exc:
+                        # Completed sibling-shard results are journaled
+                        # before the fatal error propagates, so a rerun
+                        # resumes past the surviving work.
+                        if ckpt is not None and exc.completed:
+                            ckpt.record(sl.slice_id, exc.completed)
+                        raise
                 else:
                     results = _evaluate_keys(
                         etraces, round_items, batch_scans, batch_dram

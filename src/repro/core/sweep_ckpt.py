@@ -25,6 +25,12 @@ which constrains the format:
     index trace, energy table — not the batching/sharding knobs, which are
     bit-exact). Resuming against a different sweep spec raises instead of
     mixing incompatible stats.
+  * **Concurrent-writer guard** — an append-only journal written by two
+    processes interleaves frames from different rounds and neither writer
+    knows. ``open()`` takes a PID lockfile (``<path>.lock``) and raises
+    ``CheckpointLockedError`` while another *live* process holds it; locks
+    left by dead processes (a killed sweep) are taken over automatically,
+    so kill-and-resume needs no manual cleanup.
 
 The journal is engine-level (memo keys, not ``SweepEntry`` rows) so a
 resumed sweep re-derives entries through the exact same assembly path as a
@@ -34,15 +40,31 @@ from __future__ import annotations
 
 import json
 import os
+import time
 import zlib
 from dataclasses import fields
 from typing import Dict, List, Optional
 
 import numpy as np
 
+from .faults import CheckpointLockedError, InjectedKill
 from .memory.system import CoreBatchStats, EmbeddingBatchStats
 
 _VERSION = 1
+
+
+def _pid_alive(pid: int) -> bool:
+    """Best-effort liveness probe (same host; signal 0)."""
+    if pid <= 0:
+        return False
+    try:
+        os.kill(pid, 0)
+    except ProcessLookupError:
+        return False
+    except OSError:
+        # EPERM etc.: the process exists but isn't ours.
+        return True
+    return True
 
 
 # --------------------------------------------------------------------------
@@ -150,6 +172,75 @@ class SweepCheckpoint:
         self._fh = None
         self._restored: Dict[str, List[List[EmbeddingBatchStats]]] = {}
         self.completed_entries: Optional[int] = None
+        self._lock_owned = False
+        # Test-only torn-write injection hook; sweep() installs its
+        # FaultInjector here when given a fault_plan (None in production).
+        self.fault_injector = None
+
+    # -- concurrent-writer lockfile ---------------------------------------
+
+    @property
+    def lock_path(self) -> str:
+        return self.path + ".lock"
+
+    def _lock_holder(self) -> Optional[int]:
+        try:
+            with open(self.lock_path, "rb") as f:
+                return int(json.loads(f.read().decode()).get("pid", -1))
+        except (OSError, ValueError, json.JSONDecodeError,
+                UnicodeDecodeError, AttributeError):
+            return None
+
+    def _acquire_lock(self) -> None:
+        """Take ``<path>.lock`` via O_EXCL creation. A lock held by a live
+        foreign process raises ``CheckpointLockedError`` (two writers would
+        interleave appends). Stale locks — dead PID, unreadable payload, or
+        our own PID (a prior open in this process that never closed, e.g. a
+        killed-and-resumed sweep holding the same instance) — are taken
+        over; O_EXCL arbitrates takeover races."""
+        if self._lock_owned:
+            return
+        d = os.path.dirname(self.path)
+        if d:
+            os.makedirs(d, exist_ok=True)
+        payload = json.dumps({
+            "pid": os.getpid(),
+            "path": os.path.abspath(self.path),
+            "time": time.time(),
+        }).encode()
+        for _ in range(16):
+            try:
+                fd = os.open(self.lock_path,
+                             os.O_CREAT | os.O_EXCL | os.O_WRONLY, 0o644)
+            except FileExistsError:
+                pid = self._lock_holder()
+                if pid is not None and pid != os.getpid() and _pid_alive(pid):
+                    raise CheckpointLockedError(
+                        f"checkpoint journal {self.path} is locked by live "
+                        f"process {pid} ({self.lock_path}); two concurrent "
+                        "writers would interleave appends — wait for it, or "
+                        "remove the lockfile if you are certain it is stale")
+                try:
+                    os.unlink(self.lock_path)
+                except FileNotFoundError:
+                    pass
+                continue
+            try:
+                os.write(fd, payload)
+            finally:
+                os.close(fd)
+            self._lock_owned = True
+            return
+        raise CheckpointLockedError(
+            f"could not acquire {self.lock_path} after repeated takeovers")
+
+    def _release_lock(self) -> None:
+        if self._lock_owned:
+            self._lock_owned = False
+            try:
+                os.unlink(self.lock_path)
+            except FileNotFoundError:
+                pass
 
     # -- framing ----------------------------------------------------------
 
@@ -186,8 +277,20 @@ class SweepCheckpoint:
         """Replay the journal (if any), validate the fingerprint, truncate
         any torn tail, and open for appending. Idempotent: re-opening (e.g.
         one ``SweepCheckpoint`` instance across several ``sweep()`` calls)
-        re-replays from disk."""
+        re-replays from disk. Raises ``CheckpointLockedError`` while another
+        live process holds the journal's lockfile."""
         self.close()
+        self._acquire_lock()
+        try:
+            self._open_locked(fingerprint_desc)
+        except BaseException:
+            # open() is called before sweep()'s try/finally: failing here
+            # (fingerprint mismatch, IO error) must not leave a lock that
+            # only process death would clear.
+            self._release_lock()
+            raise
+
+    def _open_locked(self, fingerprint_desc: Dict) -> None:
         digest = fingerprint_digest(fingerprint_desc)
         self._restored.clear()
         self.completed_entries = None
@@ -251,11 +354,25 @@ class SweepCheckpoint:
         the round in flight; fsync waits for ``mark_complete``/``close``."""
         if self._fh is None:
             raise RuntimeError("checkpoint not open")
-        for key, stats in results.items():
+        inj = self.fault_injector
+        tear = inj is not None and results and inj.maybe_tear()
+        items = list(results.items())
+        for i, (key, stats) in enumerate(items):
             ks = _key_str(slice_id, key)
-            self._fh.write(self._frame({
+            frame = self._frame({
                 "kind": "key", "k": ks, "stats": _enc_stats(stats),
-            }))
+            })
+            if tear and i == len(items) - 1:
+                # Injected torn write: half of the final frame reaches the
+                # OS, then the "process" dies — exactly what a SIGKILL
+                # mid-append leaves behind. Replay must truncate here and
+                # re-evaluate this key (InjectedKill subclasses
+                # KeyboardInterrupt so nothing downstream absorbs it).
+                self._fh.write(frame[: max(1, len(frame) // 2)])
+                self._fh.flush()
+                raise InjectedKill(
+                    f"injected torn journal write at {self.path}")
+            self._fh.write(frame)
             self._restored[ks] = stats
         self._fh.flush()
 
@@ -275,6 +392,7 @@ class SweepCheckpoint:
             os.fsync(self._fh.fileno())
             self._fh.close()
             self._fh = None
+        self._release_lock()
 
     def __enter__(self) -> "SweepCheckpoint":
         return self

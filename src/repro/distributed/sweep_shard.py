@@ -10,12 +10,24 @@ batch composition — so scaling out is a pure partitioning problem:
     ONE classification with their class key, so splitting a group across
     shards would re-classify it per shard. Whole groups round-robin across
     shards by size (largest first) for balance, deterministically.
-  * **One worker thread per shard**, each evaluating its key subset through
-    the regular engine with jit dispatch pinned to its device via
-    ``jax.default_device`` (thread-local in jax, so shards target distinct
-    devices concurrently; the GIL releases inside XLA executions). The
-    per-shard stats dicts merge back into the single memo table — bitwise
-    identical to the unsharded pass, differential-enforced.
+  * **One supervised worker thread per shard**, each evaluating its key
+    subset through the regular engine with jit dispatch pinned to its
+    device via ``jax.default_device`` (thread-local in jax, so shards
+    target distinct devices concurrently; the GIL releases inside XLA
+    executions). The per-shard stats dicts merge back into the single memo
+    table — bitwise identical to the unsharded pass,
+    differential-enforced.
+  * **Fault tolerance** (see ``core/faults.py`` for the taxonomy): each
+    worker retries transient failures in place with seeded exponential
+    backoff; a heartbeat watchdog (armed via
+    ``FaultTolerance.shard_timeout_s``) abandons hung shards; crashed or
+    hung shards have their memo keys re-partitioned onto the survivors
+    (the plan shrinks, the sweep completes — ``strict=True`` raises
+    instead). Because the batching layers are composition-invariant, every
+    recovery path is bitwise identical to the fault-free run. Fatal errors
+    (bugs, not infrastructure) raise ``ShardEvaluationError`` with shard/
+    device/key-group context, carrying all completed sibling-shard results
+    so surviving work is never discarded.
   * **Cross-device gather check** through the ``shard_map_compat`` version
     shim (the same one the collective matmul uses): each shard contributes
     its key count on its mesh position and a psum must see every shard —
@@ -29,13 +41,24 @@ executes the partition.
 from __future__ import annotations
 
 import itertools
-from concurrent.futures import ThreadPoolExecutor
+import threading
+import time
 from dataclasses import dataclass
-from typing import Callable, Dict, List, Sequence
+from typing import Callable, Dict, List, Optional, Sequence, Tuple
 
 import jax
 import numpy as np
 
+from ..core import profiling
+from ..core.faults import (
+    FaultInjector,
+    FaultTelemetry,
+    FaultTolerance,
+    FaultToleranceExhausted,
+    ShardEvaluationError,
+    backoff_seconds,
+    classify_exception,
+)
 from .collective_matmul import shard_map_compat
 
 __all__ = [
@@ -101,39 +124,263 @@ def partition_by_class_key(
     return parts
 
 
+class _ShardWorker:
+    """Per-shard supervision state for one wave of workers."""
+
+    __slots__ = (
+        "index", "device", "part", "thread", "result", "error", "ok",
+        "hung", "retries", "wall", "heartbeat", "done", "cancel",
+    )
+
+    def __init__(self, index: int, device, part: Dict[tuple, tuple]):
+        self.index = index
+        self.device = device
+        self.part = part
+        self.thread: Optional[threading.Thread] = None
+        self.result: Dict[tuple, list] = {}
+        self.error: Optional[BaseException] = None
+        self.ok = False
+        self.hung = False
+        self.retries = 0
+        self.wall = 0.0
+        self.heartbeat = time.monotonic()
+        self.done = threading.Event()
+        self.cancel = threading.Event()
+
+
+def _shard_worker_main(
+    w: _ShardWorker,
+    eval_fn: Callable[[Dict[tuple, tuple]], Dict[tuple, list]],
+    tol: FaultTolerance,
+    injector: Optional[FaultInjector],
+    tele: FaultTelemetry,
+) -> None:
+    """Worker body: pin jit dispatch to the shard's device, retry transient
+    failures in place with seeded backoff, surface everything else to the
+    supervisor via ``w.error``. Never raises — the supervisor classifies."""
+    t0 = time.monotonic()
+    try:
+        with jax.default_device(w.device):
+            attempt = 0
+            while True:
+                w.heartbeat = time.monotonic()
+                try:
+                    if injector is not None:
+                        injector.fire(w.index, w.cancel)
+                    w.result = eval_fn(w.part) if w.part else {}
+                    w.ok = True
+                    return
+                except Exception as exc:  # noqa: BLE001 — classified below
+                    if classify_exception(exc) != "transient":
+                        raise
+                    tele.note_transient(w.index)
+                    if attempt >= tol.max_retries or w.cancel.is_set():
+                        raise
+                    last_exc = exc
+                attempt += 1
+                w.retries += 1
+                tele.note_retry(w.index)
+                # Backoff between attempts; a watchdog cancel interrupts the
+                # wait (the shard is being abandoned, stop burning time).
+                with profiling.stage("fault_wait"):
+                    if w.cancel.wait(backoff_seconds(tol, w.index, attempt)):
+                        raise last_exc
+    except BaseException as exc:  # noqa: BLE001 — handed to the supervisor
+        w.error = exc
+    finally:
+        w.wall = time.monotonic() - t0
+        w.done.set()
+
+
+def _run_wave(
+    workers: List[_ShardWorker],
+    eval_fn: Callable[[Dict[tuple, tuple]], Dict[tuple, list]],
+    tol: FaultTolerance,
+    injector: Optional[FaultInjector],
+    tele: FaultTelemetry,
+) -> None:
+    """Run one wave of shard workers to completion (or abandonment).
+
+    Threads are daemonic because a hung worker cannot be force-killed in
+    Python: the watchdog marks it ``hung``, sets its cancel event (so
+    cooperative waits — backoff sleeps, injected hangs — exit promptly),
+    and stops waiting for it. With no timeout armed the supervisor is a
+    plain zero-poll join, so the fault-free path pays no watchdog tax."""
+    for w in workers:
+        w.thread = threading.Thread(
+            target=_shard_worker_main,
+            args=(w, eval_fn, tol, injector, tele),
+            name=f"sweep-shard-{w.index}",
+            daemon=True,
+        )
+        w.thread.start()
+    if tol.shard_timeout_s is None:
+        for w in workers:
+            w.done.wait()
+        return
+    pending = list(workers)
+    while pending:
+        pending[0].done.wait(tol.watchdog_poll_s)
+        now = time.monotonic()
+        still: List[_ShardWorker] = []
+        for w in pending:
+            if w.done.is_set():
+                continue
+            if now - w.heartbeat > tol.shard_timeout_s:
+                w.hung = True
+                w.cancel.set()  # abandoned; thread may finish later, ignored
+                continue
+            still.append(w)
+        pending = still
+
+
+def _shard_error(
+    w: _ShardWorker,
+    merged: Dict[tuple, list],
+    prefix: Optional[str] = None,
+) -> ShardEvaluationError:
+    groups = sorted({str(ck) for (_ms, ck) in w.part.values()})
+    return ShardEvaluationError(
+        shard=w.index,
+        device=str(w.device),
+        keys=list(w.part),
+        class_groups=groups,
+        completed=merged,
+        cause=w.error,
+        prefix=prefix,
+    )
+
+
 def evaluate_sharded(
     items: Dict[tuple, tuple],
     plan: ShardPlan,
     eval_fn: Callable[[Dict[tuple, tuple]], Dict[tuple, list]],
+    *,
+    tolerance: Optional[FaultTolerance] = None,
+    injector: Optional[FaultInjector] = None,
+    telemetry: Optional[FaultTelemetry] = None,
 ) -> Dict[tuple, list]:
-    """Partition ``items``, evaluate each shard on its device concurrently,
-    and merge the per-key stats back (original key order preserved)."""
+    """Partition ``items``, evaluate each shard on its device under
+    supervision, and merge the per-key stats back (original key order
+    preserved).
+
+    Recovery semantics (``tolerance``, default ``FaultTolerance()``):
+    transient worker errors retry in place with seeded backoff; crashed,
+    hung (watchdog-abandoned), or retry-exhausted shards are dropped and
+    their memo keys re-partitioned onto the surviving shards — the plan
+    shrinks, the call completes, and the merged result is bitwise identical
+    because every batching layer is composition-invariant. ``strict=True``
+    raises ``ShardEvaluationError`` instead of degrading. Fatal errors
+    always raise it, carrying every completed sibling shard's results as
+    ``.completed``. Kills (``KeyboardInterrupt``/``SystemExit``) propagate
+    untouched. ``injector`` threads a test-only fault schedule into the
+    workers; ``telemetry`` accumulates retry/failover/degradation counts.
+    """
+    tol = tolerance if tolerance is not None else FaultTolerance()
+    tele = telemetry if telemetry is not None else FaultTelemetry()
     parts = partition_by_class_key(items, plan.num_shards)
-
-    def run(part, dev):
-        if not part:
-            return {}
-        with jax.default_device(dev):
-            return eval_fn(part)
-
-    with ThreadPoolExecutor(max_workers=plan.num_shards) as pool:
-        shard_results = list(pool.map(run, parts, plan.devices))
-
-    # Cross-device participation check: every shard's key count must arrive
-    # in the psum-ed total. Cheap, and it exercises the real collective
-    # (shard_map over the plan's device mesh) rather than trusting the
-    # thread pool.
-    counts = [len(p) for p in parts]
-    total = shard_key_totals(counts, plan)
-    if total != len(items):
-        raise RuntimeError(
-            f"sharded gather dropped keys: psum saw {total}, "
-            f"expected {len(items)}"
-        )
-
+    # Shard ids are indices into plan.devices and stay stable across
+    # failover waves, so a FaultPlan's (shard, round) coordinates keep
+    # meaning the same worker even after other shards died.
+    alive: Dict[int, object] = dict(enumerate(plan.devices))
+    assignments: List[Tuple[int, Dict[tuple, tuple]]] = [
+        (i, parts[i]) for i in range(plan.num_shards) if parts[i]
+    ]
     merged: Dict[tuple, list] = {}
-    for res in shard_results:
-        merged.update(res)
+    completed_counts = [0] * plan.num_shards
+    max_failovers = (
+        tol.max_failover_rounds
+        if tol.max_failover_rounds is not None
+        else plan.num_shards
+    )
+    failover_round = 0
+
+    while assignments:
+        workers = [_ShardWorker(i, alive[i], part) for i, part in assignments]
+        _run_wave(workers, eval_fn, tol, injector, tele)
+
+        failed: List[_ShardWorker] = []
+        for w in workers:
+            # A worker that finished after the watchdog abandoned it stays
+            # failed: its keys are already earmarked for failover and the
+            # completed-count bookkeeping must see each key exactly once.
+            if w.ok and not w.hung:
+                merged.update(w.result)
+                completed_counts[w.index] += len(w.part)
+                tele.note_shard(w.index, device=str(w.device),
+                                keys=len(w.part), wall_s=w.wall)
+            else:
+                failed.append(w)
+        if not failed:
+            break
+
+        # Process-level kills propagate untouched (Ctrl-C, injected kill).
+        for w in failed:
+            if w.error is not None and classify_exception(w.error) == "kill":
+                raise w.error
+        # Fatal = a bug, not infrastructure: never failed over. Wrap with
+        # shard context; completed sibling results ride along.
+        for w in failed:
+            if not w.hung and classify_exception(w.error) == "fatal":
+                raise _shard_error(w, merged) from w.error
+
+        for w in failed:
+            kind = "hang" if w.hung else classify_exception(w.error)
+            tele.note_shard_failure(w.index, kind, device=str(w.device))
+        if tol.strict:
+            w = failed[0]
+            raise _shard_error(
+                w, merged,
+                prefix="strict fault tolerance (no failover): shard "
+                       + ("hung" if w.hung else "failed"),
+            ) from w.error
+
+        # Graceful degradation: drop the failed shards, re-partition their
+        # keys onto the survivors, and run another wave over the shrunken
+        # plan. partition_by_class_key is deterministic, and the batching
+        # layers are composition-invariant, so the failover result is
+        # bitwise identical to the fault-free evaluation.
+        failed_keys: Dict[tuple, tuple] = {}
+        for w in failed:
+            alive.pop(w.index, None)
+            failed_keys.update(w.part)
+        live_dev_ids = {id(d) for d in alive.values()}
+        lost = len({id(w.device) for w in failed} - live_dev_ids)
+        if lost:
+            tele.note_lost_devices(lost)
+        if not alive:
+            hung_n = sum(1 for w in failed if w.hung)
+            hint = (
+                " (all failures are watchdog timeouts: if the shards were "
+                "making progress, FaultTolerance.shard_timeout_s is below "
+                "the legitimate per-round evaluation time — raise it)"
+                if hung_n == len(failed) else ""
+            )
+            raise FaultToleranceExhausted(
+                f"every shard failed; {len(failed_keys)} memo keys have no "
+                f"surviving device{hint}"
+            ) from failed[0].error
+        failover_round += 1
+        if failover_round > max_failovers:
+            raise FaultToleranceExhausted(
+                f"failover depth {failover_round} exceeds "
+                f"max_failover_rounds={max_failovers}"
+            ) from failed[0].error
+        survivors = sorted(alive)
+        tele.note_failover(keys=len(failed_keys), survivors=len(survivors))
+        sub = partition_by_class_key(failed_keys, len(survivors))
+        assignments = [(i, p) for i, p in zip(survivors, sub) if p]
+
+    # Cross-device participation check: every completed shard's key count
+    # must arrive in the psum-ed total. Cheap, and it exercises the real
+    # collective (shard_map over the live device mesh) rather than trusting
+    # the supervisor's bookkeeping.
+    total = shard_key_totals(completed_counts, plan)
+    if total != len(items) or len(merged) != len(items):
+        raise RuntimeError(
+            f"sharded gather dropped keys: psum saw {total}, merged "
+            f"{len(merged)}, expected {len(items)}"
+        )
     return {k: merged[k] for k in items}
 
 
@@ -142,7 +389,8 @@ def shard_key_totals(counts: Sequence[int], plan: ShardPlan) -> int:
     ``shard_map_compat`` shim. With repeated devices (oversubscribed
     shards) the mesh would alias, so the collective runs over the distinct
     device set with per-device subtotals — the returned total is the same
-    either way."""
+    either way. Devices that contributed zero keys are left out of the
+    mesh: after a failover their hardware may be the thing that died."""
     # Fold shard counts onto their distinct devices (a mesh needs unique
     # devices; oversubscribed plans stack their counts per device).
     dev_ids: Dict[int, int] = {}
@@ -155,6 +403,9 @@ def shard_key_totals(counts: Sequence[int], plan: ShardPlan) -> int:
             dev_list.append(dev)
             per_dev.append(0)
         per_dev[i] += int(n)
+    live = [(d, n) for d, n in zip(dev_list, per_dev) if n > 0]
+    dev_list = [d for d, _ in live]
+    per_dev = [n for _, n in live]
     if len(dev_list) < 2:
         return int(sum(per_dev))
 
