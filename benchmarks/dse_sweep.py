@@ -21,7 +21,10 @@ next perf PR starts from data instead of guesses.
 
 A separate NUMA placement-axes slice (channel_affinity x placement on a
 2-core table_hash cluster) is timed into ``placement_per_config_ms`` without
-touching the historical perf-gate grid.
+touching the historical perf-gate grid, and a serving-scenario slice sweeps
+the closed-loop request-level scheduler (steady vs overload-with-robustness
+traffic as first-class axes) into ``kind=serving`` rows — per-(hardware x
+scenario) p50/p95/p99 latency, goodput and shed/timeout/retry counters.
 
 The **sharded probe** measures the device-sharded sweep: a subprocess under
 ``XLA_FLAGS=--xla_force_host_platform_device_count=8`` (so the parent's
@@ -40,8 +43,16 @@ import sys
 import time
 from typing import Dict, List, Optional
 
-from repro.core import OnChipPolicy, dlrm_rmc2_small, simulate, sweep, tpuv6e
+from repro.core import (
+    OnChipPolicy,
+    TrafficConfig,
+    dlrm_rmc2_small,
+    simulate,
+    sweep,
+    tpuv6e,
+)
 from repro.core import profiling
+from repro.serving import RobustnessPolicy, ServingScenario
 
 TABLES, ROWS, BATCH = 4, 100_000, 48
 POLICIES = ("spm", "lru", "srrip", "pinning")
@@ -68,6 +79,34 @@ SHARDED_AXES = dict(
 )
 SHARDED_DEVICES = 8
 _PROBE_MARKER = "SHARDED_PROBE_JSON:"
+
+# Serving-scenario slice: the closed-loop request-level scheduler as DSE
+# axes (traffic pattern x robustness policy) over the perf-gate policies.
+# Each (hardware x scenario) point emits a ``kind=serving`` row carrying the
+# latency distribution (p50/p95/p99), goodput and the shed/timeout/retry
+# counters — the serving trajectory tracked in BENCH_sweep.json.
+SERVING_TABLES, SERVING_ROWS = 4, 20_000
+SERVING_AXES = dict(policies=POLICIES, capacities=(1 << 20,), ways=(8,))
+SERVING_SCENARIOS = (
+    ServingScenario(
+        name="steady",
+        traffic=TrafficConfig(pattern="poisson", mean_gap_cycles=1_500.0,
+                              num_requests=64, seed=7, zipf_s=ZIPF),
+        batch_slots=8,
+    ),
+    ServingScenario(
+        name="overload_storm",
+        traffic=TrafficConfig(pattern="bursty", mean_gap_cycles=60.0,
+                              num_requests=96, seed=23, burst_len=12,
+                              zipf_s=ZIPF),
+        policy=RobustnessPolicy(admission_watermark=14,
+                                deadline_cycles=40_000, max_retries=2,
+                                retry_backoff_cycles=3_000.0,
+                                degrade_mode="hot_rows_only",
+                                degrade_watermark=4, hot_fraction=0.1),
+        batch_slots=8,
+    ),
+)
 
 
 def _best_of(n: int, fn):
@@ -134,6 +173,18 @@ def run(profile: bool = False) -> List[Dict]:
     t_indep = time.perf_counter() - t0
     est_independent_s = t_indep / len(sample) * sr.num_configs
 
+    # Serving slice: steady + overload-with-robustness scenarios swept as
+    # first-class axes; timed separately (best-of-2 like the other slices)
+    # so the headline per_config_ms keeps its historical fixed-trace grid.
+    wl_s = dlrm_rmc2_small(num_tables=SERVING_TABLES,
+                           rows_per_table=SERVING_ROWS, batch_size=BATCH,
+                           num_batches=2)
+    sweep(wl_s, base_hw, scenarios=SERVING_SCENARIOS, **SERVING_AXES)  # warm
+    sr_s = _best_of(2, lambda: sweep(wl_s, base_hw,
+                                     scenarios=SERVING_SCENARIOS,
+                                     **SERVING_AXES))
+    best_p99 = sr_s.best("p99_cycles")
+
     best = sr.best("total_cycles")
     perf_row: Dict = {
         "kind": "perf",
@@ -157,6 +208,10 @@ def run(profile: bool = False) -> List[Dict]:
         "bitexact_sample": len(sample),
         "best_config": best.config.label,
         "best_total_cycles": best.result.total_cycles,
+        "serving_configs": sr_s.num_configs,
+        "serving_per_config_ms": sr_s.wall_seconds / sr_s.num_configs * 1e3,
+        "best_serving_p99_config": best_p99.config.label,
+        "best_serving_p99_cycles": best_p99.result.p99_cycles,
         # Failure telemetry (core.faults): all-zero on this fault-free run —
         # nonzero counters in a perf trajectory mean the runner degraded
         # (retries/failovers) and its walls are not comparable.
@@ -172,6 +227,7 @@ def run(profile: bool = False) -> List[Dict]:
     rows.extend(
         {"kind": "config", **r} for r in sr.speedup_over("spm")
     )
+    rows.extend({"kind": "serving", **e.row()} for e in sr_s.entries)
     return rows
 
 
@@ -274,6 +330,10 @@ if __name__ == "__main__":
           f"per_config_ms={perf['per_config_ms']:.1f} "
           f"speedup_vs_independent={perf['speedup_vs_independent']:.2f} "
           f"batched_scan_speedup={perf['batched_scan_speedup']:.2f}")
+    print(f"serving: {perf['serving_configs']} (hw x scenario) points, "
+          f"{perf['serving_per_config_ms']:.1f} ms/config, best p99 "
+          f"{perf['best_serving_p99_cycles']:,.0f} cyc "
+          f"@ {perf['best_serving_p99_config']}")
     if "sharded_speedup" in perf:
         print(f"sharded: {perf['sharded_configs']} configs on "
               f"{perf['sharded_device_count']} host devices "

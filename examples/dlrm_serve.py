@@ -1,25 +1,36 @@
-"""Serve DLRM with batched requests, running the real model (Pallas
-embedding-bag kernels, incl. the hot-pinned VMEM path) NEXT TO the EONSim
-prediction for the same trace — the simulator/runtime pairing the framework
-is built around.
+"""Serve DLRM under a request-arrival stream: the real model (Pallas
+embedding-bag kernels, incl. the hot-pinned VMEM path) runs one admitted
+batch for correctness, then the EONSim request-level serving simulator
+drives the same configuration closed-loop — Poisson arrivals, continuous
+batching, robustness policies — and prints the latency distribution.
 
     PYTHONPATH=src python examples/dlrm_serve.py
 """
-import time
-
 import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import OnChipPolicy, dlrm_rmc2_small, simulate, tpuv6e
+from repro.core import (
+    OnChipPolicy,
+    TrafficConfig,
+    tpuv6e,
+)
+from repro.core.memory.system import MultiCoreMemorySystem
+from repro.core.requests import generate_requests, lower_batch
 from repro.core.trace import REUSE_LEVELS
+from repro.core.workload import EmbeddingOpSpec
 from repro.data.dlrm_data import DLRMDataConfig, dlrm_batch
 from repro.kernels import ops
 from repro.models import dlrm
+from repro.serving import RobustnessPolicy, ServingScenario, simulate_serving
 
 CFG = dlrm.DLRMConfig(num_tables=4, rows_per_table=5000, dim=64,
                       lookups_per_table=16,
                       bottom_mlp=(128, 64), top_mlp=(64, 1))
+SPEC = EmbeddingOpSpec(num_tables=CFG.num_tables,
+                       rows_per_table=CFG.rows_per_table, dim=CFG.dim,
+                       lookups_per_sample=CFG.lookups_per_table,
+                       dtype_bytes=4)
 
 params = dlrm.init(jax.random.PRNGKey(0), CFG)
 dcfg = DLRMDataConfig(num_tables=CFG.num_tables, rows_per_table=CFG.rows_per_table,
@@ -50,11 +61,50 @@ print("plain vs pinned max diff:",
       float(jnp.max(jnp.abs(scores_plain - scores_pinned))))
 print("hot fraction of lookups:", float(mask.mean()))
 
-# --- EONSim prediction for the same configuration ---------------------------
-wl = dlrm_rmc2_small(num_tables=CFG.num_tables, rows_per_table=CFG.rows_per_table,
-                     dim=CFG.dim, lookups=CFG.lookups_per_table, batch_size=32)
+# --- request-level serving simulation ---------------------------------------
+# A seeded Poisson request stream with popularity drift, served closed-loop:
+# continuous batching over the simulated memory system, once per on-chip
+# policy, steady-state and overload-with-robustness-policies side by side.
+TRAFFIC = {
+    "steady": TrafficConfig(pattern="poisson", mean_gap_cycles=3_000.0,
+                            num_requests=128, seed=42,
+                            zipf_s=dcfg.zipf_s, zipf_drift=0.3,
+                            drift_period=32),
+    "overload": TrafficConfig(pattern="bursty", mean_gap_cycles=120.0,
+                              num_requests=128, seed=42, burst_len=16,
+                              zipf_s=dcfg.zipf_s),
+}
+ROBUST = RobustnessPolicy(admission_watermark=24, deadline_cycles=2_000_000,
+                          max_retries=1, degrade_mode="hot_rows_only",
+                          degrade_watermark=12, hot_fraction=0.1)
+SCENARIOS = [
+    ServingScenario(name="steady", traffic=TRAFFIC["steady"], batch_slots=8),
+    ServingScenario(name="overload+robust", traffic=TRAFFIC["overload"],
+                    policy=ROBUST, batch_slots=8),
+]
+
 for policy in (OnChipPolicy.SPM, OnChipPolicy.PINNING):
     hw = tpuv6e().with_policy(policy, capacity_bytes=256 * 1024)
-    res = simulate(wl, hw, seed=0, zipf_s=dcfg.zipf_s)
-    print(f"EONSim[{policy.value:8s}]: {res.total_cycles:10.0f} cycles, "
-          f"on-chip ratio {res.onchip_ratio:.3f}")
+    ms = MultiCoreMemorySystem.from_hardware(hw)
+    print(f"\n=== EONSim serving [{policy.value}] ===")
+    for sc in SCENARIOS:
+        res = simulate_serving(ms, SPEC, sc)
+        us = res.cycles_to_us
+        print(f"[{sc.name:16s}] offered {res.offered:4d}  "
+              f"completed {res.completed:4d}  shed {res.shed:3d}  "
+              f"timeout {res.timed_out:3d}  retries {res.retries:3d}  "
+              f"degraded batches {res.degraded_batches:3d}")
+        print(f"{'':18s} latency p50/p95/p99 "
+              f"{us(res.p50_cycles):8.1f}/{us(res.p95_cycles):8.1f}/"
+              f"{us(res.p99_cycles):8.1f} us   "
+              f"queue/service {us(res.mean_queue_cycles):7.1f}/"
+              f"{us(res.mean_service_cycles):7.1f} us")
+        print(f"{'':18s} sustained {res.sustained_qps:,.0f} req/s   "
+              f"goodput {res.goodput:.3f}")
+        # latency histogram over completed requests
+        if res.latency_cycles.size:
+            edges = np.percentile(res.latency_cycles,
+                                  [0, 25, 50, 75, 90, 99, 100])
+            counts, _ = np.histogram(res.latency_cycles, bins=np.unique(edges))
+            bars = " ".join(f"{int(c):3d}" for c in counts)
+            print(f"{'':18s} latency histogram (p0..p100 bins): {bars}")

@@ -21,7 +21,9 @@ the batched placement dispatch can't silently decay back toward the old
 per-config path. A fault-tolerance overhead gate runs the base grid sharded
 under a fully armed ``FaultTolerance`` (retry budget + heartbeat watchdog,
 nothing firing) and asserts <5% extra wall vs the minimal policy — recovery
-machinery must be free when nothing fails.
+machinery must be free when nothing fails. A serving overhead gate does the
+same for the request-level scheduler: steady-state all-policies-off serving
+must stay within 10% of the equivalent plain fixed-trace wall.
 
 Usage:  PYTHONPATH=src python scripts/perf_smoke.py [--update-baseline]
 Baseline: benchmarks/perf_baseline.json (checked in; results/ is gitignored).
@@ -41,12 +43,21 @@ from benchmarks import dse_sweep as _bench          # noqa: E402
 from repro.core import (                            # noqa: E402
     FaultTolerance,
     OnChipPolicy,
+    TrafficConfig,
     dlrm_rmc2_small,
     profiling,
     simulate,
     sweep,
     tpuv6e,
 )
+from repro.core.memory.system import (              # noqa: E402
+    EmbeddingTrace,
+    MultiCoreMemorySystem,
+)
+from repro.core.requests import generate_requests, lower_batch  # noqa: E402
+from repro.core.trace import ConcatTrace            # noqa: E402
+from repro.core.workload import EmbeddingOpSpec     # noqa: E402
+from repro.serving import ServingScenario, simulate_serving     # noqa: E402
 
 BASELINE_PATH = os.path.join(_REPO_ROOT, "benchmarks", "perf_baseline.json")
 REGRESSION_FACTOR = 1.5
@@ -220,6 +231,62 @@ def fault_overhead_smoke() -> None:
         "watchdog/retry machinery is no longer free when idle")
 
 
+# Serving-simulator overhead gate: with every robustness policy off the
+# closed-loop scheduler collapses to ONE plain fixed-trace simulation, so a
+# steady-state serving run must cost within 10% of the equivalent plain path
+# (request generation + batch lowering + one simulate_embedding over the
+# same lowered ConcatTrace). The absolute floor absorbs scheduler noise on
+# sub-second walls without hiding a structural cost (a per-batch re-sim
+# would blow through both bounds).
+SERVING_OVERHEAD_FRAC = 0.10
+SERVING_OVERHEAD_FLOOR_S = 0.015
+
+
+def serving_overhead_smoke() -> None:
+    """Steady-state all-policies-off serving must stay a thin wrapper over
+    the plain fixed-trace path: same request stream, same lowered concat,
+    one ``simulate_embedding`` call — the event loop, latency bookkeeping
+    and result assembly together cost <10% extra wall (+ floor)."""
+    spec = EmbeddingOpSpec(num_tables=4, rows_per_table=2000, dim=64,
+                           lookups_per_sample=8, dtype_bytes=4)
+    traffic = TrafficConfig(pattern="poisson", mean_gap_cycles=1_500.0,
+                            num_requests=96, seed=7, zipf_s=0.9)
+    sc = ServingScenario(name="steady_off", traffic=traffic, batch_slots=8)
+    assert sc.policy.all_off
+    ms = MultiCoreMemorySystem.from_hardware(tpuv6e())
+
+    def plain():
+        reqs = generate_requests(spec, traffic)
+        fulls = [lower_batch(reqs[i:i + sc.batch_slots], spec).full
+                 for i in range(0, len(reqs), sc.batch_slots)]
+        return ms.simulate_embedding(EmbeddingTrace.from_concat(
+            spec, ConcatTrace.from_traces(fulls)))
+
+    def serve():
+        return simulate_serving(ms, spec, sc)
+
+    def best_of(fn):
+        best = float("inf")
+        for _ in range(3):
+            t0 = time.perf_counter()
+            fn()
+            best = min(best, time.perf_counter() - t0)
+        return best
+
+    plain(), serve()                               # warm: compile the shapes
+    plain_s = best_of(plain)
+    serve_s = best_of(serve)
+    limit = plain_s * (1 + SERVING_OVERHEAD_FRAC) + SERVING_OVERHEAD_FLOOR_S
+    print(f"serving overhead smoke: plain={plain_s * 1e3:.1f} ms "
+          f"serving={serve_s * 1e3:.1f} ms "
+          f"limit={limit * 1e3:.1f} ms (+{SERVING_OVERHEAD_FRAC:.0%} "
+          f"+ {SERVING_OVERHEAD_FLOOR_S * 1e3:.0f} ms floor)")
+    assert serve_s <= limit, (
+        f"steady-state serving costs {serve_s - plain_s:.3f}s over the "
+        f"equivalent plain path (>{SERVING_OVERHEAD_FRAC:.0%} + floor): the "
+        "all-policies-off fast path is no longer a single plain simulation")
+
+
 def main() -> int:
     ap = argparse.ArgumentParser(description=__doc__)
     ap.add_argument("--update-baseline", action="store_true",
@@ -230,6 +297,7 @@ def main() -> int:
     placement_smoke()
     sharded_smoke()
     fault_overhead_smoke()
+    serving_overhead_smoke()
     per_config_ms, num_configs, stages = measure()
     placement_ms, placement_configs = measure_placement()
     ratio = placement_ms / per_config_ms

@@ -1,0 +1,121 @@
+"""Serving CI smoke: a seeded overload scenario, reproduced bitwise.
+
+Drives the request-level serving simulator with an arrival rate well above
+the server's service capacity so every robustness policy actually fires —
+admission control sheds, deadlines expire, clients retry with seeded
+backoff, and the scheduler degrades batches under queue pressure. The same
+scenario is then run a second time from a fresh memory system and the two
+``ServingResult``s must be **bitwise identical** (``diff() == {}``), p99
+latency and the full latency/queue/service arrays included. A steady-state
+all-policies-off scenario rides along as the identity-surface check: its
+``batch_stats`` must equal the plain fixed-trace ``simulate_embedding``
+path for the same lowered ``ConcatTrace``.
+
+Scenario summaries land in ``BENCH_serving.json`` (repo root + the
+gitignored results/bench copy) — the artifact the serving-smoke CI job
+uploads per run.
+"""
+from __future__ import annotations
+
+import os
+import sys
+
+_REPO_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+sys.path.insert(0, _REPO_ROOT)                           # benchmarks.common
+sys.path.insert(0, os.path.join(_REPO_ROOT, "tests"))    # differential.py
+
+from benchmarks.common import save_rows                  # noqa: E402
+from differential import assert_bitwise_equal_results    # noqa: E402
+from repro.core import TrafficConfig, tpuv6e             # noqa: E402
+from repro.core.memory.system import (                   # noqa: E402
+    EmbeddingTrace,
+    MultiCoreMemorySystem,
+)
+from repro.core.requests import generate_requests, lower_batch  # noqa: E402
+from repro.core.trace import ConcatTrace                 # noqa: E402
+from repro.core.workload import EmbeddingOpSpec          # noqa: E402
+from repro.serving import (                              # noqa: E402
+    RobustnessPolicy,
+    ServingScenario,
+    simulate_serving,
+)
+
+SPEC = EmbeddingOpSpec(num_tables=4, rows_per_table=2000, dim=64,
+                       lookups_per_sample=8, dtype_bytes=4)
+BATCH_SLOTS = 8
+
+STEADY = TrafficConfig(pattern="poisson", mean_gap_cycles=1_500.0,
+                       num_requests=64, seed=7, zipf_s=0.9)
+# Bursty arrivals at a fraction of the mean service gap: the queue grows
+# past every watermark, so shed/timeout/retry/degrade all trigger.
+OVERLOAD = TrafficConfig(pattern="bursty", mean_gap_cycles=60.0,
+                         num_requests=96, seed=23, burst_len=12,
+                         zipf_s=0.9, zipf_drift=0.25, drift_period=24)
+STORM = RobustnessPolicy(admission_watermark=14, deadline_cycles=4_000,
+                         max_retries=2, retry_backoff_cycles=3_000.0,
+                         degrade_mode="hot_rows_only", degrade_watermark=4,
+                         hot_fraction=0.1)
+
+SCENARIOS = (
+    ServingScenario(name="steady_off", traffic=STEADY,
+                    batch_slots=BATCH_SLOTS),
+    ServingScenario(name="overload_storm", traffic=OVERLOAD, policy=STORM,
+                    batch_slots=BATCH_SLOTS),
+)
+
+
+def _identity_check(ms, res) -> None:
+    """All-policies-off serving batch_stats == plain fixed-trace path."""
+    reqs = generate_requests(SPEC, STEADY)
+    chunks = [reqs[i:i + BATCH_SLOTS]
+              for i in range(0, len(reqs), BATCH_SLOTS)]
+    fulls = [lower_batch(chunk, SPEC).full for chunk in chunks]
+    plain = ms.simulate_embedding(EmbeddingTrace.from_concat(
+        SPEC, ConcatTrace.from_traces(fulls)))
+    assert_bitwise_equal_results(plain, res.batch_stats,
+                                 "steady_off identity surface")
+
+
+def main() -> int:
+    hw = tpuv6e()
+    rows = []
+    for sc in SCENARIOS:
+        first = simulate_serving(
+            MultiCoreMemorySystem.from_hardware(hw), SPEC, sc)
+        second = simulate_serving(
+            MultiCoreMemorySystem.from_hardware(hw), SPEC, sc)
+        delta = first.diff(second)
+        assert delta == {}, f"[{sc.name}] run-to-run drift: {delta}"
+        assert first.p99_cycles == second.p99_cycles
+        rows.append(first.summary())
+        if sc.name == "steady_off":
+            assert sc.policy.all_off
+            assert first.shed == 0 and first.timed_out == 0
+            assert first.completed == first.offered
+            _identity_check(MultiCoreMemorySystem.from_hardware(hw), first)
+        else:
+            # Overload must actually overload — and the failed-attempt
+            # ledger must balance: every shed/timeout either retried or
+            # exhausted its budget.
+            assert first.shed > 0, first.summary()
+            assert first.timed_out > 0, first.summary()
+            assert first.retries > 0, first.summary()
+            assert first.degraded_batches > 0, first.summary()
+            assert first.shed + first.timed_out \
+                == first.retries + first.abandoned, first.summary()
+        print(f"[{sc.name:14s}] offered {first.offered:3d}  "
+              f"completed {first.completed:3d}  shed {first.shed:3d}  "
+              f"timeout {first.timed_out:3d}  retries {first.retries:3d}  "
+              f"degraded {first.degraded_batches:2d}  "
+              f"p99 {first.p99_cycles:,.0f} cyc  "
+              f"goodput {first.goodput:.3f}")
+
+    path = save_rows("BENCH_serving", rows, repo_root=True)
+    print(f"serving smoke OK: {len(SCENARIOS)} scenarios bitwise-"
+          f"reproducible (shed/timeout counts + p99 + latency arrays), "
+          f"steady-state identity surface verified -> {path}")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

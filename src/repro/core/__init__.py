@@ -32,7 +32,14 @@ from .memory import (
     memory_system_for,
     register_policy,
 )
-from .results import BatchResult, SimResult
+from .requests import (
+    ARRIVAL_PATTERNS,
+    Request,
+    TrafficConfig,
+    generate_arrivals,
+    generate_requests,
+)
+from .results import BatchResult, ServingResult, SimResult
 from .faults import (
     CheckpointLockedError,
     FaultEvent,
@@ -66,7 +73,13 @@ __all__ = [
     "dlrm_rmc2_small",
     "simulate",
     "simulate_embedding_op",
+    "ARRIVAL_PATTERNS",
+    "Request",
+    "TrafficConfig",
+    "generate_arrivals",
+    "generate_requests",
     "BatchResult",
+    "ServingResult",
     "SimResult",
     "MemoryPolicy",
     "MemorySystem",

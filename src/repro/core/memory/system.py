@@ -74,6 +74,7 @@ from ..trace import (
     shard_lookup_cores,
     shard_trace,
     translate,
+    validate_indices,
 )
 from ..workload import EmbeddingOpSpec
 from .cache import CacheGeometry
@@ -168,6 +169,10 @@ class EmbeddingTrace:
     def __init__(self, spec: EmbeddingOpSpec, traces: Sequence[FullTrace]):
         self.spec = spec
         self.concat = ConcatTrace.from_traces(traces)
+        validate_indices(self.concat.row_ids, spec.rows_per_table,
+                         what="row index")
+        validate_indices(self.concat.table_ids, spec.num_tables,
+                         what="table id")
         self._vec_ids: Optional[np.ndarray] = None
         self._lookup_batch: Optional[np.ndarray] = None
         self._atraces: Dict[int, AddressTrace] = {}
@@ -180,6 +185,10 @@ class EmbeddingTrace:
         et = cls.__new__(cls)
         et.spec = spec
         et.concat = concat
+        validate_indices(concat.row_ids, spec.rows_per_table,
+                         what="row index")
+        validate_indices(concat.table_ids, spec.num_tables,
+                         what="table id")
         et._vec_ids = None
         et._lookup_batch = None
         et._atraces = {}

@@ -149,6 +149,9 @@ class SweepConfig:
     topology: str = "private"
     channel_affinity: str = "symmetric"
     placement: str = "interleave"
+    # Serving-scenario name when this grid point came from a scenario sweep
+    # (``sweep(scenarios=...)``); "" on plain fixed-trace sweeps.
+    scenario: str = ""
 
     @property
     def label(self) -> str:
@@ -158,6 +161,8 @@ class SweepConfig:
             base += f"/{self.num_cores}c-{self.topology}"
         if self.channel_affinity != "symmetric" or self.placement != "interleave":
             base += f"/{self.channel_affinity}-{self.placement}"
+        if self.scenario:
+            base += f"/sv:{self.scenario}"
         return base
 
 
@@ -214,13 +219,13 @@ class SweepResult:
             if c.policy == baseline_policy:
                 base[(c.workload, c.capacity_bytes, c.ways, c.zipf_s,
                       c.num_cores, c.topology, c.channel_affinity,
-                      c.placement)] = e.result.total_cycles
+                      c.placement, c.scenario)] = e.result.total_cycles
         out = []
         for e in self.entries:
             c = e.config
             ref = base.get((c.workload, c.capacity_bytes, c.ways, c.zipf_s,
                             c.num_cores, c.topology, c.channel_affinity,
-                            c.placement))
+                            c.placement, c.scenario))
             if ref is None:
                 continue
             r = e.row()
@@ -590,6 +595,7 @@ def sweep(
     fault_tolerance: Optional[FaultTolerance] = None,
     fault_plan: Optional[FaultPlan] = None,
     fault_telemetry: Optional[FaultTelemetry] = None,
+    scenarios: Optional[Sequence] = None,
 ) -> SweepResult:
     """Evaluate the (workload x zipf x policy x capacity x ways x num_cores
     x topology x channel_affinity x placement) grid.
@@ -624,11 +630,38 @@ def sweep(
     telemetry`` supplies the counter sink (pass one in to read telemetry
     even when the sweep raises), otherwise a fresh ``FaultTelemetry`` is
     created. Either way the counters land on ``SweepResult.telemetry``.
+
+    ``scenarios`` (a ``serving.scheduler.ServingScenario`` list) switches
+    the sweep to *serving* mode: each grid point is (hardware axes x
+    scenario), every entry's result a ``ServingResult`` from the
+    closed-loop request-level simulator (traffic pattern x robustness
+    policy as first-class DSE axes). Serving sweeps ride the same
+    sharding/checkpointing/fault-tolerance machinery — memo keys are
+    (hardware combo, scenario key); journaled per-batch stats reconstruct
+    the ``ServingResult`` bitwise through a replay of the deterministic
+    scheduler. ``zipf_s``/``seed``/``index_trace`` do not apply (each
+    scenario's ``TrafficConfig`` carries its own popularity model + seed).
     """
     base_hw = base_hw or tpuv6e()
     wls = _as_tuple(workloads, ())
     if not wls:
         raise ValueError("need at least one workload")
+
+    if scenarios is not None:
+        if configs is not None:
+            raise ValueError("scenarios= and configs= cannot be combined")
+        if index_trace is not None:
+            raise ValueError(
+                "scenarios= generates request-driven traces; index_trace= "
+                "does not apply to serving sweeps")
+        axes = _resolve_axes(base_hw, policies, capacities, ways, num_cores,
+                             topologies, channel_affinities, placements)
+        return _sweep_serving(
+            wls, base_hw, axes, tuple(scenarios),
+            devices=devices, checkpoint=checkpoint,
+            fault_tolerance=fault_tolerance, fault_plan=fault_plan,
+            fault_telemetry=fault_telemetry,
+        )
 
     if configs is not None:
         slices = _slices_from_configs(wls, list(configs))
@@ -792,3 +825,188 @@ def _fingerprint(wls, base_hw, seed, slices, index_trace, energy_table) -> Dict:
         "index_trace": it_digest,
         "energy_table": repr(energy_table),
     }
+
+
+# --------------------------------------------------------------------------
+# Serving-scenario sweeps (traffic pattern x robustness policy axes)
+# --------------------------------------------------------------------------
+
+def _serving_fingerprint(wls, base_hw, combos, scenarios) -> Dict:
+    """Everything that determines serving-sweep RESULTS: workloads, base
+    hardware, the hardware-combo grid, and each scenario's full key (traffic
+    + robustness policy + batch geometry). Sharding/cadence excluded — the
+    scheduler is deterministic and replay is bitwise."""
+    return {
+        "mode": "serving",
+        "workloads": sorted(repr(wl) for wl in wls),
+        "base_hw": repr(base_hw),
+        "combos": sorted(map(list, set(combos))),
+        "scenarios": [list(s.key) for s in scenarios],
+    }
+
+
+def _sweep_serving(
+    wls,
+    base_hw: HardwareConfig,
+    axes,
+    scenarios,
+    devices=None,
+    checkpoint: Union[SweepCheckpoint, str, None] = None,
+    fault_tolerance: Optional[FaultTolerance] = None,
+    fault_plan: Optional[FaultPlan] = None,
+    fault_telemetry: Optional[FaultTelemetry] = None,
+) -> SweepResult:
+    """Serving-mode sweep driver: (hardware combo x scenario) grid over the
+    closed-loop request-level simulator.
+
+    Memo keys are (combo..., scenario.key) — no canonicalization: serving
+    traces are schedule-dependent, so the fixed-trace collapses
+    (capacity saturation, placement identity) are not provably safe here.
+    The shard group key is the hardware combo, co-locating one config's
+    scenarios on a shard. The journal stores each key's per-batch
+    ``EmbeddingBatchStats`` (the existing checkpoint schema, outer list of
+    length 1); restored keys reconstruct their ``ServingResult`` bitwise by
+    replaying the deterministic scheduler against the recorded stats."""
+    from ..serving.scheduler import ReplayOracle, simulate_serving
+    from .requests import generate_requests
+
+    names = [s.name for s in scenarios]
+    if len(set(names)) != len(names):
+        raise ValueError(f"duplicate scenario names: {sorted(names)}")
+    combos = list(itertools.product(*axes))
+
+    shard_plan = None
+    if devices is not None:
+        from ..distributed.sweep_shard import resolve_shard_plan
+        shard_plan = resolve_shard_plan(devices)
+
+    tol = fault_tolerance if fault_tolerance is not None else FaultTolerance()
+    telemetry = (fault_telemetry if fault_telemetry is not None
+                 else FaultTelemetry())
+    injector: Optional[FaultInjector] = None
+    if fault_plan is not None:
+        if shard_plan is None and fault_plan.has_shard_events():
+            raise ValueError(
+                "fault_plan schedules shard events but the sweep is not "
+                "sharded — pass devices= so the plan's shard coordinates "
+                "mean something")
+        if fault_plan.has_kind("hang") and tol.shard_timeout_s is None:
+            raise ValueError(
+                "fault_plan injects hangs but no watchdog is armed — set "
+                "FaultTolerance.shard_timeout_s or the sweep deadlocks")
+        injector = FaultInjector(fault_plan, telemetry)
+
+    ckpt: Optional[SweepCheckpoint] = None
+    if checkpoint is not None:
+        ckpt = (checkpoint if isinstance(checkpoint, SweepCheckpoint)
+                else SweepCheckpoint(checkpoint))
+        ckpt.open(_serving_fingerprint(wls, base_hw, combos, scenarios))
+        ckpt.fault_injector = injector
+
+    t0 = time.perf_counter()
+    out = SweepResult()
+    out.telemetry = telemetry
+    if shard_plan is not None:
+        out.sharded = True
+        out.device_count = shard_plan.distinct_devices
+
+    def _eval_serving(sub: Dict[tuple, tuple]) -> Dict[tuple, list]:
+        res = {}
+        for key, (payload, _gk) in sub.items():
+            ms, spec, sc, reqs = payload
+            res[key] = [simulate_serving(ms, spec, sc,
+                                         requests=reqs).batch_stats]
+        return res
+
+    try:
+        for wl in wls:
+            if not wl.embedding_ops:
+                raise ValueError(
+                    f"workload {wl.name!r} has no embedding op to serve")
+            spec = wl.embedding_ops[0]
+            slice_id = (wl.name, "__serving__")
+            # One request stream per distinct traffic config, shared by
+            # every hardware combo (and every policy over that traffic) —
+            # generated up front so shard threads never duplicate it.
+            streams = {}
+            for sc in scenarios:
+                if sc.traffic.key not in streams:
+                    streams[sc.traffic.key] = generate_requests(spec,
+                                                                sc.traffic)
+
+            grid = []                         # (combo, hw, ms, scenario, key)
+            pending: Dict[tuple, tuple] = {}  # key -> (payload, group_key)
+            for combo in combos:
+                pol, cap, w, nc, topo, aff, plc = combo
+                hw = base_hw.with_policy(
+                    OnChipPolicy(pol), capacity_bytes=cap, ways=w
+                ).with_cluster(nc, topo).with_placement(aff, plc)
+                ms = memory_system_for(hw)
+                for sc in scenarios:
+                    key = combo + (sc.key,)
+                    grid.append((combo, hw, ms, sc, key))
+                    if key not in pending:
+                        pending[key] = (
+                            (ms, spec, sc, streams[sc.traffic.key]), combo)
+            out.distinct_memo_keys += len(pending)
+
+            stats_memo: Dict[tuple, list] = {}
+            if ckpt is not None:
+                for key in pending:
+                    restored = ckpt.lookup(slice_id, key)
+                    if restored is not None:
+                        stats_memo[key] = restored
+                out.resumed_keys += len(stats_memo)
+            todo = {k: v for k, v in pending.items() if k not in stats_memo}
+
+            cadence = ckpt.cadence if ckpt is not None else None
+            for round_items in _chunks(todo, cadence):
+                if injector is not None:
+                    injector.begin_round()
+                if shard_plan is not None and (
+                    len(round_items) > 1 or injector is not None
+                ):
+                    from ..distributed.sweep_shard import evaluate_sharded
+                    try:
+                        results = evaluate_sharded(
+                            round_items, shard_plan, _eval_serving,
+                            tolerance=tol,
+                            injector=injector,
+                            telemetry=telemetry,
+                        )
+                    except ShardEvaluationError as exc:
+                        if ckpt is not None and exc.completed:
+                            ckpt.record(slice_id, exc.completed)
+                        raise
+                else:
+                    results = _eval_serving(round_items)
+                stats_memo.update(results)
+                if ckpt is not None:
+                    ckpt.record(slice_id, results)
+
+            # Entry assembly: replay the deterministic scheduler against
+            # each key's recorded stats — identical whether the stats were
+            # just evaluated or restored from the journal.
+            for combo, hw, ms, sc, key in grid:
+                pol, cap, w, nc, topo, aff, plc = combo
+                res = simulate_serving(
+                    ms, spec, sc, requests=streams[sc.traffic.key],
+                    oracle=ReplayOracle(stats_memo[key][0]),
+                )
+                out.entries.append(SweepEntry(
+                    config=SweepConfig(
+                        policy=pol, capacity_bytes=cap, ways=w,
+                        workload=wl.name, zipf_s=float(sc.traffic.zipf_s),
+                        num_cores=nc, topology=topo, channel_affinity=aff,
+                        placement=plc, scenario=sc.name,
+                    ),
+                    result=res,
+                    memo_key=slice_id + key,
+                ))
+        if ckpt is not None:
+            ckpt.mark_complete(len(out.entries))
+    finally:
+        if ckpt is not None and not isinstance(checkpoint, SweepCheckpoint):
+            ckpt.close()
+    out.wall_seconds = time.perf_counter() - t0
+    return out

@@ -95,6 +95,29 @@ def reuse_trace(level: str, num_accesses: int, num_rows: int, seed: int = 0) -> 
 # Trace expansion: single table -> full workload trace
 # --------------------------------------------------------------------------
 
+def validate_indices(
+    indices: np.ndarray, upper: int, what: str = "embedding index"
+) -> None:
+    """Reject out-of-range / negative indices with a clear error at trace
+    construction. Historically an out-of-range index wrapped modulo the
+    table size at translate time — simulating a *valid but wrong* row, which
+    corrupts hit rates silently. Raise early instead."""
+    arr = np.asarray(indices)
+    if arr.size == 0:
+        return
+    lo, hi = int(arr.min()), int(arr.max())
+    if lo < 0:
+        raise ValueError(
+            f"negative {what} {lo} (valid range [0, {upper})): embedding "
+            "indices must be non-negative — fix the trace generator rather "
+            "than relying on wrap-around")
+    if hi >= upper:
+        raise ValueError(
+            f"{what} {hi} out of range [0, {upper}): the trace references "
+            "rows past the end of the table — fix the trace (or the "
+            "spec's rows_per_table) rather than relying on wrap-around")
+
+
 @dataclass(frozen=True)
 class FullTrace:
     """Expanded trace: one row per lookup, in execution order.
@@ -126,7 +149,14 @@ def expand_trace(
     Each table reuses the same index stream through a per-table permutation of
     the row space — preserving the skew profile while decorrelating *which*
     rows are hot across tables (real tables have independent hot sets).
+
+    Indices must lie in ``[0, spec.rows_per_table)``; out-of-range or
+    negative indices raise ``ValueError`` here rather than silently wrapping
+    into valid rows (a wrapped index simulates the wrong row — and the wrong
+    hit rate — with no error anywhere downstream).
     """
+    validate_indices(single_table_trace, spec.rows_per_table,
+                     what="single_table_trace index")
     n_needed = batch_size * spec.num_tables * spec.lookups_per_sample
     reps = int(np.ceil(n_needed / max(len(single_table_trace), 1)))
     base = np.tile(single_table_trace, reps)[:n_needed]
@@ -136,7 +166,7 @@ def expand_trace(
     rows = np.empty_like(base)
     for t in range(spec.num_tables):
         perm = rng.permutation(spec.rows_per_table)
-        rows[:, t, :] = perm[base[:, t, :] % spec.rows_per_table]
+        rows[:, t, :] = perm[base[:, t, :]]
 
     table_ids = np.broadcast_to(
         np.arange(spec.num_tables, dtype=np.int32)[None, :, None], base.shape

@@ -1,4 +1,11 @@
 from .engine import ServeConfig, build_prefill, build_serve_step, init_cache, ServingEngine
+from .scheduler import (
+    DEGRADE_MODES,
+    ReplayOracle,
+    RobustnessPolicy,
+    ServingScenario,
+    simulate_serving,
+)
 
 __all__ = [
     "ServeConfig",
@@ -6,4 +13,9 @@ __all__ = [
     "build_serve_step",
     "init_cache",
     "ServingEngine",
+    "DEGRADE_MODES",
+    "ReplayOracle",
+    "RobustnessPolicy",
+    "ServingScenario",
+    "simulate_serving",
 ]

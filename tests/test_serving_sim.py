@@ -1,0 +1,325 @@
+"""Request-level serving simulation: generator determinism, the all-off
+identity vs the plain fixed-trace path, inert-policy identities, reproducible
+overload (shed/timeout/retry-storm/degradation), and scenario-sweep
+composition with sharding/checkpointing/fault-injection."""
+import dataclasses
+import os
+
+import numpy as np
+import pytest
+
+from differential import assert_bitwise_equal_results
+from repro.core import (
+    FaultEvent,
+    FaultPlan,
+    FaultTelemetry,
+    TrafficConfig,
+    Workload,
+    generate_arrivals,
+    generate_requests,
+    sweep,
+    tpuv6e,
+)
+from repro.core.memory.system import EmbeddingTrace, MultiCoreMemorySystem
+from repro.core.requests import hot_table_set, lower_batch
+from repro.core.trace import ConcatTrace
+from repro.core.workload import EmbeddingOpSpec
+from repro.serving import (
+    ReplayOracle,
+    RobustnessPolicy,
+    ServingScenario,
+    simulate_serving,
+)
+
+SPEC = EmbeddingOpSpec(
+    num_tables=4, rows_per_table=1000, dim=32, lookups_per_sample=4,
+    dtype_bytes=4,
+)
+WL = Workload(name="serve_wl", embedding_ops=(SPEC,))
+HW = tpuv6e()
+
+STEADY = TrafficConfig(pattern="poisson", mean_gap_cycles=700.0,
+                       num_requests=48, seed=11)
+# Arrival rate far above service capacity: the overload regime every
+# robustness policy exists for.
+OVERLOAD = TrafficConfig(pattern="bursty", mean_gap_cycles=40.0,
+                         num_requests=80, seed=23, burst_len=10)
+
+
+def _ms():
+    return MultiCoreMemorySystem.from_hardware(HW)
+
+
+def _serve(scenario, **kw):
+    return simulate_serving(_ms(), SPEC, scenario, **kw)
+
+
+# --------------------------------------------------------------------------
+# Request generators
+# --------------------------------------------------------------------------
+
+class TestGenerators:
+    @pytest.mark.parametrize("pattern", ["poisson", "diurnal", "bursty"])
+    def test_arrivals_sorted_deterministic(self, pattern):
+        cfg = TrafficConfig(pattern=pattern, mean_gap_cycles=100.0,
+                            num_requests=64, seed=3)
+        a, b = generate_arrivals(cfg), generate_arrivals(cfg)
+        assert np.array_equal(a, b)
+        assert a.dtype == np.int64
+        assert np.all(np.diff(a) >= 0)
+        assert a[0] >= 0
+        c = generate_arrivals(dataclasses.replace(cfg, seed=4))
+        assert not np.array_equal(a, c)
+
+    def test_requests_deterministic_and_in_range(self):
+        cfg = TrafficConfig(num_requests=32, seed=5, tables_per_request=2,
+                            lookups_per_table=3, zipf_drift=0.6,
+                            drift_period=8)
+        r1, r2 = generate_requests(SPEC, cfg), generate_requests(SPEC, cfg)
+        assert len(r1) == 32
+        for a, b in zip(r1, r2):
+            assert a.rid == b.rid and a.arrival == b.arrival
+            assert np.array_equal(a.table_ids, b.table_ids)
+            assert np.array_equal(a.rows, b.rows)
+            assert np.array_equal(a.ranks, b.ranks)
+            assert a.rows.shape == (2, 3)
+            assert a.rows.min() >= 0 and a.rows.max() < SPEC.rows_per_table
+            assert np.array_equal(a.table_ids, np.sort(a.table_ids))
+
+    def test_popularity_drift_rotates_hot_rows(self):
+        """drift_period re-draws the rank->row permutation: the same rank
+        maps to different rows across epochs."""
+        cfg = TrafficConfig(num_requests=32, seed=7, drift_period=16,
+                            zipf_s=1.2)
+        reqs = generate_requests(SPEC, cfg)
+        # epoch 0 = requests [0,16), epoch 1 = [16,32); compare the row that
+        # rank 0 maps to in each (rank 0 occurs often under zipf 1.2)
+        def rank0_rows(rs):
+            out = set()
+            for r in rs:
+                hit = r.ranks == 0
+                out.update(r.rows[hit].tolist())
+            return out
+        e0, e1 = rank0_rows(reqs[:16]), rank0_rows(reqs[16:])
+        assert e0 and e1 and e0 != e1
+
+    def test_hot_table_set_deterministic(self):
+        cfg = TrafficConfig(num_requests=24, seed=9, tables_per_request=2)
+        reqs = generate_requests(SPEC, cfg)
+        h1 = hot_table_set(reqs, SPEC, 0.5)
+        h2 = hot_table_set(reqs, SPEC, 0.5)
+        assert np.array_equal(h1, h2)
+        assert h1.sum() == 2
+
+    def test_traffic_validation(self):
+        with pytest.raises(ValueError):
+            TrafficConfig(pattern="lunar")
+        with pytest.raises(ValueError):
+            TrafficConfig(num_requests=0)
+        with pytest.raises(ValueError):
+            generate_requests(SPEC, TrafficConfig(tables_per_request=99))
+
+
+# --------------------------------------------------------------------------
+# Identity: policies off == plain fixed-trace path
+# --------------------------------------------------------------------------
+
+class TestIdentity:
+    def test_all_off_equals_plain_simulate_embedding(self):
+        """The whole point: with every policy off, the serving simulator's
+        per-batch stats ARE one plain ``simulate_embedding`` call over the
+        arrival-order lowered ConcatTrace — bitwise."""
+        sc = ServingScenario(name="steady", traffic=STEADY, batch_slots=8)
+        res = _serve(sc)
+        reqs = generate_requests(SPEC, STEADY)
+        lowered = [lower_batch(reqs[i:i + 8], SPEC)
+                   for i in range(0, len(reqs), 8)]
+        plain = _ms().simulate_embedding(EmbeddingTrace.from_concat(
+            SPEC, ConcatTrace.from_traces([b.full for b in lowered])))
+        assert_bitwise_equal_results(res.batch_stats, plain,
+                                     "all-off vs plain")
+        assert res.offered == res.completed == len(reqs)
+        assert res.shed == res.timed_out == res.retries == 0
+        assert res.degraded_batches == 0
+        assert res.goodput == 1.0
+
+    @pytest.mark.parametrize("policy", [
+        RobustnessPolicy(admission_watermark=10**9),
+        RobustnessPolicy(deadline_cycles=10**12),
+        RobustnessPolicy(max_retries=3),
+        RobustnessPolicy(degrade_mode="hot_rows_only",
+                         degrade_watermark=10**9),
+        RobustnessPolicy(degrade_mode="cache_bypass",
+                         degrade_watermark=10**9),
+    ])
+    def test_inert_policy_is_identity(self, policy):
+        """A policy that is armed but never triggers leaves no trace: the
+        sequential closed-loop path lands bitwise on the all-off fast path
+        (this is also the prefix-causality proof — the sequential oracle
+        re-simulates growing prefixes and must reproduce the one-shot
+        batched stats exactly)."""
+        base = _serve(ServingScenario(name="s", traffic=STEADY,
+                                      batch_slots=8))
+        got = _serve(ServingScenario(name="s", traffic=STEADY, policy=policy,
+                                     batch_slots=8))
+        assert_bitwise_equal_results(base, got, "inert policy")
+
+    def test_partial_final_batch(self):
+        """Request count not divisible by batch_slots: the final partial
+        batch is served, nothing lost."""
+        cfg = dataclasses.replace(STEADY, num_requests=21)
+        res = _serve(ServingScenario(name="p", traffic=cfg, batch_slots=8))
+        assert res.completed == 21
+        assert res.num_batches == 3
+
+
+# --------------------------------------------------------------------------
+# Reproducible overload
+# --------------------------------------------------------------------------
+
+STORM_POLICY = RobustnessPolicy(
+    admission_watermark=12, deadline_cycles=25_000, max_retries=2,
+    retry_backoff_cycles=2_000.0,
+)
+
+
+class TestOverload:
+    def test_overload_triggers_all_counters(self):
+        sc = ServingScenario(name="storm", traffic=OVERLOAD,
+                             policy=STORM_POLICY, batch_slots=8)
+        res = _serve(sc)
+        assert res.shed > 0
+        assert res.retries > 0
+        # conservation: every failed attempt either retries or abandons
+        assert res.shed + res.timed_out == res.retries + res.abandoned
+        assert res.makespan_cycles > 0
+
+    def test_retry_storm_bitwise_reproducible(self):
+        sc = ServingScenario(name="storm", traffic=OVERLOAD,
+                             policy=STORM_POLICY, batch_slots=8)
+        assert_bitwise_equal_results(_serve(sc), _serve(sc), "retry storm")
+
+    @pytest.mark.parametrize("mode", ["hot_rows_only", "cache_bypass"])
+    def test_degradation_bitwise_reproducible(self, mode):
+        pol = RobustnessPolicy(degrade_mode=mode, degrade_watermark=2,
+                               hot_fraction=0.2, bypass_keep_tables=0.5)
+        sc = ServingScenario(name="deg", traffic=OVERLOAD, policy=pol,
+                             batch_slots=8)
+        a, b = _serve(sc), _serve(sc)
+        assert_bitwise_equal_results(a, b, f"degradation {mode}")
+        assert a.degraded_batches > 0
+        if mode == "hot_rows_only":
+            assert a.dropped_cold_rows > 0
+        else:
+            assert a.bypassed_lookups > 0
+        # degradation sheds work, it never sheds requests
+        assert a.completed == a.offered
+
+    def test_deadline_timeouts_fire(self):
+        pol = RobustnessPolicy(deadline_cycles=1_500)
+        sc = ServingScenario(name="ddl", traffic=OVERLOAD, policy=pol,
+                             batch_slots=8)
+        res = _serve(sc)
+        assert res.timed_out > 0
+        assert res.completed + res.timed_out == res.offered
+        assert res.goodput < 1.0
+
+    def test_policy_validation(self):
+        with pytest.raises(ValueError):
+            RobustnessPolicy(degrade_mode="pray")
+        with pytest.raises(ValueError):
+            RobustnessPolicy(max_retries=-1)
+        with pytest.raises(ValueError):
+            ServingScenario(name="x", traffic=STEADY, batch_slots=0)
+
+
+# --------------------------------------------------------------------------
+# Replay oracle (checkpoint reconstruction seam)
+# --------------------------------------------------------------------------
+
+class TestReplay:
+    def test_replay_reconstructs_bitwise(self):
+        sc = ServingScenario(name="storm", traffic=OVERLOAD,
+                             policy=STORM_POLICY, batch_slots=8)
+        live = _serve(sc)
+        replayed = _serve(sc, oracle=ReplayOracle(live.batch_stats))
+        assert_bitwise_equal_results(live, replayed, "replay")
+
+    def test_replay_misuse_raises(self):
+        sc = ServingScenario(name="s", traffic=STEADY, batch_slots=8)
+        live = _serve(sc)
+        with pytest.raises(RuntimeError, match="exhausted"):
+            _serve(sc, oracle=ReplayOracle(live.batch_stats[:-1]))
+        with pytest.raises(RuntimeError, match="undrained"):
+            _serve(sc, oracle=ReplayOracle(live.batch_stats
+                                           + live.batch_stats[-1:]))
+
+
+# --------------------------------------------------------------------------
+# Scenario axis in sweep(): sharding / checkpoint / fault composition
+# --------------------------------------------------------------------------
+
+SCENARIOS = [
+    ServingScenario(name="steady", traffic=STEADY, batch_slots=8),
+    ServingScenario(name="storm", traffic=OVERLOAD, policy=STORM_POLICY,
+                    batch_slots=8),
+]
+GRID = dict(policies=("spm", "lru"), capacities=(1 << 20,), ways=(8,),
+            scenarios=SCENARIOS)
+
+
+class TestServingSweep:
+    def test_sweep_matches_direct_simulation(self):
+        res = sweep(WL, HW, **GRID)
+        assert res.num_configs == 4
+        for e in res.entries:
+            assert e.config.scenario in ("steady", "storm")
+            assert e.config.label.endswith(f"/sv:{e.config.scenario}")
+            sc = next(s for s in SCENARIOS if s.name == e.config.scenario)
+            hw = HW.with_policy(e.config.policy,
+                                capacity_bytes=e.config.capacity_bytes,
+                                ways=e.config.ways)
+            direct = simulate_serving(
+                MultiCoreMemorySystem.from_hardware(hw), SPEC, sc)
+            assert_bitwise_equal_results(e.result, direct,
+                                         f"sweep parity {e.config.label}")
+        # serving metrics surface through the generic row/best machinery
+        row = res.entries[0].row()
+        for k in ("p50_cycles", "p95_cycles", "p99_cycles", "goodput",
+                  "shed", "sustained_qps"):
+            assert k in row
+        assert res.best("p99_cycles") in res.entries
+
+    def test_sweep_sharded_bitwise(self):
+        ref = sweep(WL, HW, **GRID)
+        got = sweep(WL, HW, devices=2, **GRID)
+        assert got.sharded
+        assert_bitwise_equal_results(ref, got, "sharded serving sweep")
+
+    def test_sweep_checkpoint_resume_bitwise(self, tmp_path):
+        path = str(tmp_path / "serving.ckpt")
+        ref = sweep(WL, HW, **GRID)
+        first = sweep(WL, HW, checkpoint=path, **GRID)
+        resumed = sweep(WL, HW, checkpoint=path, **GRID)
+        assert resumed.resumed_keys == resumed.distinct_memo_keys == 4
+        assert_bitwise_equal_results(ref, first, "ckpt first run")
+        assert_bitwise_equal_results(ref, resumed, "ckpt resume")
+
+    def test_sweep_fault_injection_bitwise(self):
+        ref = sweep(WL, HW, **GRID)
+        tele = FaultTelemetry()
+        plan = FaultPlan(events=(FaultEvent("crash", shard=1, round=0),))
+        got = sweep(WL, HW, devices=2, fault_plan=plan, fault_telemetry=tele,
+                    **GRID)
+        assert_bitwise_equal_results(ref, got, "serving crash failover")
+        assert tele.worker_crashes == 1
+        assert tele.failovers == 1
+
+    def test_sweep_rejects_bad_combinations(self):
+        with pytest.raises(ValueError, match="configs"):
+            sweep(WL, HW, configs=[], **GRID)
+        with pytest.raises(ValueError, match="index_trace"):
+            sweep(WL, HW, index_trace=np.arange(8), **GRID)
+        dup = [SCENARIOS[0], SCENARIOS[0]]
+        with pytest.raises(ValueError, match="duplicate"):
+            sweep(WL, HW, policies=("spm",), scenarios=dup)

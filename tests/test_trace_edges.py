@@ -1,0 +1,173 @@
+"""ConcatTrace per-batch boundary edge cases feeding the serving scheduler,
+plus the trace-construction index-validation guard (out-of-range indices
+raise instead of silently wrapping)."""
+import numpy as np
+import pytest
+
+from repro.core.memory.system import EmbeddingTrace
+from repro.core.trace import (
+    ConcatTrace,
+    FullTrace,
+    expand_trace,
+    generate_zipf_trace,
+    shard_trace,
+    validate_indices,
+)
+from repro.core.workload import EmbeddingOpSpec
+
+SPEC = EmbeddingOpSpec(
+    num_tables=3, rows_per_table=500, dim=32, lookups_per_sample=4,
+    dtype_bytes=4,
+)
+
+
+def _full(spec, batch_size, seed):
+    it = generate_zipf_trace(
+        batch_size * spec.num_tables * spec.lookups_per_sample,
+        spec.rows_per_table, 1.0, seed=seed,
+    )
+    return expand_trace(it, spec, batch_size, seed=seed)
+
+
+def _empty_batch(spec, batch_size=0):
+    return FullTrace(
+        table_ids=np.empty(0, dtype=np.int32),
+        row_ids=np.empty(0, dtype=np.int64),
+        batch_size=batch_size,
+        num_tables=spec.num_tables,
+        lookups_per_sample=spec.lookups_per_sample,
+    )
+
+
+# --------------------------------------------------------------------------
+# Boundary edge cases
+# --------------------------------------------------------------------------
+
+class TestConcatBoundaries:
+    def test_single_batch(self):
+        f = _full(SPEC, 4, seed=0)
+        ct = ConcatTrace.from_traces([f])
+        assert ct.num_batches == 1
+        assert ct.boundaries.tolist() == [0, len(f)]
+        assert ct.lookups_per_batch.tolist() == [len(f)]
+        assert np.array_equal(ct.lookup_batch, np.zeros(len(f), np.int64))
+
+    def test_empty_trace_list_rejected(self):
+        with pytest.raises(ValueError):
+            ConcatTrace.from_traces([])
+
+    def test_empty_batch_mid_stream(self):
+        """A zero-lookup batch (e.g. every lookup degraded away) keeps its
+        boundary slot: attribution stays per batch, no index drift."""
+        a, e, b = _full(SPEC, 2, 0), _empty_batch(SPEC), _full(SPEC, 3, 1)
+        ct = ConcatTrace.from_traces([a, e, b])
+        assert ct.num_batches == 3
+        assert ct.lookups_per_batch.tolist() == [len(a), 0, len(b)]
+        assert ct.boundaries.tolist() == [0, len(a), len(a), len(a) + len(b)]
+        # lookup_batch skips the empty batch but never mis-attributes
+        assert np.array_equal(
+            np.bincount(ct.lookup_batch, minlength=3),
+            np.array([len(a), 0, len(b)]),
+        )
+
+    def test_all_batches_empty(self):
+        ct = ConcatTrace.from_traces([_empty_batch(SPEC), _empty_batch(SPEC)])
+        assert ct.num_batches == 2
+        assert len(ct) == 0
+        assert ct.lookups_per_batch.tolist() == [0, 0]
+
+    def test_empty_batch_simulates(self):
+        """The memory system attributes zero-lookup batches exact-zero stats
+        without disturbing its neighbors (the scheduler can serve a fully
+        degraded batch)."""
+        from repro.core.hardware import tpuv6e
+        from repro.core.memory.system import MultiCoreMemorySystem
+
+        a, b = _full(SPEC, 2, 0), _full(SPEC, 3, 1)
+        ms = MultiCoreMemorySystem.from_hardware(tpuv6e())
+        with_empty = ms.simulate_embedding(EmbeddingTrace.from_concat(
+            SPEC, ConcatTrace.from_traces([a, _empty_batch(SPEC), b])))
+        without = ms.simulate_embedding(EmbeddingTrace.from_concat(
+            SPEC, ConcatTrace.from_traces([a, b])))
+        assert len(with_empty) == 3
+        assert with_empty[1].cache_misses == 0
+        assert with_empty[1].offchip_reads == 0
+        import dataclasses
+        assert (dataclasses.asdict(with_empty[0])
+                == dataclasses.asdict(without[0]))
+
+    @pytest.mark.parametrize("mode", ["batch", "table_hash"])
+    def test_shard_preserves_batch_boundaries(self, mode):
+        """Sharding keeps every batch's lookups inside that batch's slot on
+        every core — per-batch totals across cores reconstruct the parent's
+        boundary structure exactly, heterogeneous batch lengths included."""
+        traces = [_full(SPEC, 5, 0), _full(SPEC, 2, 1), _full(SPEC, 7, 2)]
+        ct = ConcatTrace.from_traces(traces)
+        shards = shard_trace(ct, 2, mode=mode)
+        assert len(shards) == 2
+        for sh in shards:
+            assert sh.concat.num_batches == ct.num_batches
+        per_batch = np.zeros((2, ct.num_batches), dtype=np.int64)
+        for c, sh in enumerate(shards):
+            per_batch[c] = sh.concat.lookups_per_batch
+            # every shard lookup maps back inside its batch's global range
+            lb = sh.concat.lookup_batch
+            gstart = ct.boundaries[:-1][lb]
+            gend = ct.boundaries[1:][lb]
+            assert np.all(sh.lookup_index >= gstart)
+            assert np.all(sh.lookup_index < gend)
+        assert np.array_equal(per_batch.sum(axis=0), ct.lookups_per_batch)
+
+    @pytest.mark.parametrize("mode", ["batch", "table_hash"])
+    def test_shard_empty_batch(self, mode):
+        """An empty batch stays an empty batch on every core."""
+        ct = ConcatTrace.from_traces(
+            [_full(SPEC, 3, 0), _empty_batch(SPEC), _full(SPEC, 3, 1)])
+        for sh in shard_trace(ct, 2, mode=mode):
+            assert sh.concat.num_batches == 3
+            assert sh.concat.lookups_per_batch[1] == 0
+
+
+# --------------------------------------------------------------------------
+# Index-validation guard (regression: no silent modulo wrap)
+# --------------------------------------------------------------------------
+
+class TestIndexValidation:
+    def test_expand_trace_rejects_out_of_range(self):
+        it = np.array([0, 1, SPEC.rows_per_table], dtype=np.int64)
+        with pytest.raises(ValueError, match="out of range"):
+            expand_trace(it, SPEC, batch_size=2)
+
+    def test_expand_trace_rejects_negative(self):
+        it = np.array([0, -1, 2], dtype=np.int64)
+        with pytest.raises(ValueError, match="negative"):
+            expand_trace(it, SPEC, batch_size=2)
+
+    def test_expand_trace_accepts_full_range(self):
+        it = np.array([0, SPEC.rows_per_table - 1], dtype=np.int64)
+        ft = expand_trace(it, SPEC, batch_size=2)
+        assert ft.row_ids.min() >= 0
+        assert ft.row_ids.max() < SPEC.rows_per_table
+
+    def test_embedding_trace_rejects_bad_rows(self):
+        f = _full(SPEC, 2, 0)
+        rows = f.row_ids.copy()
+        rows[0] = SPEC.rows_per_table + 7
+        bad = FullTrace(f.table_ids, rows, f.batch_size, f.num_tables,
+                        f.lookups_per_sample)
+        with pytest.raises(ValueError, match="out of range"):
+            EmbeddingTrace(SPEC, [bad])
+        with pytest.raises(ValueError, match="out of range"):
+            EmbeddingTrace.from_concat(SPEC, ConcatTrace.from_traces([bad]))
+
+    def test_embedding_trace_rejects_bad_table(self):
+        f = _full(SPEC, 2, 0)
+        tabs = f.table_ids.copy()
+        tabs[0] = SPEC.num_tables
+        bad = FullTrace(tabs, f.row_ids, f.batch_size, f.num_tables,
+                        f.lookups_per_sample)
+        with pytest.raises(ValueError, match="table id"):
+            EmbeddingTrace(SPEC, [bad])
+
+    def test_validate_indices_empty_ok(self):
+        validate_indices(np.empty(0, dtype=np.int64), 10)
