@@ -55,12 +55,20 @@ STORM = RobustnessPolicy(admission_watermark=14, deadline_cycles=4_000,
                          max_retries=2, retry_backoff_cycles=3_000.0,
                          degrade_mode="hot_rows_only", degrade_watermark=4,
                          hot_fraction=0.1)
+# Deadline+retry pressure: a deadline far shorter than the queueing delay
+# plus a small backoff, so expired attempts reschedule from timestamps the
+# clock has already passed — the retry-rewind regression shape. The smoke
+# asserts the event timeline stays monotonic.
+DDL_RETRY = RobustnessPolicy(deadline_cycles=500, max_retries=3,
+                             retry_backoff_cycles=100.0)
 
 SCENARIOS = (
     ServingScenario(name="steady_off", traffic=STEADY,
                     batch_slots=BATCH_SLOTS),
     ServingScenario(name="overload_storm", traffic=OVERLOAD, policy=STORM,
                     batch_slots=BATCH_SLOTS),
+    ServingScenario(name="deadline_retry", traffic=OVERLOAD,
+                    policy=DDL_RETRY, batch_slots=4),
 )
 
 
@@ -80,19 +88,31 @@ def main() -> int:
     hw = tpuv6e()
     rows = []
     for sc in SCENARIOS:
+        event_log: list = []
         first = simulate_serving(
-            MultiCoreMemorySystem.from_hardware(hw), SPEC, sc)
+            MultiCoreMemorySystem.from_hardware(hw), SPEC, sc,
+            event_log=event_log)
         second = simulate_serving(
             MultiCoreMemorySystem.from_hardware(hw), SPEC, sc)
         delta = first.diff(second)
         assert delta == {}, f"[{sc.name}] run-to-run drift: {delta}"
         assert first.p99_cycles == second.p99_cycles
+        # Clock monotonicity: retries scheduled from expired deadlines must
+        # never rewind the event timeline (the deadline_retry scenario is
+        # shaped to hit exactly that path).
+        assert all(a <= b for a, b in zip(event_log, event_log[1:])), \
+            f"[{sc.name}] event timeline rewound"
         rows.append(first.summary())
         if sc.name == "steady_off":
             assert sc.policy.all_off
             assert first.shed == 0 and first.timed_out == 0
             assert first.completed == first.offered
             _identity_check(MultiCoreMemorySystem.from_hardware(hw), first)
+        elif sc.name == "deadline_retry":
+            assert first.timed_out > 0, first.summary()
+            assert first.retries > 0, first.summary()
+            assert first.shed + first.timed_out \
+                == first.retries + first.abandoned, first.summary()
         else:
             # Overload must actually overload — and the failed-attempt
             # ledger must balance: every shed/timeout either retried or

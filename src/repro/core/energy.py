@@ -28,6 +28,10 @@ class EnergyTable:
     onchip_write_per_byte: float = 0.06
     offchip_per_byte: float = 31.2        # HBM2e ~3.9 pJ/bit
     leakage_pj_per_cycle: float = 50.0
+    # One full page-table walk (NeuMMU-style translation stage): a few
+    # dependent DRAM/cache accesses by the walker. TLB *lookups* ride the
+    # SRAM numbers above and are not billed separately.
+    tlb_walk_pj: float = 120.0
 
 
 @dataclass
@@ -37,6 +41,7 @@ class EnergyBreakdown:
     onchip_pj: float = 0.0
     offchip_pj: float = 0.0
     leakage_pj: float = 0.0
+    translation_pj: float = 0.0   # page-table walks (0.0 without translation)
 
     @property
     def total_pj(self) -> float:
@@ -46,6 +51,7 @@ class EnergyBreakdown:
             + self.onchip_pj
             + self.offchip_pj
             + self.leakage_pj
+            + self.translation_pj
         )
 
     def as_dict(self) -> Dict[str, float]:
@@ -55,6 +61,7 @@ class EnergyBreakdown:
             "onchip_pj": self.onchip_pj,
             "offchip_pj": self.offchip_pj,
             "leakage_pj": self.leakage_pj,
+            "translation_pj": self.translation_pj,
             "total_pj": self.total_pj,
         }
 
@@ -68,6 +75,7 @@ def estimate_energy(
     onchip_write_bytes: float,
     offchip_bytes: float,
     total_cycles: float,
+    tlb_walks: float = 0.0,
     table: EnergyTable = EnergyTable(),
 ) -> EnergyBreakdown:
     return EnergyBreakdown(
@@ -79,4 +87,5 @@ def estimate_energy(
         ),
         offchip_pj=offchip_bytes * table.offchip_per_byte,
         leakage_pj=total_cycles * table.leakage_pj_per_cycle,
+        translation_pj=tlb_walks * table.tlb_walk_pj,
     )

@@ -174,6 +174,10 @@ def assemble_result(
             br.cache_misses += s.cache_misses
             br.dram_row_hits += s.dram_row_hits
             br.dram_row_misses += s.dram_row_misses
+            br.tlb_hits += s.tlb_hits
+            br.tlb_misses += s.tlb_misses
+            br.tlb_walks += s.tlb_walks
+            br.translation_cycles += s.translation_cycles
             br.vector_ops += int(spec.reduction_flops(workload.batch_size))
         br.total_cycles = br.embedding_cycles + matrix.cycles
         total_vec_ops += br.vector_ops
@@ -188,6 +192,7 @@ def assemble_result(
         onchip_write_bytes=result.onchip_writes * line,
         offchip_bytes=result.offchip_reads * line,
         total_cycles=result.total_cycles,
+        tlb_walks=float(result.tlb_walks),
         table=energy_table,
     )
     result.energy_pj = energy.total_pj

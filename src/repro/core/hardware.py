@@ -108,6 +108,107 @@ PLACEMENTS = ("interleave", "table_rank", "hot_replicate")
 # execution strategy, never results.
 CACHE_BACKENDS = ("scan", "pallas", "stack", "stack_pallas")
 
+# TLB replacement policies the analytic translation engine supports
+# (memory/tlb.py): LRU via the stack-distance engine, FIFO via the
+# compressed per-set engine — the same machinery as the on-chip cache.
+TLB_REPLACEMENTS = ("lru", "fifo")
+
+
+@dataclass(frozen=True)
+class TranslationConfig:
+    """NeuMMU-style address-translation stage (PAPERS.md, arXiv:1911.06859).
+
+    Embedding gathers are the worst case for NPU address translation —
+    irregular, data-dependent, TLB-hostile — so the simulator models a
+    central MMU at the memory-controller side of the hierarchy: every
+    off-chip miss line is translated through a set-associative L1 TLB
+    (``entries`` x ``ways`` over ``page_bytes`` pages), optionally backed
+    by a unified L2 TLB; L1 misses pay the L2 lookup, L2 misses pay a full
+    ``walk_latency_cycles`` page-table walk. Translation is a *pure trace
+    transform* between row classification and DRAM request construction
+    (the ``trace.PlacementMap`` mold), so it composes untouched with every
+    cache backend, placement policy, cluster topology, and the serving
+    path. ``HardwareConfig.translation = None`` (the default) is the exact
+    identity — differential-enforced, like every prior axis.
+
+    Build through ``HardwareConfig.with_translation`` for the same
+    validation-at-construction posture as the other axes.
+    """
+
+    entries: int = 64                 # L1 TLB entries
+    ways: int = 4                     # L1 associativity
+    page_bytes: int = 4096            # translation granularity
+    walk_latency_cycles: int = 100    # full page-table walk (charged per walk)
+    l2_entries: int = 0               # 0 = no L2 TLB
+    l2_ways: int = 8
+    l2_latency_cycles: int = 8        # L2 lookup, charged per L1 miss
+    replacement: str = "lru"
+
+    def __post_init__(self) -> None:
+        if self.entries < 1:
+            raise ValueError(f"TLB entries must be >= 1, got {self.entries}")
+        if self.ways < 1:
+            raise ValueError(f"TLB ways must be >= 1, got {self.ways}")
+        if self.entries % self.ways:
+            raise ValueError(
+                f"TLB entries ({self.entries}) must be a multiple of "
+                f"ways ({self.ways})")
+        if self.page_bytes < 1 or (self.page_bytes & (self.page_bytes - 1)):
+            raise ValueError(
+                f"page_bytes must be a power of two, got {self.page_bytes}")
+        if self.walk_latency_cycles < 0:
+            raise ValueError("walk_latency_cycles must be >= 0")
+        if self.l2_entries < 0:
+            raise ValueError("l2_entries must be >= 0")
+        if self.l2_entries:
+            if self.l2_ways < 1:
+                raise ValueError(f"l2_ways must be >= 1, got {self.l2_ways}")
+            if self.l2_entries % self.l2_ways:
+                raise ValueError(
+                    f"l2_entries ({self.l2_entries}) must be a multiple of "
+                    f"l2_ways ({self.l2_ways})")
+        if self.l2_latency_cycles < 0:
+            raise ValueError("l2_latency_cycles must be >= 0")
+        if self.replacement not in TLB_REPLACEMENTS:
+            raise ValueError(
+                f"unknown TLB replacement {self.replacement!r}; "
+                f"options: {TLB_REPLACEMENTS}")
+
+    @property
+    def num_sets(self) -> int:
+        return max(1, self.entries // self.ways)
+
+    @property
+    def l2_num_sets(self) -> int:
+        return max(1, self.l2_entries // self.l2_ways) if self.l2_entries else 0
+
+    @property
+    def reach_bytes(self) -> int:
+        """Address span one full L1 TLB maps (entries x page size)."""
+        return self.entries * self.page_bytes
+
+    @property
+    def miss_latency_cycles(self) -> int:
+        """Cycles an L1-missing, fully-cold translation costs (the L2
+        lookup when an L2 exists, plus the page walk)."""
+        return self.walk_latency_cycles + (
+            self.l2_latency_cycles if self.l2_entries else 0)
+
+    @property
+    def key(self) -> tuple:
+        """Canonical value tuple (sweep memo keys / checkpoint
+        fingerprints); ``from_key`` inverts it."""
+        return (
+            int(self.entries), int(self.ways), int(self.page_bytes),
+            int(self.walk_latency_cycles), int(self.l2_entries),
+            int(self.l2_ways), int(self.l2_latency_cycles),
+            str(self.replacement),
+        )
+
+    @classmethod
+    def from_key(cls, key: tuple) -> "TranslationConfig":
+        return cls(*key)
+
 
 @dataclass(frozen=True)
 class MatrixUnit:
@@ -212,6 +313,11 @@ class HardwareConfig:
     # passes for LRU, compressed per-set engines for srrip/fifo) — results
     # are bit-exact across all backends.
     cache_backend: str = "stack"
+    # Address-translation stage between row classification and DRAM request
+    # construction (see TranslationConfig). None — the default — skips
+    # translation entirely and is bitwise identical to the pre-translation
+    # engine (differential-enforced). Build through ``with_translation``.
+    translation: "TranslationConfig | None" = None
 
     def cycles_to_seconds(self, cycles: float) -> float:
         return cycles / (self.clock_ghz * 1e9)
@@ -312,6 +418,40 @@ class HardwareConfig:
                 f"unknown cache backend {backend!r}; options: {CACHE_BACKENDS}"
             )
         return dataclasses.replace(self, cache_backend=backend)
+
+    def with_translation(
+        self, translation: "TranslationConfig | None" = None, **tlb_kw
+    ) -> "HardwareConfig":
+        """Attach (or clear) the address-translation stage.
+
+        Either pass a ready ``TranslationConfig``, or keyword fields to
+        build one (``with_translation(entries=128, page_bytes=4096)``);
+        ``with_translation(None)`` with no keywords clears the stage back
+        to the exact-identity default. Unknown keys raise with the valid
+        field list, pointing misplaced ``HardwareConfig`` fields at the
+        right builder — the ``with_onchip`` idiom.
+        """
+        if translation is not None and tlb_kw:
+            raise ValueError(
+                "pass either a TranslationConfig or keyword fields, not both")
+        if translation is None and tlb_kw:
+            valid = {f.name for f in dataclasses.fields(TranslationConfig)}
+            unknown = set(tlb_kw) - valid
+            if unknown:
+                top_level = {f.name for f in dataclasses.fields(HardwareConfig)}
+                hint = ""
+                misplaced = sorted(unknown & top_level)
+                if misplaced:
+                    hint = (
+                        f"; {misplaced} are HardwareConfig fields — use"
+                        " .replace() instead"
+                    )
+                raise ValueError(
+                    f"unknown TranslationConfig parameter(s) {sorted(unknown)};"
+                    f" valid: {sorted(valid)}{hint}"
+                )
+            translation = TranslationConfig(**tlb_kw)
+        return dataclasses.replace(self, translation=translation)
 
     def with_policy_mix(
         self, mix: "dict[int, OnChipPolicy | str] | None"

@@ -59,7 +59,7 @@ entirely and is bitwise identical to the historical engine (test-enforced).
 from __future__ import annotations
 
 from dataclasses import dataclass, field
-from typing import Callable, Dict, List, Optional, Sequence, Union
+from typing import Callable, Dict, List, Optional, Sequence, Tuple, Union
 
 import numpy as np
 
@@ -91,6 +91,7 @@ from .policies import (
     get_policy,
     resolve_policy_mix,
 )
+from .tlb import charge_cache_lookup
 
 
 # --------------------------------------------------------------------------
@@ -144,6 +145,12 @@ class EmbeddingBatchStats:
     cache_misses: int = 0
     dram_row_hits: int = 0
     dram_row_misses: int = 0
+    # Address-translation detail (all zero when hw.translation is None —
+    # the exact-identity default; see memory/tlb.py).
+    tlb_hits: int = 0            # L1 TLB hits (free, pipelined)
+    tlb_misses: int = 0          # L1 TLB misses
+    tlb_walks: int = 0           # full page-table walks
+    translation_cycles: float = 0.0   # stall added to the DRAM path
     per_core: Optional[List[CoreBatchStats]] = None   # multi-core detail
 
 
@@ -178,6 +185,7 @@ class EmbeddingTrace:
         self._atraces: Dict[int, AddressTrace] = {}
         self._hot_vecs: Optional[np.ndarray] = None
         self._unique_lines: Dict[int, int] = {}
+        self._unique_pages: Dict[Tuple[int, int], np.ndarray] = {}
 
     @classmethod
     def from_concat(cls, spec: EmbeddingOpSpec, concat: ConcatTrace) -> "EmbeddingTrace":
@@ -237,6 +245,25 @@ class EmbeddingTrace:
             self._unique_lines[line_bytes] = n
         return n
 
+    def unique_pages(self, line_bytes: int, page_bytes: int) -> np.ndarray:
+        """Distinct translation pages this op's whole trace touches — the
+        page footprint, sorted. The sweep's TLB memo-key canonicalization
+        feeds it to ``tlb.translation_saturated``: every miss stream is a
+        subsequence of this trace, so a TLB the footprint provably never
+        evicts from classifies every config identically (first-touch-only
+        walks). Hardware-independent apart from the line/page geometry, so
+        cached like the line footprint."""
+        key = (line_bytes, page_bytes)
+        up = self._unique_pages.get(key)
+        if up is None:
+            from .tlb import tlb_pages
+
+            up = np.unique(
+                tlb_pages(self.address_trace(line_bytes).lines,
+                          line_bytes, page_bytes))
+            self._unique_pages[key] = up
+        return up
+
     @property
     def hot_vec_ids(self) -> np.ndarray:
         """Profiled hot vector set (sorted ids) for ``hot_replicate``
@@ -274,6 +301,11 @@ class ClassifiedStream:
     # Shared memo for the group-independent half of the placement transform
     # (PlacementMap.place), reused across placement siblings of this stream.
     place_cache: dict = field(default_factory=dict)
+    # Memoized translation charges keyed by TranslationConfig.key —
+    # translation observes the VIRTUAL miss stream (pre-placement), so
+    # placement/topology siblings sharing this stream share each TLB
+    # configuration's charge too (memory/tlb.py).
+    tlb_cache: dict = field(default_factory=dict)
 
 
 def _lane_context(
@@ -362,6 +394,10 @@ class _ClusterClassified:
     # (PlacementMap.place) — scoped to this classification's miss stream, so
     # placement siblings reuse the per-line base instead of recomputing it.
     place_cache: dict = field(default_factory=dict)
+    # Memoized translation charges (see ClassifiedStream.tlb_cache): the
+    # central MMU observes the merged virtual miss stream, so the charge is
+    # shared across placement siblings of this classification.
+    tlb_cache: dict = field(default_factory=dict)
 
 
 @dataclass
@@ -615,7 +651,7 @@ class MemorySystem:
 
     # -- stats assembly -----------------------------------------------------
     def _assemble_stats(
-        self, etrace: EmbeddingTrace, cs: ClassifiedStream, drams
+        self, etrace: EmbeddingTrace, cs: ClassifiedStream, drams, tlb=None
     ) -> List[EmbeddingBatchStats]:
         hw = self.hw
         line = hw.onchip.line_bytes
@@ -639,8 +675,30 @@ class MemorySystem:
             # on-chip service, off-chip service and pooling overlap in a
             # double-buffered stream; the slowest stage bounds the batch.
             s.cycles = max(s.onchip_cycles, s.dram_cycles, s.vector_cycles)
+            if tlb is not None:
+                # Page walks serialize with the off-chip path: a miss line
+                # cannot issue to DRAM before its physical address exists.
+                s.tlb_hits = int(tlb.hits[b])
+                s.tlb_misses = int(tlb.misses[b])
+                s.tlb_walks = int(tlb.walks[b])
+                s.translation_cycles = float(tlb.cycles[b])
+                s.cycles = max(
+                    s.onchip_cycles,
+                    s.dram_cycles + s.translation_cycles,
+                    s.vector_cycles,
+                )
             stats.append(s)
         return stats
+
+    def _charge_translation(self, cs: ClassifiedStream):
+        """Memoized TLB charge for this stream, or None without translation."""
+        tcfg = self.hw.translation
+        if tcfg is None:
+            return None
+        return charge_cache_lookup(
+            cs.tlb_cache, cs.miss_lines, cs.miss_batch, cs.num_batches,
+            self.hw.onchip.line_bytes, tcfg,
+        )
 
     # -- deferred-DRAM pipeline ---------------------------------------------
     def classify_for_pending(
@@ -701,6 +759,10 @@ class MemorySystem:
         return pm.place(miss_lines, miss_src, cache=place_cache)
 
     def _pending(self, etrace: EmbeddingTrace, cs: ClassifiedStream) -> PendingEmbedding:
+        # Translation observes the VIRTUAL miss stream, before PlacementMap
+        # relocates lines — the charge is placement-invariant and memoized
+        # on the classified stream across translation-sibling configs.
+        tlb = self._charge_translation(cs)
         req = DramRequest(
             lines=self._place_misses(
                 etrace, cs.miss_lines, None, place_cache=cs.place_cache
@@ -713,7 +775,9 @@ class MemorySystem:
         )
         return PendingEmbedding(
             request=req,
-            _finalize=lambda drams, finish: self._assemble_stats(etrace, cs, drams),
+            _finalize=lambda drams, finish: self._assemble_stats(
+                etrace, cs, drams, tlb
+            ),
         )
 
     # -- multi-batch embedding-op pipeline ----------------------------------
@@ -911,11 +975,13 @@ class MultiCoreMemorySystem:
                 miss_pos=all_pos,
             )
 
-        def finalize(drams, core_finish) -> List[EmbeddingBatchStats]:
+        def finalize(drams, core_finish, tlb=None) -> List[EmbeddingBatchStats]:
             # Counts/DRAM fields follow the single-core accounting contract
             # verbatim; only the cycle model (slowest core bounds the batch)
             # and the per-core detail are cluster-specific overrides below.
-            stats = self.core._assemble_stats(etrace, merged, drams)
+            # ``tlb`` is injected per-config by ``pending_from`` (translation
+            # is a per-config axis; this closure is shared across siblings).
+            stats = self.core._assemble_stats(etrace, merged, drams, tlb)
             onchip_bw = max(hw.onchip.read_bw_bytes_per_cycle, 1)
             lat = hw.onchip.latency_cycles
             for b, s in enumerate(stats):
@@ -941,6 +1007,13 @@ class MultiCoreMemorySystem:
                 s.vector_cycles = max(pc.vector_cycles for pc in per_core)
                 s.per_core = per_core
                 s.cycles = max(s.onchip_cycles, s.dram_cycles, s.vector_cycles)
+                if tlb is not None:
+                    # Central MMU: walks serialize with the shared DRAM path.
+                    s.cycles = max(
+                        s.onchip_cycles,
+                        s.dram_cycles + s.translation_cycles,
+                        s.vector_cycles,
+                    )
             return stats
 
         return _ClusterClassified(
@@ -960,6 +1033,15 @@ class MultiCoreMemorySystem:
         if isinstance(clas, ClassifiedStream):
             # Degenerate single-core cluster.
             return self.core.pending_from(etrace, clas)
+        # The central MMU translates the merged VIRTUAL miss stream (global
+        # interleaved order, pre-placement) — per-config, since siblings
+        # sharing the classification can carry different TLBs; memoized on
+        # the classification so equal TLB configs translate once.
+        tcfg = self.hw.translation
+        tlb = None if tcfg is None else charge_cache_lookup(
+            clas.tlb_cache, clas.merged.miss_lines, clas.merged.miss_batch,
+            etrace.num_batches, self.hw.onchip.line_bytes, tcfg,
+        )
         return PendingEmbedding(
             request=DramRequest(
                 # Placement routes each core's misses to its affine channel
@@ -976,7 +1058,7 @@ class MultiCoreMemorySystem:
                 num_sources=self.hw.num_cores,
                 model=self.dram,
             ),
-            _finalize=clas.finalize,
+            _finalize=lambda drams, finish: clas.finalize(drams, finish, tlb),
         )
 
     def prepare_embedding(

@@ -38,6 +38,7 @@ __all__ = [
     "BatchLowering",
     "Request",
     "TrafficConfig",
+    "drift_exponents",
     "generate_arrivals",
     "generate_requests",
     "hot_table_set",
@@ -71,10 +72,15 @@ class TrafficConfig:
       all of them) with that many pooled lookups per touched table.
     * ``zipf_s`` + ``zipf_drift`` — popularity skew at stream start, and a
       linear drift of the exponent across the stream (popularity sharpens
-      or flattens over the "day").
+      or flattens over the "day"). The drifting exponent is *quantized to
+      drift epochs* (see ``drift_exponents``): every request in an epoch
+      shares one exponent, so the per-exponent CDF cache stays bounded by
+      the epoch count instead of growing one entry per request.
     * ``drift_period`` — every that-many requests the hot-id permutation is
-      re-drawn (which rows are hot rotates, the cache's working set moves);
-      0 keeps one permutation for the whole stream.
+      re-drawn (which rows are hot rotates, the cache's working set moves)
+      and, when drifting, the Zipf exponent steps to its next value; 0 keeps
+      one permutation for the whole stream (a drifting exponent then steps
+      on a fixed ``_DRIFT_GRID``-epoch grid).
     """
 
     pattern: str = "poisson"
@@ -185,6 +191,34 @@ def _zipf_cdf(num_rows: int, s: float, cache: Dict[float, np.ndarray]) -> np.nda
     return cdf
 
 
+# Epoch grid for a drifting exponent when drift_period is 0 (no explicit
+# epoch length configured): the stream is cut into this many equal epochs.
+_DRIFT_GRID = 64
+
+
+def drift_exponents(cfg: TrafficConfig) -> np.ndarray:
+    """float64 (num_requests,) — each request's Zipf exponent.
+
+    With ``zipf_drift == 0`` every entry is exactly ``cfg.zipf_s`` (the
+    generated stream is bitwise identical to a drift-free config; test-
+    enforced). With drift, the linear schedule ``zipf_s + zipf_drift *
+    (i / (n-1))`` is evaluated at each drift epoch's *first* request and
+    held constant across the epoch (epoch length = ``drift_period``, or an
+    ``n/_DRIFT_GRID`` grid when no period is configured). Distinct values
+    are therefore bounded by the epoch count — which is what keeps the
+    per-exponent CDF cache in ``generate_requests`` bounded and actually
+    hitting, instead of recomputing an O(rows_per_table) cumsum per request.
+    """
+    n = cfg.num_requests
+    if cfg.zipf_drift == 0.0:
+        return np.full(n, float(cfg.zipf_s))
+    period = cfg.drift_period if cfg.drift_period > 0 else max(
+        1, -(-n // _DRIFT_GRID))
+    i = np.arange(n, dtype=np.int64)
+    epoch_start = (i // period) * period
+    return cfg.zipf_s + cfg.zipf_drift * (epoch_start / max(n - 1, 1))
+
+
 def _epoch_perm(
     seed: int, epoch: int, table: int, num_rows: int,
     cache: Dict[Tuple[int, int], np.ndarray],
@@ -211,20 +245,24 @@ def generate_requests(
     """
     arrivals = generate_arrivals(cfg)
     n = cfg.num_requests
-    tpr = cfg.tables_per_request or spec.num_tables
+    # `is None` (not falsy-or): an explicit 0 must hit the range error below,
+    # not silently mean "unset".
+    tpr = (spec.num_tables if cfg.tables_per_request is None
+           else cfg.tables_per_request)
     if not (1 <= tpr <= spec.num_tables):
         raise ValueError(
             f"tables_per_request={tpr} outside [1, {spec.num_tables}]")
-    lpt = cfg.lookups_per_table or spec.lookups_per_sample
+    lpt = (spec.lookups_per_sample if cfg.lookups_per_table is None
+           else cfg.lookups_per_table)
     if lpt < 1:
         raise ValueError("lookups_per_table must be >= 1")
 
     cdf_cache: Dict[float, np.ndarray] = {}
     perm_cache: Dict[Tuple[int, int], np.ndarray] = {}
-    denom = max(n - 1, 1)
+    exponents = drift_exponents(cfg)
     out: List[Request] = []
     for i in range(n):
-        s_i = cfg.zipf_s + cfg.zipf_drift * (i / denom)
+        s_i = float(exponents[i])
         epoch = (i // cfg.drift_period) if cfg.drift_period > 0 else 0
         cdf = _zipf_cdf(spec.rows_per_table, s_i, cdf_cache)
         rng = np.random.default_rng((cfg.seed, _SHAPE_TAG, i))

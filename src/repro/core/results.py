@@ -28,6 +28,11 @@ class BatchResult:
     cache_misses: int = 0
     dram_row_hits: int = 0
     dram_row_misses: int = 0
+    # Address-translation detail (all zero when hw.translation is None).
+    tlb_hits: int = 0
+    tlb_misses: int = 0
+    tlb_walks: int = 0
+    translation_cycles: float = 0.0
 
     @property
     def onchip_accesses(self) -> int:
@@ -96,6 +101,22 @@ class SimResult:
     def cache_misses(self) -> int:
         return sum(b.cache_misses for b in self.batches)
 
+    @property
+    def tlb_hits(self) -> int:
+        return sum(b.tlb_hits for b in self.batches)
+
+    @property
+    def tlb_misses(self) -> int:
+        return sum(b.tlb_misses for b in self.batches)
+
+    @property
+    def tlb_walks(self) -> int:
+        return sum(b.tlb_walks for b in self.batches)
+
+    @property
+    def translation_cycles(self) -> float:
+        return sum(b.translation_cycles for b in self.batches)
+
     def summary(self) -> Dict:
         return {
             "workload": self.workload,
@@ -113,6 +134,10 @@ class SimResult:
             "onchip_ratio": self.onchip_ratio,
             "cache_hits": self.cache_hits,
             "cache_misses": self.cache_misses,
+            "tlb_hits": self.tlb_hits,
+            "tlb_misses": self.tlb_misses,
+            "tlb_walks": self.tlb_walks,
+            "translation_cycles": self.translation_cycles,
             "energy_pj": self.energy_pj,
             "num_batches": len(self.batches),
         }
@@ -238,14 +263,21 @@ class ServingResult:
         return float(self.service_cycles.mean())
 
     # ---- throughput -------------------------------------------------------
+    # The scheduler never emits makespan_cycles == 0 (it clamps to >= 1),
+    # but externally-constructed / journal-replayed results can carry it —
+    # nan, like the other empty-distribution properties, not a raise.
     @property
     def sustained_qps_per_mcycle(self) -> float:
         """Completed requests per million cycles — clock-independent."""
+        if self.makespan_cycles == 0:
+            return float("nan")
         return self.completed / (self.makespan_cycles / 1e6)
 
     @property
     def sustained_qps(self) -> float:
         """Completed requests per wall second at ``clock_ghz``."""
+        if self.makespan_cycles == 0:
+            return float("nan")
         return self.completed / (self.makespan_cycles / (self.clock_ghz * 1e9))
 
     @property

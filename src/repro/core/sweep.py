@@ -58,7 +58,12 @@ MemorySystem with shared-DRAM contention — and the NUMA placement axes
 ``channel_affinities`` / ``placements`` (symmetric | per_core | per_table x
 interleave | table_rank | hot_replicate), which participate in the memo keys
 and ride the same batched ``dram_timing_many`` dispatch (placement is pure
-address remapping upstream of DRAM timing).
+address remapping upstream of DRAM timing) — plus the address-translation
+axis ``translations`` (``TranslationConfig`` | None): translation is a pure
+charge on the classified miss stream, so translation siblings share ONE
+classification, ``translation=None`` keys exactly like the base grid, and
+TLBs whose reach saturates the slice's page footprint collapse onto one
+first-touch-only memo key (``memory.tlb.translation_saturated``).
 
 Scaling the sweep itself (the "week-long sweeps that survive preemption"
 posture — see docs/architecture.md "Scaling the DSE"):
@@ -115,9 +120,16 @@ from .engine import (
     build_embedding_traces,
     summarize_matrix_ops,
 )
-from .hardware import HardwareConfig, OnChipPolicy, Topology, tpuv6e
+from .hardware import (
+    HardwareConfig,
+    OnChipPolicy,
+    Topology,
+    TranslationConfig,
+    tpuv6e,
+)
 from .memory.dram import dram_timing_many
 from .memory.policies import available_policies
+from .memory.tlb import translation_saturated
 from .memory.system import (
     MemorySystem,
     classify_embedding_many,
@@ -135,6 +147,30 @@ DEFAULT_POLICIES = ("spm", "lru", "srrip", "fifo", "pinning")
 # key instead of re-timing byte-identical stats per capacity.
 _CAP_SATURATED = "cap_saturated"
 
+# Canonical memo-key marker for a saturated TLB (reach >= the slice's page
+# footprint in every set): the charge collapses to first-touch-only walks,
+# identical for EVERY saturated geometry — see ``memory.tlb.
+# translation_saturated``. Key carries the two parameters the collapsed
+# charge still depends on: (marker, page_bytes, miss_latency_cycles).
+_TLB_SATURATED = "tlb_sat"
+
+
+def _tr_key(tr: "TranslationConfig | None") -> tuple:
+    """Canonical translation-axis key: ``()`` for off (kept a tuple, not
+    None, so combo lists stay sortable in checkpoint fingerprints), else
+    the config's primitive 8-tuple."""
+    if tr is None:
+        return ()
+    if not isinstance(tr, TranslationConfig):
+        raise TypeError(
+            f"translations entries must be TranslationConfig or None, "
+            f"got {type(tr).__name__}")
+    return tr.key
+
+
+def _tr_from_key(trk: tuple) -> Optional[TranslationConfig]:
+    return None if not trk else TranslationConfig.from_key(trk)
+
 
 @dataclass(frozen=True)
 class SweepConfig:
@@ -149,6 +185,9 @@ class SweepConfig:
     topology: str = "private"
     channel_affinity: str = "symmetric"
     placement: str = "interleave"
+    # Address-translation layer (None = virtual==physical, the exact
+    # pre-translation engine; see ``hardware.TranslationConfig``).
+    translation: Optional[TranslationConfig] = None
     # Serving-scenario name when this grid point came from a scenario sweep
     # (``sweep(scenarios=...)``); "" on plain fixed-trace sweeps.
     scenario: str = ""
@@ -161,6 +200,11 @@ class SweepConfig:
             base += f"/{self.num_cores}c-{self.topology}"
         if self.channel_affinity != "symmetric" or self.placement != "interleave":
             base += f"/{self.channel_affinity}-{self.placement}"
+        if self.translation is not None:
+            t = self.translation
+            base += f"/tlb:{t.entries}e{t.ways}w-{t.page_bytes}p"
+            if t.l2_entries:
+                base += f"+l2:{t.l2_entries}e"
         if self.scenario:
             base += f"/sv:{self.scenario}"
         return base
@@ -178,6 +222,10 @@ class SweepEntry:
     def row(self) -> Dict:
         """Flat record: config fields + result summary (JSON/CSV friendly)."""
         d = dict(asdict(self.config))
+        # Keep the record flat: the translation axis serializes to its
+        # canonical key string ("" when off), not a nested dict.
+        tr = self.config.translation
+        d["translation"] = "" if tr is None else ":".join(map(str, tr.key))
         d.update(self.result.summary())
         return d
 
@@ -219,13 +267,14 @@ class SweepResult:
             if c.policy == baseline_policy:
                 base[(c.workload, c.capacity_bytes, c.ways, c.zipf_s,
                       c.num_cores, c.topology, c.channel_affinity,
-                      c.placement, c.scenario)] = e.result.total_cycles
+                      c.placement, _tr_key(c.translation),
+                      c.scenario)] = e.result.total_cycles
         out = []
         for e in self.entries:
             c = e.config
             ref = base.get((c.workload, c.capacity_bytes, c.ways, c.zipf_s,
                             c.num_cores, c.topology, c.channel_affinity,
-                            c.placement, c.scenario))
+                            c.placement, _tr_key(c.translation), c.scenario))
             if ref is None:
                 continue
             r = e.row()
@@ -268,9 +317,14 @@ def _resolve_axes(
     topologies,
     channel_affinities,
     placements,
+    translations=None,
 ) -> Tuple[tuple, ...]:
-    """Normalize + validate the seven hardware axes (shared by ``sweep`` and
-    ``grid_configs`` so the exhaustive list can never drift from the engine)."""
+    """Normalize + validate the eight hardware axes (shared by ``sweep`` and
+    ``grid_configs`` so the exhaustive list can never drift from the engine).
+
+    The translation axis is carried as canonical key tuples (``()`` = off),
+    so combos stay hashable/sortable for memo keys and checkpoint
+    fingerprints; entries must be ``TranslationConfig`` or ``None``."""
     pol_names = tuple(
         p.value if isinstance(p, OnChipPolicy) else str(p)
         for p in _as_tuple(policies, DEFAULT_POLICIES)
@@ -288,7 +342,10 @@ def _resolve_axes(
         str(a) for a in _as_tuple(channel_affinities, (base_hw.channel_affinity,))
     )
     plc_t = tuple(str(p) for p in _as_tuple(placements, (base_hw.placement,)))
-    return pol_names, caps, ways_t, cores_t, topo_t, aff_t, plc_t
+    tr_t = tuple(
+        _tr_key(t) for t in _as_tuple(translations, (base_hw.translation,))
+    )
+    return pol_names, caps, ways_t, cores_t, topo_t, aff_t, plc_t, tr_t
 
 
 def grid_configs(
@@ -302,6 +359,7 @@ def grid_configs(
     topologies: Optional[Sequence[Union[str, Topology]]] = None,
     channel_affinities: Optional[Sequence[str]] = None,
     placements: Optional[Sequence[str]] = None,
+    translations: Optional[Sequence[Optional[TranslationConfig]]] = None,
 ) -> List[SweepConfig]:
     """The exhaustive ``SweepConfig`` list ``sweep()`` evaluates for these
     axes, in sweep entry order — ``sweep(wls, hw, configs=grid_configs(...))``
@@ -312,17 +370,19 @@ def grid_configs(
     if not wls:
         raise ValueError("need at least one workload")
     axes = _resolve_axes(base_hw, policies, capacities, ways, num_cores,
-                         topologies, channel_affinities, placements)
+                         topologies, channel_affinities, placements,
+                         translations)
     zipfs = _as_tuple(zipf_s, (0.8,))
     return [
         SweepConfig(
             policy=pol, capacity_bytes=cap, ways=w, workload=wl.name,
             zipf_s=z, num_cores=nc, topology=topo,
             channel_affinity=aff, placement=plc,
+            translation=_tr_from_key(trk),
         )
         for wl in wls
         for z in zipfs
-        for pol, cap, w, nc, topo, aff, plc in itertools.product(*axes)
+        for pol, cap, w, nc, topo, aff, plc, trk in itertools.product(*axes)
     ]
 
 
@@ -331,10 +391,11 @@ def grid_configs(
 # --------------------------------------------------------------------------
 
 # One slice = every grid point sharing (workload, zipf): they share traces,
-# the matrix summary, and the memo-key space. ``combos`` are the seven
-# hardware-axis values per grid point; ``indices`` the entries' positions in
-# the final result (so an explicit ``configs`` list keeps its order).
-_Combo = Tuple[str, int, int, int, str, str, str]
+# the matrix summary, and the memo-key space. ``combos`` are the eight
+# hardware-axis values per grid point (the last a canonical translation key
+# tuple, ``()`` = off); ``indices`` the entries' positions in the final
+# result (so an explicit ``configs`` list keeps its order).
+_Combo = Tuple[str, int, int, int, str, str, str, tuple]
 
 
 @dataclass
@@ -383,7 +444,7 @@ def _slices_from_configs(wls, configs: Sequence[SweepConfig]) -> List[_Slice]:
             sl = slices[sid] = _Slice(wl, float(c.zipf_s), [], [])
         sl.combos.append((c.policy, c.capacity_bytes, c.ways, c.num_cores,
                           Topology(c.topology).value, str(c.channel_affinity),
-                          str(c.placement)))
+                          str(c.placement), _tr_key(c.translation)))
         sl.indices.append(i)
     return list(slices.values())
 
@@ -423,11 +484,14 @@ def _build_grid(base_hw: HardwareConfig, combos: Sequence[_Combo], etraces):
         base_hw.offchip.banks_per_channel == 1
         and all(et.spec.num_tables == 1 for et in etraces)
     )
-    sat_memo: Dict[int, bool] = {}   # capacity -> footprint saturation
-    for pol, cap, w, nc, topo, aff, plc in combos:
+    sat_memo: Dict[int, bool] = {}      # capacity -> footprint saturation
+    tr_sat_memo: Dict[tuple, bool] = {}  # translation key -> TLB saturation
+    line = base_hw.onchip.line_bytes
+    for pol, cap, w, nc, topo, aff, plc, trk in combos:
         hw = base_hw.with_policy(
             OnChipPolicy(pol), capacity_bytes=cap, ways=w
-        ).with_cluster(nc, topo).with_placement(aff, plc)
+        ).with_cluster(nc, topo).with_placement(aff, plc).with_translation(
+            _tr_from_key(trk))
         ms = memory_system_for(hw)
         class_key = (pol, nc, topo, hw.lookup_sharding.value,
                      hw.onchip.policy_mix)
@@ -466,8 +530,28 @@ def _build_grid(base_hw: HardwareConfig, combos: Sequence[_Combo], etraces):
         key_plc = plc
         if key_plc == "table_rank" and plc_collapses:
             key_plc = "interleave"
-        key = class_key + (key_aff, key_plc)
-        grid.append((pol, cap, w, nc, topo, aff, plc, hw, key))
+        # Canonicalize the translation axis: a TLB whose every set covers
+        # the slice's page footprint never takes a non-compulsory miss, so
+        # its charge collapses to first-touch-only walks — identical for
+        # every saturated geometry sharing (page_bytes,
+        # miss_latency_cycles). Checked against the FULL address trace's
+        # unique pages, so it holds for any classified miss subsequence
+        # (i.e. every policy/capacity of the slice) — see ``memory.tlb.
+        # translation_saturated`` (collapse-is-bitwise test-enforced).
+        key_tr = trk
+        if trk:
+            tcfg = hw.translation
+            sat = tr_sat_memo.get(trk)
+            if sat is None:
+                sat = tr_sat_memo[trk] = all(
+                    translation_saturated(
+                        et.unique_pages(line, tcfg.page_bytes), tcfg)
+                    for et in etraces)
+            if sat:
+                key_tr = (_TLB_SATURATED, tcfg.page_bytes,
+                          tcfg.miss_latency_cycles)
+        key = class_key + (key_aff, key_plc, key_tr)
+        grid.append((pol, cap, w, nc, topo, aff, plc, trk, hw, key))
         if key not in pending:
             pending[key] = (ms, class_key)
     return grid, pending
@@ -587,6 +671,7 @@ def sweep(
     topologies: Optional[Sequence[Union[str, Topology]]] = None,
     channel_affinities: Optional[Sequence[str]] = None,
     placements: Optional[Sequence[str]] = None,
+    translations: Optional[Sequence[Optional[TranslationConfig]]] = None,
     batch_scans: bool = True,
     batch_dram: bool = True,
     configs: Optional[Sequence[SweepConfig]] = None,
@@ -598,13 +683,21 @@ def sweep(
     scenarios: Optional[Sequence] = None,
 ) -> SweepResult:
     """Evaluate the (workload x zipf x policy x capacity x ways x num_cores
-    x topology x channel_affinity x placement) grid.
+    x topology x channel_affinity x placement x translation) grid.
 
     Every grid point's ``SimResult`` is bit-exact against
     ``simulate(workload, base_hw.with_policy(policy, capacity_bytes=...,
     ways=...).with_cluster(num_cores, topology).with_placement(affinity,
-    placement), seed=seed, zipf_s=z)`` — the sweep only removes redundant
-    work, never changes the model.
+    placement).with_translation(translation), seed=seed, zipf_s=z)`` — the
+    sweep only removes redundant work, never changes the model.
+
+    ``translations`` sweeps the address-translation layer
+    (``TranslationConfig`` entries; ``None`` = translation off, the exact
+    pre-translation engine). Translation is a pure charge on the classified
+    miss stream, so translation siblings share one classification, and two
+    memo-key collapses apply: ``None`` keys exactly like the base grid, and
+    any TLB whose reach saturates the slice's page footprint collapses to a
+    first-touch-only marker (bitwise — test-enforced).
 
     ``configs`` replaces the axis grid with an explicit ``SweepConfig`` list
     (entry order preserved; the search driver's evaluation path).
@@ -655,7 +748,8 @@ def sweep(
                 "scenarios= generates request-driven traces; index_trace= "
                 "does not apply to serving sweeps")
         axes = _resolve_axes(base_hw, policies, capacities, ways, num_cores,
-                             topologies, channel_affinities, placements)
+                             topologies, channel_affinities, placements,
+                             translations)
         return _sweep_serving(
             wls, base_hw, axes, tuple(scenarios),
             devices=devices, checkpoint=checkpoint,
@@ -668,7 +762,8 @@ def sweep(
         num_entries = len(configs)
     else:
         axes = _resolve_axes(base_hw, policies, capacities, ways, num_cores,
-                             topologies, channel_affinities, placements)
+                             topologies, channel_affinities, placements,
+                             translations)
         zipfs = _as_tuple(zipf_s, (0.8,))
         slices = _slices_from_axes(wls, zipfs, axes)
         num_entries = sum(len(s.combos) for s in slices)
@@ -772,7 +867,7 @@ def sweep(
                 if ckpt is not None:
                     ckpt.record(sl.slice_id, results)
 
-            for idx, (pol, cap, w, nc, topo, aff, plc, hw, key) in zip(
+            for idx, (pol, cap, w, nc, topo, aff, plc, trk, hw, key) in zip(
                 sl.indices, grid
             ):
                 res = assemble_result(
@@ -789,6 +884,7 @@ def sweep(
                         topology=topo,
                         channel_affinity=aff,
                         placement=plc,
+                        translation=_tr_from_key(trk),
                     ),
                     result=res,
                     memo_key=sl.slice_id + key,
@@ -937,10 +1033,11 @@ def _sweep_serving(
             grid = []                         # (combo, hw, ms, scenario, key)
             pending: Dict[tuple, tuple] = {}  # key -> (payload, group_key)
             for combo in combos:
-                pol, cap, w, nc, topo, aff, plc = combo
+                pol, cap, w, nc, topo, aff, plc, trk = combo
                 hw = base_hw.with_policy(
                     OnChipPolicy(pol), capacity_bytes=cap, ways=w
-                ).with_cluster(nc, topo).with_placement(aff, plc)
+                ).with_cluster(nc, topo).with_placement(aff, plc) \
+                 .with_translation(_tr_from_key(trk))
                 ms = memory_system_for(hw)
                 for sc in scenarios:
                     key = combo + (sc.key,)
@@ -988,7 +1085,7 @@ def _sweep_serving(
             # each key's recorded stats — identical whether the stats were
             # just evaluated or restored from the journal.
             for combo, hw, ms, sc, key in grid:
-                pol, cap, w, nc, topo, aff, plc = combo
+                pol, cap, w, nc, topo, aff, plc, trk = combo
                 res = simulate_serving(
                     ms, spec, sc, requests=streams[sc.traffic.key],
                     oracle=ReplayOracle(stats_memo[key][0]),
@@ -998,7 +1095,8 @@ def _sweep_serving(
                         policy=pol, capacity_bytes=cap, ways=w,
                         workload=wl.name, zipf_s=float(sc.traffic.zipf_s),
                         num_cores=nc, topology=topo, channel_affinity=aff,
-                        placement=plc, scenario=sc.name,
+                        placement=plc, translation=_tr_from_key(trk),
+                        scenario=sc.name,
                     ),
                     result=res,
                     memo_key=slice_id + key,

@@ -17,6 +17,19 @@ system saturates:
   exponential backoff with seeded jitter (deterministic in
   ``(seed, rid, attempt)`` — the same idiom as ``core.faults.backoff_
   seconds``), so retry storms and metastable overload are *reproducible*.
+
+**Clock monotonicity guarantee.** The simulated clock ``now`` never moves
+backwards (regression-tested under deadline+retry storms): every event the
+loop schedules — arrivals, batch starts, and in particular *retries of
+timed-out requests* — is stamped at or after the clock at the instant it is
+scheduled. A timed-out attempt's backoff still counts from its deadline
+(the instant the client gave up), but the resubmission is clamped to the
+pruning clock: ``max(deadline + backoff, clock)``. Without the clamp a
+short backoff could land the retry *before* the batch-formation instant
+that pruned it, rewinding ``now`` when the heap entry popped and corrupting
+every subsequent ``enqueued``/admission decision. Pass ``event_log=`` to
+``simulate_serving`` to capture the clock trace the regression test
+asserts over.
 * **Graceful degradation** — under queue pressure a batch is served
   degraded: ``hot_rows_only`` truncates pooling to the hottest rows;
   ``cache_bypass`` routes cold tables around the on-chip cache (no
@@ -244,6 +257,7 @@ def simulate_serving(
     scenario: ServingScenario,
     requests: Optional[Sequence[Request]] = None,
     oracle=None,
+    event_log: Optional[List[int]] = None,
 ) -> ServingResult:
     """Run one serving scenario against one memory system; returns the
     ``ServingResult`` (deterministic: same arguments => bitwise-identical
@@ -253,6 +267,9 @@ def simulate_serving(
     stream per scenario and shares it across hardware configs).  ``oracle``
     overrides the service-time source (``ReplayOracle`` for checkpoint
     reconstruction); default is live simulation through ``ms``.
+    ``event_log``, when given, receives every value the simulated clock
+    takes, in order — the monotonicity regression surface (see the module
+    docstring's clock guarantee).
     """
     policy = scenario.policy
     traffic = scenario.traffic
@@ -313,8 +330,18 @@ def simulate_serving(
     first_arrival: Dict[int, int] = {r.rid: r.arrival for r in requests}
     last_finish = 0
 
-    def fail_attempt(item_req: Request, attempt: int, at: int, kind: str):
-        """Shed/timeout bookkeeping + client retry scheduling."""
+    def fail_attempt(
+        item_req: Request, attempt: int, at: int, clock: int, kind: str
+    ):
+        """Shed/timeout bookkeeping + client retry scheduling.
+
+        ``at`` is when the attempt failed (the deadline for timeouts, the
+        arrival for sheds); backoff counts from there. ``clock`` is the
+        simulated time at which the failure is being processed — a timeout
+        is only *observed* at the prune instant, which can be well past the
+        deadline, so the resubmission is clamped to ``clock`` to keep the
+        event heap (and thus ``now``) monotone.
+        """
         nonlocal shed, timed_out, retries, abandoned, seq
         if kind == "shed":
             shed += 1
@@ -323,7 +350,9 @@ def simulate_serving(
         if attempt < policy.max_retries:
             retries += 1
             back = _retry_backoff(policy, item_req.rid, attempt + 1)
-            heapq.heappush(heap, (at + back, seq, item_req, attempt + 1))
+            heapq.heappush(
+                heap, (max(at + back, clock), seq, item_req, attempt + 1)
+            )
             seq += 1
         else:
             abandoned += 1
@@ -334,7 +363,7 @@ def simulate_serving(
         kept: List[_QItem] = []
         for it in queue:
             if it.deadline is not None and it.deadline <= at:
-                fail_attempt(it.req, it.attempt, it.deadline, "timeout")
+                fail_attempt(it.req, it.attempt, it.deadline, at, "timeout")
             else:
                 kept.append(it)
         queue[:] = kept
@@ -376,13 +405,17 @@ def simulate_serving(
             last_finish = max(last_finish, finish)
             server_free = finish
             now = start
+            if event_log is not None:
+                event_log.append(now)
         else:
             t_a, _, req, attempt = heapq.heappop(heap)
             now = t_a
+            if event_log is not None:
+                event_log.append(now)
             prune_expired(now)
             if (policy.admission_watermark is not None
                     and len(queue) >= policy.admission_watermark):
-                fail_attempt(req, attempt, now, "shed")
+                fail_attempt(req, attempt, now, now, "shed")
                 continue
             ddl = (now + policy.deadline_cycles
                    if policy.deadline_cycles is not None else None)

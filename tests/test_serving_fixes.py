@@ -1,0 +1,150 @@
+"""Serving-path correctness fixes (the PR's satellite bugfixes).
+
+* scheduler clock monotonicity: a retry scheduled from an expired deadline
+  can never rewind the event timeline (``max(deadline + backoff, now)``);
+* falsy-zero traffic knobs: an explicit ``0`` for ``tables_per_request`` /
+  ``lookups_per_table`` is a validation error, not "unset";
+* drifting-Zipf exponent quantization: the per-exponent CDF cache stays
+  bounded by the epoch count, and ``zipf_drift=0`` produces exponents
+  bitwise equal to the drift-free config;
+* ``ServingResult.summary()`` on a zero-makespan result reports NaN QPS
+  instead of raising.
+"""
+import dataclasses
+
+import numpy as np
+import pytest
+
+from repro.core import TrafficConfig
+from repro.core.requests import drift_exponents, generate_requests
+from repro.core import requests as requests_mod
+from repro.core.memory.system import MultiCoreMemorySystem
+from repro.core.results import ServingResult
+from repro.core.workload import EmbeddingOpSpec
+from repro.serving import RobustnessPolicy, ServingScenario, simulate_serving
+from repro.core import tpuv6e
+
+SPEC = EmbeddingOpSpec(
+    num_tables=4, rows_per_table=1000, dim=32, lookups_per_sample=4,
+    dtype_bytes=4,
+)
+
+# Arrivals far above capacity + tight deadline + retry budget: every failed
+# attempt reschedules from an already-expired deadline — the exact shape
+# that used to rewind the clock.
+STORM = ServingScenario(
+    name="ddl_storm",
+    traffic=TrafficConfig(pattern="bursty", mean_gap_cycles=10.0,
+                          num_requests=120, seed=23, burst_len=16),
+    policy=RobustnessPolicy(deadline_cycles=300, max_retries=3,
+                            retry_backoff_cycles=50.0),
+    batch_slots=4,
+)
+
+
+def _serve(scenario, **kw):
+    ms = MultiCoreMemorySystem.from_hardware(tpuv6e())
+    return simulate_serving(ms, SPEC, scenario, **kw)
+
+
+class TestRetryMonotonicity:
+    def test_event_timeline_never_rewinds(self):
+        log = []
+        res = _serve(STORM, event_log=log)
+        # the regression shape actually fired: timeouts AND retries occurred
+        assert res.timed_out > 0 and res.retries > 0
+        assert len(log) > 0
+        diffs = np.diff(np.asarray(log, dtype=np.int64))
+        assert (diffs >= 0).all(), f"clock rewound at {np.argmin(diffs)}"
+
+    def test_storm_still_bitwise_reproducible(self):
+        a, b = _serve(STORM), _serve(STORM)
+        assert not a.diff(b)
+
+    def test_conservation_under_storm(self):
+        res = _serve(STORM)
+        # attempt-level: every failed attempt either retries or abandons
+        assert res.shed + res.timed_out == res.retries + res.abandoned
+        # request-level: completions + final abandonments cover the offer
+        assert res.completed + res.abandoned == res.offered
+        assert 0 < res.completed < res.offered
+
+
+class TestFalsyZeroValidation:
+    def test_zero_tables_per_request_raises(self):
+        cfg = TrafficConfig(num_requests=4, tables_per_request=0)
+        with pytest.raises(ValueError, match="tables_per_request"):
+            generate_requests(SPEC, cfg)
+
+    def test_zero_lookups_per_table_raises(self):
+        cfg = TrafficConfig(num_requests=4, lookups_per_table=0)
+        with pytest.raises(ValueError, match="lookups_per_table"):
+            generate_requests(SPEC, cfg)
+
+    def test_none_still_means_spec_defaults(self):
+        cfg = TrafficConfig(num_requests=4)
+        reqs = generate_requests(SPEC, cfg)
+        assert reqs[0].rows.shape == (SPEC.num_tables,
+                                      SPEC.lookups_per_sample)
+
+
+class TestDriftQuantization:
+    def test_zero_drift_is_exact_base_exponent(self):
+        cfg = TrafficConfig(num_requests=50, zipf_s=0.9, zipf_drift=0.0,
+                            drift_period=7)
+        assert np.array_equal(drift_exponents(cfg),
+                              np.full(50, 0.9))
+
+    def test_distinct_exponents_bounded_by_epochs(self):
+        cfg = TrafficConfig(num_requests=100, zipf_s=0.8, zipf_drift=0.5,
+                            drift_period=5)
+        exps = drift_exponents(cfg)
+        assert len(np.unique(exps)) <= 20
+        assert (np.diff(exps) >= 0).all()          # positive drift sharpens
+        # constant within each epoch, stepping at epoch boundaries
+        assert (exps[:5] == exps[0]).all() and exps[5] != exps[0]
+
+    def test_no_period_uses_fixed_grid(self):
+        cfg = TrafficConfig(num_requests=10_000, zipf_s=0.8, zipf_drift=0.5,
+                            drift_period=0)
+        assert len(np.unique(drift_exponents(cfg))) <= requests_mod._DRIFT_GRID
+
+    def test_cdf_cache_stays_bounded(self, monkeypatch):
+        """One zipf_probs cumsum per distinct exponent — not per request."""
+        calls = []
+        real = requests_mod.zipf_probs
+        monkeypatch.setattr(requests_mod, "zipf_probs",
+                            lambda n, s: calls.append(s) or real(n, s))
+        cfg = TrafficConfig(num_requests=96, zipf_s=0.8, zipf_drift=0.5,
+                            drift_period=8)
+        generate_requests(SPEC, cfg)
+        assert len(calls) == len(set(calls)) <= 12
+
+    def test_drifting_stream_deterministic(self):
+        cfg = TrafficConfig(num_requests=40, zipf_drift=0.4, drift_period=8)
+        r1, r2 = generate_requests(SPEC, cfg), generate_requests(SPEC, cfg)
+        for a, b in zip(r1, r2):
+            assert np.array_equal(a.rows, b.rows)
+
+
+class TestZeroMakespanGuard:
+    def _result(self, makespan):
+        return ServingResult(
+            scenario="s", hardware="h", policy="p", clock_ghz=1.0,
+            offered=0, completed=0, shed=0, timed_out=0, retries=0,
+            abandoned=0, degraded_batches=0, dropped_cold_rows=0,
+            bypassed_lookups=0, num_batches=0, makespan_cycles=makespan,
+            goodput=0.0,
+            latency_cycles=np.zeros(0, dtype=np.int64),
+            queue_cycles=np.zeros(0, dtype=np.int64),
+            service_cycles=np.zeros(0, dtype=np.int64),
+        )
+
+    def test_summary_does_not_raise(self):
+        s = self._result(0).summary()
+        assert np.isnan(s["sustained_qps"])
+        assert np.isnan(s["sustained_qps_per_mcycle"])
+
+    def test_nonzero_makespan_unaffected(self):
+        r = dataclasses.replace(self._result(1_000_000), completed=10)
+        assert r.sustained_qps_per_mcycle == pytest.approx(10.0)

@@ -1,0 +1,396 @@
+"""Address-translation layer (TLB hierarchy + page walks).
+
+Covers the tentpole guarantees:
+
+* the analytic TLB classifier is bitwise identical to the sequential golden
+  reference (LRU via stack distances, FIFO via the compressed per-set
+  engine, numpy and jnp engines alike);
+* ``translation=None`` is the EXACT pre-translation engine — bitwise across
+  cache backends, policies, placements, topologies, and serving;
+* a translated config charges walk cycles per the model
+  (``cycles = max(onchip, dram + translation, vector)``) and surfaces the
+  counters through ``SimResult.summary()`` and the energy estimator;
+* the ``translations=`` sweep axis is bitwise vs independent single-config
+  simulation, collapses ``None`` and saturated-TLB keys, and composes with
+  sharded / checkpointed / fault-plan / serving execution unchanged.
+"""
+import dataclasses
+
+import numpy as np
+import pytest
+
+from differential import assert_bitwise_equal_results
+from repro.core import (
+    FaultEvent,
+    FaultPlan,
+    FaultTelemetry,
+    OnChipPolicy,
+    TrafficConfig,
+    TranslationConfig,
+    Workload,
+    dlrm_rmc2_small,
+    grid_configs,
+    simulate,
+    sweep,
+    tpuv6e,
+)
+from repro.core.energy import EnergyTable
+from repro.core.memory.system import MultiCoreMemorySystem, memory_system_for
+from repro.core.memory.tlb import (
+    charge_translation,
+    classify_tlb,
+    golden_tlb_hits,
+    tlb_pages,
+    translation_saturated,
+)
+from repro.core.workload import EmbeddingOpSpec
+from repro.serving import ServingScenario, simulate_serving
+
+TLB16 = TranslationConfig(entries=16, ways=4, page_bytes=4096)
+TLB16_L2 = dataclasses.replace(TLB16, l2_entries=256, l2_ways=8,
+                               l2_latency_cycles=8)
+# Fully-associative with megabyte pages: reach >> any test footprint.
+TLB_SAT_A = TranslationConfig(entries=1 << 16, ways=1 << 16,
+                              page_bytes=1 << 20)
+TLB_SAT_B = TranslationConfig(entries=1 << 17, ways=1 << 17,
+                              page_bytes=1 << 20)
+
+
+@pytest.fixture(scope="module")
+def small_wl():
+    return dlrm_rmc2_small(num_tables=2, rows_per_table=2000, dim=128,
+                           lookups=4, batch_size=8, num_batches=2)
+
+
+def _page_streams():
+    rng = np.random.default_rng(7)
+    return [
+        rng.integers(0, 40, size=300),                  # heavy reuse
+        rng.integers(0, 5000, size=400),                # sparse
+        np.arange(64).repeat(3),                        # sequential
+        np.zeros(10, dtype=np.int64),                   # degenerate
+        rng.zipf(1.3, size=500) % 900,                  # skewed
+    ]
+
+
+# --------------------------------------------------------------------------
+# Analytic classifier vs sequential golden
+# --------------------------------------------------------------------------
+
+class TestClassifier:
+    @pytest.mark.parametrize("replacement", ["lru", "fifo"])
+    @pytest.mark.parametrize("num_sets,ways", [(1, 4), (4, 4), (16, 2),
+                                               (8, 1), (1, 64)])
+    def test_analytic_matches_golden(self, replacement, num_sets, ways):
+        for pages in _page_streams():
+            want = golden_tlb_hits(pages, num_sets, ways, replacement)
+            got = classify_tlb(pages, num_sets, ways, replacement)
+            assert np.array_equal(got, want), (replacement, num_sets, ways)
+
+    def test_engines_agree(self):
+        for pages in _page_streams():
+            a = classify_tlb(pages, 4, 4, "lru", engine="np")
+            b = classify_tlb(pages, 4, 4, "lru", engine="jnp")
+            assert np.array_equal(a, b)
+
+    def test_empty_stream(self):
+        assert classify_tlb(np.zeros(0, dtype=np.int64), 4, 4).size == 0
+
+    def test_unknown_replacement_rejected(self):
+        with pytest.raises(ValueError, match="replacement"):
+            classify_tlb(np.arange(4), 2, 2, "rrip")
+
+    def test_tlb_pages_mapping(self):
+        lines = np.array([0, 1, 31, 32, 63, 64])
+        # 4096B page / 128B line = 32 lines per page
+        assert np.array_equal(tlb_pages(lines, 128, 4096),
+                              [0, 0, 0, 1, 1, 2])
+        with pytest.raises(ValueError, match="span"):
+            tlb_pages(lines, 256, 128)
+
+    def test_charge_accounting_identity(self):
+        """hits + misses = accesses per batch; without an L2, walks = misses
+        and cycles = walks * walk_latency."""
+        rng = np.random.default_rng(3)
+        lines = rng.integers(0, 4000, size=500)
+        batch = np.sort(rng.integers(0, 3, size=500))
+        ch = charge_translation(lines, batch, 3, 128, TLB16)
+        assert np.array_equal(ch.hits + ch.misses,
+                              np.bincount(batch, minlength=3))
+        assert np.array_equal(ch.walks, ch.misses)
+        assert np.array_equal(
+            ch.cycles, ch.walks * float(TLB16.walk_latency_cycles))
+
+    def test_l2_filters_walks(self):
+        rng = np.random.default_rng(4)
+        lines = rng.integers(0, 4000, size=800)
+        batch = np.sort(rng.integers(0, 2, size=800))
+        l1_only = charge_translation(lines, batch, 2, 128, TLB16)
+        with_l2 = charge_translation(lines, batch, 2, 128, TLB16_L2)
+        # same L1 -> same hit/miss split; the L2 can only remove walks
+        assert np.array_equal(l1_only.misses, with_l2.misses)
+        assert int(with_l2.walks.sum()) <= int(l1_only.walks.sum())
+
+    def test_saturation_condition(self):
+        cfg = TranslationConfig(entries=8, ways=2, page_bytes=4096)
+        # pages 0..15 over 4 sets -> 4 distinct per set > 2 ways
+        assert not translation_saturated(np.arange(16), cfg)
+        # pages {0,1,2,3} -> 1 distinct per set
+        assert translation_saturated(np.arange(4), cfg)
+        assert translation_saturated(np.zeros(0, dtype=np.int64), cfg)
+
+
+# --------------------------------------------------------------------------
+# Config surface
+# --------------------------------------------------------------------------
+
+class TestConfig:
+    def test_validation(self):
+        with pytest.raises(ValueError, match="entries"):
+            TranslationConfig(entries=0)
+        with pytest.raises(ValueError, match="multiple"):
+            TranslationConfig(entries=6, ways=4)
+        with pytest.raises(ValueError, match="power of two"):
+            TranslationConfig(page_bytes=3000)
+        with pytest.raises(ValueError, match="replacement"):
+            TranslationConfig(replacement="rrip")
+        with pytest.raises(ValueError, match="l2"):
+            TranslationConfig(l2_entries=10, l2_ways=4)
+
+    def test_key_roundtrip(self):
+        for cfg in (TLB16, TLB16_L2, TLB_SAT_A):
+            assert TranslationConfig.from_key(cfg.key) == cfg
+
+    def test_with_translation(self):
+        hw = tpuv6e()
+        assert hw.translation is None
+        t = hw.with_translation(entries=32, ways=8)
+        assert t.translation == TranslationConfig(entries=32, ways=8)
+        assert t.with_translation(None).translation is None
+        assert hw.with_translation(TLB16).translation is TLB16
+        with pytest.raises(ValueError, match="either"):
+            hw.with_translation(TLB16, entries=32)
+        with pytest.raises(ValueError, match="unknown"):
+            hw.with_translation(entires=32)
+
+    def test_reach_and_miss_latency(self):
+        assert TLB16.reach_bytes == 16 * 4096
+        assert TLB16.miss_latency_cycles == TLB16.walk_latency_cycles
+        assert TLB16_L2.miss_latency_cycles == (
+            TLB16_L2.walk_latency_cycles + TLB16_L2.l2_latency_cycles)
+
+
+# --------------------------------------------------------------------------
+# translation=None is the exact identity (the bugfix contract)
+# --------------------------------------------------------------------------
+
+AXES_MATRIX = [
+    dict(),                                             # single-core default
+    dict(cache_backend="scan"),
+    dict(num_cores=4, topology="shared"),
+    dict(num_cores=2, topology="private",
+         channel_affinity="per_core", placement="table_rank"),
+    dict(num_cores=2, topology="private", placement="hot_replicate"),
+]
+
+
+def _hw_for(axes):
+    hw = tpuv6e()
+    if "cache_backend" in axes:
+        hw = dataclasses.replace(hw, cache_backend=axes["cache_backend"])
+    if "num_cores" in axes:
+        hw = hw.with_cluster(axes["num_cores"], axes["topology"])
+    if "channel_affinity" in axes or "placement" in axes:
+        hw = hw.with_placement(axes.get("channel_affinity", "symmetric"),
+                               axes.get("placement", "interleave"))
+    return hw
+
+
+class TestIdentity:
+    @pytest.mark.parametrize("axes", AXES_MATRIX)
+    def test_none_is_bitwise_identity(self, small_wl, axes):
+        hw = _hw_for(axes)
+        base = simulate(small_wl, hw, seed=0)
+        off = simulate(small_wl, hw.with_translation(None), seed=0)
+        assert_bitwise_equal_results(base, off, f"translation off {axes}")
+        assert base.summary()["tlb_walks"] == 0
+        assert base.summary()["translation_cycles"] == 0.0
+
+    def test_none_is_identity_in_serving(self):
+        spec = EmbeddingOpSpec(num_tables=4, rows_per_table=1000, dim=32,
+                               lookups_per_sample=4, dtype_bytes=4)
+        sc = ServingScenario(
+            name="steady",
+            traffic=TrafficConfig(pattern="poisson", mean_gap_cycles=700.0,
+                                  num_requests=32, seed=11),
+            batch_slots=8)
+        base = simulate_serving(
+            MultiCoreMemorySystem.from_hardware(tpuv6e()), spec, sc)
+        off = simulate_serving(
+            MultiCoreMemorySystem.from_hardware(
+                tpuv6e().with_translation(None)), spec, sc)
+        assert_bitwise_equal_results(base, off, "serving translation off")
+
+
+# --------------------------------------------------------------------------
+# Translated simulation semantics
+# --------------------------------------------------------------------------
+
+class TestTranslatedSim:
+    def test_charges_extend_critical_path(self, small_wl):
+        hw = tpuv6e()
+        base = simulate(small_wl, hw, seed=0)
+        tr = simulate(small_wl, hw.with_translation(TLB16), seed=0)
+        s = tr.summary()
+        assert s["tlb_walks"] > 0
+        assert s["translation_cycles"] > 0.0
+        assert tr.total_cycles >= base.total_cycles
+        assert s["tlb_hits"] + s["tlb_misses"] == s["cache_misses"]
+        # translation only charges cycles — the memory traffic is untouched
+        assert s["cache_hits"] == base.summary()["cache_hits"]
+        assert s["offchip_reads"] == base.summary()["offchip_reads"]
+
+    def test_per_batch_max_composition(self, small_wl):
+        hw = tpuv6e().with_translation(TLB16)
+        ms = memory_system_for(hw)
+        from repro.core.engine import build_embedding_traces
+        for et in build_embedding_traces(small_wl, seed=0):
+            for s in ms.simulate_embedding(et):
+                assert s.cycles == max(s.onchip_cycles,
+                                       s.dram_cycles + s.translation_cycles,
+                                       s.vector_cycles)
+
+    def test_multicore_central_mmu_matches_single(self, small_wl):
+        """One MMU at the controller: the merged multi-core miss stream
+        translates exactly like the single-core stream it equals."""
+        hw1 = tpuv6e().with_translation(TLB16)
+        hw4 = hw1.with_cluster(4, "shared")
+        r1 = simulate(small_wl, hw1, seed=0)
+        r4 = simulate(small_wl, hw4, seed=0)
+        assert r1.summary()["tlb_walks"] > 0
+        assert r4.summary()["tlb_walks"] == r1.summary()["tlb_walks"]
+
+    def test_energy_bills_walks(self, small_wl):
+        table = EnergyTable(tlb_walk_pj=500.0)
+        hw = tpuv6e().with_translation(TLB16)
+        base = simulate(small_wl, hw, seed=0, energy_table=EnergyTable())
+        more = simulate(small_wl, hw, seed=0, energy_table=table)
+        walks = base.summary()["tlb_walks"]
+        assert more.energy_pj - base.energy_pj == pytest.approx(
+            walks * (500.0 - EnergyTable().tlb_walk_pj))
+
+    def test_bigger_tlb_fewer_walks(self, small_wl):
+        hw = tpuv6e()
+        walks = []
+        for entries in (16, 64, 256):
+            cfg = TranslationConfig(entries=entries, ways=4)
+            walks.append(
+                simulate(small_wl, hw.with_translation(cfg),
+                         seed=0).summary()["tlb_walks"])
+        assert walks[0] >= walks[1] >= walks[2]
+
+
+# --------------------------------------------------------------------------
+# translations= sweep axis
+# --------------------------------------------------------------------------
+
+TRANSLATIONS = (None, TLB16, TLB16_L2, TLB_SAT_A, TLB_SAT_B)
+TR_GRID = dict(policies=("spm", "lru"), capacities=(1 << 17,), ways=(8,),
+               zipf_s=0.9, seed=0, translations=TRANSLATIONS)
+
+
+@pytest.fixture(scope="module")
+def tr_sweep(small_wl):
+    return sweep(small_wl, tpuv6e(), **TR_GRID)
+
+
+class TestSweepAxis:
+    def test_bitwise_vs_independent_simulate(self, tr_sweep, small_wl):
+        assert tr_sweep.num_configs == 2 * len(TRANSLATIONS)
+        for e in tr_sweep.entries:
+            c = e.config
+            hw = tpuv6e().with_policy(
+                OnChipPolicy(c.policy), capacity_bytes=c.capacity_bytes,
+                ways=c.ways).with_translation(c.translation)
+            ref = simulate(small_wl, hw, seed=0, zipf_s=c.zipf_s)
+            assert not e.result.diff(ref), (c.label, e.result.diff(ref))
+
+    def test_memo_key_collapses(self, tr_sweep):
+        """None shares the base key; both saturated TLBs share one
+        first-touch key -> 4 distinct translation outcomes per policy."""
+        assert tr_sweep.distinct_memo_keys == 2 * 4
+        by = {(e.config.policy, e.config.translation): e.result
+              for e in tr_sweep.entries}
+        for pol in ("spm", "lru"):
+            assert_bitwise_equal_results(
+                by[(pol, TLB_SAT_A)], by[(pol, TLB_SAT_B)],
+                f"saturated collapse {pol}")
+            assert by[(pol, TLB_SAT_A)].summary()["tlb_misses"] == \
+                by[(pol, TLB_SAT_A)].summary()["tlb_walks"]
+
+    def test_grid_configs_matches_axes(self, tr_sweep, small_wl):
+        cfgs = grid_configs(small_wl, tpuv6e(), policies=("spm", "lru"),
+                            capacities=(1 << 17,), ways=(8,), zipf_s=0.9,
+                            translations=TRANSLATIONS)
+        assert [e.config for e in tr_sweep.entries] == cfgs
+        got = sweep(small_wl, tpuv6e(), configs=cfgs, seed=0)
+        assert_bitwise_equal_results(tr_sweep, got, "configs= path")
+
+    def test_sharded_bitwise(self, tr_sweep, small_wl):
+        got = sweep(small_wl, tpuv6e(), devices=2, **TR_GRID)
+        assert got.sharded
+        assert_bitwise_equal_results(tr_sweep, got, "sharded translations")
+
+    def test_checkpoint_resume_bitwise(self, tr_sweep, small_wl, tmp_path):
+        p = str(tmp_path / "tr.ckpt")
+        first = sweep(small_wl, tpuv6e(), checkpoint=p, **TR_GRID)
+        assert_bitwise_equal_results(tr_sweep, first, "ckpt first")
+        resumed = sweep(small_wl, tpuv6e(), checkpoint=p, **TR_GRID)
+        assert resumed.resumed_keys == resumed.distinct_memo_keys
+        assert_bitwise_equal_results(tr_sweep, resumed, "ckpt resume")
+
+    def test_fault_plan_bitwise(self, tr_sweep, small_wl):
+        tele = FaultTelemetry()
+        plan = FaultPlan(events=(FaultEvent("crash", shard=1, round=0),))
+        got = sweep(small_wl, tpuv6e(), devices=2, fault_plan=plan,
+                    fault_telemetry=tele, **TR_GRID)
+        assert_bitwise_equal_results(tr_sweep, got, "crash failover")
+        assert tele.worker_crashes == 1 and tele.failovers == 1
+
+    def test_speedup_pairs_within_translation(self, tr_sweep):
+        rows = tr_sweep.speedup_over("spm")
+        assert len(rows) == tr_sweep.num_configs
+        for r in rows:
+            if r["policy"] == "spm":
+                assert r["speedup_vs_spm"] == pytest.approx(1.0)
+
+    def test_rows_stay_flat(self, tr_sweep):
+        for r in tr_sweep.rows():
+            assert isinstance(r["translation"], str)
+
+    def test_bad_axis_entry_rejected(self, small_wl):
+        with pytest.raises(TypeError, match="TranslationConfig"):
+            sweep(small_wl, tpuv6e(), policies=("spm",),
+                  translations=[(64, 4)])
+
+    def test_serving_sweep_carries_translation(self):
+        spec = EmbeddingOpSpec(num_tables=4, rows_per_table=1000, dim=32,
+                               lookups_per_sample=4, dtype_bytes=4)
+        wl = Workload(name="serve_tr", embedding_ops=(spec,))
+        sc = ServingScenario(
+            name="steady",
+            traffic=TrafficConfig(pattern="poisson", mean_gap_cycles=700.0,
+                                  num_requests=32, seed=11),
+            batch_slots=8)
+        res = sweep(wl, tpuv6e(), policies=("lru",), scenarios=[sc],
+                    translations=(None, TLB16))
+        assert res.num_configs == 2
+        for e in res.entries:
+            hw = tpuv6e().with_policy("lru").with_translation(
+                e.config.translation)
+            direct = simulate_serving(
+                MultiCoreMemorySystem.from_hardware(hw), spec, sc)
+            assert_bitwise_equal_results(e.result, direct,
+                                         f"serving {e.config.label}")
+        off, on = res.entries[0].result, res.entries[1].result
+        assert on.makespan_cycles >= off.makespan_cycles
